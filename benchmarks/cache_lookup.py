@@ -1,0 +1,49 @@
+"""Edge-cache lookup throughput (the paper's §2 hot spot).
+
+Times the batched similarity lookup over growing cache sizes.  On this CPU
+host the XLA ref path is timed (the Pallas kernel is the TPU target,
+validated in interpret mode by tests); derived column reports effective
+streamed GB/s and lookups/s.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.similarity import similarity_lookup
+
+CASES = [(64, 4096, 256), (64, 65536, 256), (256, 65536, 256),
+         (64, 262144, 256)]
+
+
+def run(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    rows = []
+    for (Q, C, D) in CASES:
+        q = rng.standard_normal((Q, D)).astype(np.float32)
+        q /= np.linalg.norm(q, axis=1, keepdims=True)
+        k = rng.standard_normal((C, D)).astype(np.float32)
+        k /= np.linalg.norm(k, axis=1, keepdims=True)
+        valid = np.ones((C,), bool)
+        qd, kd, vd = jnp.asarray(q), jnp.asarray(k), jnp.asarray(valid)
+        idx, score = similarity_lookup(qd, kd, vd, impl="ref")
+        jax.block_until_ready((idx, score))
+        n_iter = 10
+        t0 = time.perf_counter()
+        for _ in range(n_iter):
+            idx, score = similarity_lookup(qd, kd, vd, impl="ref")
+        jax.block_until_ready((idx, score))
+        dt = (time.perf_counter() - t0) / n_iter
+        bytes_streamed = C * D * 4
+        rows.append((f"cache_lookup_q{Q}_c{C}_d{D}", dt * 1e6,
+                     f"GBps={bytes_streamed/dt/1e9:.2f}"
+                     f";lookups_per_s={Q/dt:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

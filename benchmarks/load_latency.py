@@ -1,0 +1,61 @@
+"""Paper Fig 2b: load-latency reduction for rendering tasks.
+
+"To execute a rendering task, the renderer has to load the 3D model into
+memory first" — the analogue is loading a serialized asset (disk -> host ->
+device).  CoIC caches the *loaded* state on the edge, so repeat loads are
+free; the paper reports up to 75.86% reduction across model sizes.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import CoICConfig, CoICEngine
+from repro.core.coic import recognition_cloud_fn
+from repro.models import build_model
+
+SIZES_MB = [1, 4, 16, 64]
+
+
+def run(seed: int = 0, repeats: int = 8):
+    cfg = get_config("coic-paper")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    cloud = recognition_cloud_fn(model, params, num_classes=64)
+    eng = CoICEngine(model, params, CoICConfig(capacity=16, payload_dim=64),
+                     cloud_fn=cloud)
+
+    rng = np.random.default_rng(seed)
+    rows = []
+    with tempfile.TemporaryDirectory() as tmp:
+        for mb in SIZES_MB:
+            blob = rng.standard_normal(mb * (1 << 20) // 4).astype(np.float32)
+            path = os.path.join(tmp, f"model_{mb}mb.npy")
+            np.save(path, blob)
+            key = f"asset_{mb}"
+
+            def loader():
+                arr = np.load(path)                  # disk -> host ("load")
+                return jax.device_put(arr)           # host -> device memory
+
+            lat = []
+            for r in range(repeats):
+                _, ms, src = eng.load_asset(key, loader)
+                lat.append(ms)
+            t_miss = lat[0]
+            t_mean = float(np.mean(lat))
+            reduction = 100.0 * (1 - t_mean / t_miss) if t_miss > 0 else 0.0
+            rows.append((f"fig2b_load_{mb}mb", t_miss * 1e3,
+                         f"load_reduction={reduction:.2f}%"
+                         f";first_load_ms={t_miss:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,158 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh):
+  compute term    = HLO_FLOPs / peak_FLOP/s          [per chip]
+  memory term     = HLO_bytes / HBM_bw               [per chip]
+  collective term = collective_wire_bytes / ICI_bw   [per chip]
+
+FLOP/byte totals come from the layer-count extrapolation of the UNROLLED
+program (XLA cost_analysis does not multiply while-loop bodies); collective
+bytes come from the trip-count-resolved parse of the compiled scanned HLO
+(cross-checked against the extrapolation).  cost_analysis is per-partition
+(the SPMD module), so terms are per-chip directly.
+
+MODEL_FLOPS = 6 * N * tokens (dense) or 6 * N_active * tokens (MoE), split
+per chip, measures how much of compiled compute is "useful".
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+PEAK_FLOPS = 197e12         # bf16 / chip (TPU v5e)
+HBM_BW = 819e9              # bytes/s / chip
+ICI_BW = 50e9               # bytes/s / link (~per chip, 1 link dim active)
+
+ARTIFACT_DIR = Path("experiments/dryrun")
+
+
+def model_flops_per_chip(arch: str, shape: str, num_devices: int) -> float:
+    """6*N(active)*tokens for the cell, split per chip.  For decode cells,
+    tokens = global_batch (one token per sequence)."""
+    from repro.configs import SHAPES, get_config
+    from repro.models import build_model
+    from repro.utils.tree import tree_param_count
+
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    model = build_model(cfg)
+    shapes = model.init_shapes()
+    n_total = tree_param_count(shapes)
+
+    # active params: subtract inactive routed-expert weight for MoE
+    n_active = n_total
+    if cfg.moe is not None:
+        m = cfg.moe
+        expert_params = {k: v for k, v in shapes.items() if "/we_" in k}
+        n_expert = tree_param_count(expert_params)
+        n_active = n_total - n_expert * (1 - m.top_k / m.num_experts)
+    if shape.startswith("train"):
+        tokens = cell.global_batch * cell.seq_len
+        mult = 3  # fwd + bwd(2x)
+    elif shape.startswith("prefill"):
+        tokens = cell.global_batch * cell.seq_len
+        mult = 1
+    else:
+        tokens = cell.global_batch
+        mult = 1
+    return 2.0 * n_active * tokens * mult / num_devices
+
+
+def analyze(artifact: dict) -> dict:
+    ex = artifact.get("extrapolated") or {}
+    col = artifact.get("collectives") or {}
+    flops = ex.get("flops") or artifact["cost_analysis"]["flops"]
+    bytes_acc = ex.get("bytes_accessed") or artifact["cost_analysis"]["bytes_accessed"]
+    wire = ex.get("collective_wire_bytes",
+                  col.get("total_wire_bytes", 0.0))
+    # prefer the scanned trip-count parse when available (it reflects the
+    # deployable program); fall back to the extrapolation
+    wire_scanned = col.get("total_wire_bytes", 0.0)
+    wire_best = wire_scanned if wire_scanned > 0 else wire
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_collective = wire_best / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_chip(artifact["arch"], artifact["shape"],
+                              artifact["num_devices"])
+    bound = max(terms.values())
+    return {
+        "arch": artifact["arch"],
+        "shape": artifact["shape"],
+        "mesh": artifact["mesh"],
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "model_flops_per_chip": mf,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "roofline_fraction": (mf / PEAK_FLOPS) / bound if bound else 0.0,
+        "temp_bytes": artifact["memory_analysis"]["temp_size_in_bytes"],
+        "arg_bytes": artifact["memory_analysis"]["argument_size_in_bytes"],
+    }
+
+
+def load_all(mesh: str = "single"):
+    rows = []
+    for path in sorted(ARTIFACT_DIR.glob(f"*__{mesh}.json")):
+        a = json.loads(path.read_text())
+        if a.get("skipped"):
+            rows.append({"arch": a["arch"], "shape": a["shape"],
+                         "mesh": a["mesh"], "skipped": a["skipped"]})
+            continue
+        if not a.get("ok"):
+            rows.append({"arch": a["arch"], "shape": a["shape"],
+                         "mesh": a["mesh"], "error": a.get("error")})
+            continue
+        rows.append(analyze(a))
+    return rows
+
+
+def run(seed: int = 0):
+    """benchmarks.run interface: one row per runnable cell."""
+    rows = []
+    for r in load_all("single"):
+        if "skipped" in r or "error" in r:
+            continue
+        bound_s = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        rows.append((f"roofline_{r['arch']}_{r['shape']}",
+                     bound_s * 1e6,
+                     f"dominant={r['dominant']}"
+                     f";roofline_frac={r['roofline_fraction']:.3f}"
+                     f";useful={r['useful_ratio']:.2f}"))
+    return rows
+
+
+def markdown_table(mesh: str = "single") -> str:
+    rows = load_all(mesh)
+    out = ["| arch | shape | compute s | memory s | collective s | dominant | "
+           "MODEL/HLO | roofline frac | temp GB/chip |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"skipped | — | — | — |")
+            continue
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"ERROR | — | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{r['temp_bytes']/1e9:.1f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    import sys
+
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    print(markdown_table(mesh))

@@ -1,0 +1,41 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+#
+#   fig2a  recognition-latency reduction vs network conditions  (paper Fig 2a)
+#   fig2b  3D-model load-latency reduction vs size              (paper Fig 2b)
+#   cache_lookup  edge-lookup throughput                        (paper §2 hot spot)
+#   hit_rate      hit rate vs threshold tau                     (paper §2 threshold)
+#   roofline      per-(arch x shape) roofline terms             (scale requirement)
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (block_reuse, cache_lookup, hit_rate, load_latency,
+                            recognition_latency, roofline)
+
+    suites = [
+        ("fig2a", recognition_latency.run),
+        ("fig2b", load_latency.run),
+        ("cache_lookup", cache_lookup.run),
+        ("hit_rate", hit_rate.run),
+        ("block_reuse", block_reuse.run),
+        ("roofline", roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        try:
+            for row in fn():
+                print(",".join(str(x) for x in row), flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},NaN,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Reproduce the paper's Figure 2 tables on this host.
+
+    PYTHONPATH=src python examples/edge_cloud_sim.py
+"""
+from benchmarks import load_latency, recognition_latency
+
+print("=== Fig 2a: recognition latency reduction (CoIC vs origin) ===")
+for name, us, derived in recognition_latency.run():
+    print(f"  {name:36s} {derived}")
+
+print("\n=== Fig 2b: 3D-model load latency reduction ===")
+for name, us, derived in load_latency.run():
+    print(f"  {name:36s} {derived}")

@@ -1,0 +1,13 @@
+"""End-to-end serving driver (the paper's kind: serve a model behind the
+edge cache, batched requests, continuous batching).
+
+    PYTHONPATH=src python examples/serve_coic.py --requests 48
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += ["--requests", "48", "--pool", "12", "--max-new", "12"]
+    main()

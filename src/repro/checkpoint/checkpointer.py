@@ -1,0 +1,142 @@
+"""Checkpoint / restore with resharding — the fault-tolerance substrate.
+
+Design (orbax-free, works offline):
+
+* one directory per step: ``<root>/step_<N>/``; leaves as ``.npy`` files named
+  by the flattened pytree path; a ``manifest.json`` with the treedef, dtypes
+  and shapes.
+* **atomic**: writes land in ``step_<N>.tmp`` and are renamed only after the
+  manifest is fsynced — a crash mid-save never corrupts the latest good step.
+* **async**: ``save()`` snapshots device arrays to host (blocking only for
+  the device->host copy) and hands serialization to a background thread, so
+  the train loop overlaps checkpoint I/O with the next steps.
+* **elastic restore**: ``restore(step, like, shardings)`` rebuilds the pytree
+  on a *different* mesh than the one that saved it — arrays are loaded on
+  host and ``jax.device_put`` with the new shardings.  This is the mechanism
+  behind shrink/regrow in train/elastic.py.
+* retention: ``keep`` newest checkpoints are retained, older ones pruned.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
+        out.append((name.replace("/", "__SLASH__").replace(" ", "_"), leaf))
+    return out, treedef
+
+
+class Checkpointer:
+    def __init__(self, root: str, keep: int = 3, async_save: bool = True):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self.save_seconds: List[float] = []
+
+    # ------------------------------------------------------------------
+    def _step_dir(self, step: int) -> Path:
+        return self.root / f"step_{step:08d}"
+
+    def steps(self) -> List[int]:
+        out = []
+        for d in self.root.glob("step_*"):
+            if d.is_dir() and not d.name.endswith(".tmp"):
+                try:
+                    out.append(int(d.name.split("_")[1]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, block: bool = False) -> None:
+        """Snapshot to host, then serialize (async unless block=True)."""
+        named, _ = _flatten_with_names(tree)
+        host = [(n, np.asarray(jax.device_get(x))) for n, x in named]
+
+        def write():
+            t0 = time.perf_counter()
+            tmp = self.root / f"step_{step:08d}.tmp"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            manifest = {}
+            for name, arr in host:
+                np.save(tmp / f"{name}.npy", arr)
+                manifest[name] = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+            mpath = tmp / "manifest.json"
+            mpath.write_text(json.dumps({"step": step, "leaves": manifest}))
+            with open(mpath) as f:
+                os.fsync(f.fileno())
+            final = self._step_dir(step)
+            if final.exists():
+                shutil.rmtree(final)
+            tmp.rename(final)
+            self._prune()
+            self.save_seconds.append(time.perf_counter() - t0)
+
+        self.wait()
+        if self.async_save and not block:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def wait(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+        self._thread = None
+
+    def _prune(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def restore(self, step: int, like: Any,
+                shardings: Optional[Any] = None) -> Any:
+        """Rebuild the pytree saved at ``step``.
+
+        ``like`` provides the pytree structure (its leaf values are ignored).
+        ``shardings`` (same structure or a single sharding) places each leaf
+        on the *current* mesh — pass shardings built from the new mesh to
+        reshard an old checkpoint after an elastic resize.
+        """
+        d = self._step_dir(step)
+        manifest = json.loads((d / "manifest.json").read_text())
+        named, treedef = _flatten_with_names(like)
+        shard_list = None
+        if shardings is not None:
+            s_named, _ = _flatten_with_names(shardings)
+            shard_list = [s for _, s in s_named]
+        leaves = []
+        for i, (name, ref) in enumerate(named):
+            want = manifest["leaves"].get(name)
+            if want is None:
+                raise KeyError(f"checkpoint {step} missing leaf {name}")
+            arr = np.load(d / f"{name}.npy")
+            if shard_list is not None:
+                leaves.append(jax.device_put(arr, shard_list[i]))
+            else:
+                leaves.append(jax.device_put(arr))
+        return jax.tree_util.tree_unflatten(treedef, leaves)

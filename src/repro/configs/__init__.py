@@ -1,0 +1,14 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPE_CELLS,
+    SHAPES,
+    EncDecConfig,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    SSMConfig,
+    ShapeCell,
+    get_config,
+    reduced_config,
+    supports_cell,
+)

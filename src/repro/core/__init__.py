@@ -1,0 +1,8 @@
+# The paper's primary contribution: the CoIC cooperative edge cache.
+from repro.core.coic import CoICConfig, CoICEngine, RequestResult
+from repro.core.descriptor import NgramSketchDescriptor, PrefixDescriptor, l2_normalize
+from repro.core.hash_cache import HashCache
+from repro.core.layer_reuse import BlockReuseCache
+from repro.core.network import NetworkModel
+from repro.core.policies import EvictionPolicy
+from repro.core.semantic_cache import SemanticCache, SemanticCacheState

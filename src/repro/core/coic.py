@@ -1,0 +1,220 @@
+"""CoICEngine — the public API tying descriptor + semantic cache + hash cache
++ two-tier router around a cloud model.
+
+Workflow per batch of requests (paper §2, Figure 1):
+
+  1. client pre-processes the request -> feature descriptor
+  2. edge lookup: descriptor vs cached keys (threshold tau)
+  3. hit  -> cached result returns immediately
+  4. miss -> forward to cloud, compute, insert into the edge cache
+
+The "cloud" here is any callable batch->payload (a pjit-sharded LM on the
+production mesh in deployment; a small recognizer in the paper-scale
+benchmarks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.descriptor import NgramSketchDescriptor, PrefixDescriptor
+from repro.core.hash_cache import HashCache, content_hash
+from repro.core.network import NetworkModel
+from repro.core.policies import EvictionPolicy
+from repro.core.router import (LatencyBreakdown, PayloadSizes, TwoTierRouter,
+                               pad_rows, partition_by_hit)
+from repro.core.semantic_cache import SemanticCache
+
+
+@dataclasses.dataclass(frozen=True)
+class CoICConfig:
+    capacity: int = 4096
+    threshold: float = 0.85
+    payload_dim: int = 64
+    payload_dtype: str = "float32"
+    descriptor: str = "prefix"       # prefix | sketch
+    descriptor_dim: int = 256        # sketch dim (prefix uses d_model)
+    k_layers: int = 2                # prefix descriptor depth
+    policy: EvictionPolicy = EvictionPolicy("lru")
+    lookup_impl: str = "auto"
+    insert_on_miss: bool = True
+
+
+@dataclasses.dataclass
+class RequestResult:
+    payload: np.ndarray
+    source: str                      # "edge" | "cloud"
+    score: float
+    coic: LatencyBreakdown
+    origin: LatencyBreakdown
+
+
+class CoICEngine:
+    def __init__(self, model, params, cfg: CoICConfig,
+                 cloud_fn: Callable[[np.ndarray], np.ndarray],
+                 network: Optional[NetworkModel] = None,
+                 sizes: Optional[PayloadSizes] = None,
+                 miss_bucket: Optional[int] = None):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.cloud_fn = cloud_fn
+        self.network = network or NetworkModel()
+        self.miss_bucket = miss_bucket
+
+        if cfg.descriptor == "prefix":
+            self._descriptor = PrefixDescriptor(model, k_layers=cfg.k_layers)
+            key_dim = model.cfg.d_model
+            self._desc_fn = jax.jit(lambda p, t: self._descriptor(p, t))
+        else:
+            self._descriptor = NgramSketchDescriptor(dim=cfg.descriptor_dim)
+            key_dim = cfg.descriptor_dim
+            self._desc_fn = jax.jit(lambda p, t: self._descriptor(t))
+
+        self.sizes = sizes or PayloadSizes(
+            input_bytes=256 * 1024,                       # a camera frame
+            descriptor_bytes=key_dim * 4,
+            result_bytes=cfg.payload_dim * 4)
+        self.router = TwoTierRouter(self.network, self.sizes)
+
+        self.cache = SemanticCache(
+            capacity=cfg.capacity, key_dim=key_dim,
+            payload_dim=cfg.payload_dim, threshold=cfg.threshold,
+            payload_dtype=cfg.payload_dtype, policy=cfg.policy,
+            lookup_impl=cfg.lookup_impl)
+        self.state = self.cache.init()
+        self.asset_cache = HashCache()
+        self._timings = {"descriptor_ms": [], "lookup_ms": [], "cloud_ms": []}
+
+    # ------------------------------------------------------------------
+    def _descriptors(self, tokens: np.ndarray) -> jax.Array:
+        t0 = time.perf_counter()
+        d = self._desc_fn(self.params, jnp.asarray(tokens))
+        d.block_until_ready()
+        dt = (time.perf_counter() - t0) * 1e3
+        self._timings["descriptor_ms"].append(dt)
+        return d
+
+    # ------------------------------------------------------------------
+    def process_batch(self, tokens: np.ndarray) -> List[RequestResult]:
+        """tokens: (B, S) int32 request batch.  Returns per-request results
+        with CoIC and origin-baseline latency breakdowns."""
+        B = tokens.shape[0]
+        desc = self._descriptors(tokens)
+        per_req_desc_ms = self._timings["descriptor_ms"][-1] / B
+
+        t0 = time.perf_counter()
+        self.state, res = self.cache.lookup(self.state, desc)
+        jax.block_until_ready(res.value)
+        lookup_ms = (time.perf_counter() - t0) * 1e3 / B
+        self._timings["lookup_ms"].append(lookup_ms * B)
+
+        hit = np.asarray(res.hit)
+        score = np.asarray(res.score)
+        values = np.asarray(res.value)
+
+        payloads = np.zeros((B, self.cfg.payload_dim),
+                            np.dtype(self.cfg.payload_dtype))
+        cloud_ms = np.zeros((B,))
+        hit_rows, miss_rows = partition_by_hit(hit)
+        payloads[hit_rows] = values[hit_rows]
+
+        if miss_rows.size:
+            padded, n_real = pad_rows(tokens, miss_rows, self.miss_bucket)
+            t0 = time.perf_counter()
+            cloud_out = np.asarray(self.cloud_fn(padded))[:n_real]
+            dt = (time.perf_counter() - t0) * 1e3
+            self._timings["cloud_ms"].append(dt)
+            cloud_ms[miss_rows] = dt / max(1, n_real)
+            payloads[miss_rows] = cloud_out
+            if self.cfg.insert_on_miss:
+                miss_desc = np.asarray(desc)[miss_rows]
+                self.state = self.cache.insert(
+                    self.state, jnp.asarray(miss_desc),
+                    jnp.asarray(cloud_out.astype(self.cfg.payload_dtype)))
+
+        results = []
+        for b in range(B):
+            if hit[b]:
+                lat = self.router.hit_latency(per_req_desc_ms, lookup_ms)
+                src = "edge"
+            else:
+                lat = self.router.miss_latency(per_req_desc_ms, lookup_ms,
+                                               float(cloud_ms[b]))
+                src = "cloud"
+            origin = self.router.origin_latency(float(cloud_ms[b]) if not hit[b]
+                                                else self._mean_cloud_ms())
+            results.append(RequestResult(payload=payloads[b], source=src,
+                                         score=float(score[b]), coic=lat,
+                                         origin=origin))
+        return results
+
+    # ------------------------------------------------------------------
+    def _mean_cloud_ms(self) -> float:
+        t = self._timings["cloud_ms"]
+        if not t:
+            return 0.0
+        # per-request mean over observed cloud batches
+        return float(np.mean(t)) / max(1, self.miss_bucket or 1)
+
+    def load_asset(self, content, loader_fn: Callable[[], object]):
+        """Hash-keyed asset load (3D model / panorama analogue).  Returns
+        (value, load_ms, source)."""
+        key = "asset:" + content_hash(content)
+        cached = self.asset_cache.get(key)
+        if cached is not None:
+            return cached, 0.0, "edge"
+        t0 = time.perf_counter()
+        value = loader_fn()
+        jax.block_until_ready(value)
+        load_ms = (time.perf_counter() - t0) * 1e3
+        self.asset_cache.put(key, value)
+        return value, load_ms, "cloud"
+
+    def stats(self) -> dict:
+        s = self.cache.stats(self.state)
+        s["asset_cache"] = self.asset_cache.stats()
+        return s
+
+
+# ---------------------------------------------------------------------------
+# Cloud executors
+# ---------------------------------------------------------------------------
+
+
+def recognition_cloud_fn(model, params, num_classes: int):
+    """The paper's task: DNN object recognition.  Final-position hidden state
+    -> class logits over ``num_classes`` (payload)."""
+
+    @jax.jit
+    def fn(tokens):
+        logits = model.forward(params, tokens)[:, -1, :num_classes]
+        return logits.astype(jnp.float32)
+
+    return lambda tokens: fn(jnp.asarray(tokens))
+
+
+def generation_cloud_fn(model, params, max_new_tokens: int):
+    """LM serving task: greedy-decode ``max_new_tokens``; payload is the
+    generated token ids (int32)."""
+
+    def fn(tokens):
+        tokens = jnp.asarray(tokens)
+        B, S = tokens.shape
+        logits, cache, lengths = model.prefill(params, tokens,
+                                               max_len=S + max_new_tokens)
+        out = []
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(tok)
+        for _ in range(max_new_tokens - 1):
+            logits, cache, lengths = model.decode_step(params, cache, tok, lengths)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            out.append(tok)
+        return jnp.stack(out, axis=1)                     # (B, max_new)
+
+    return fn

@@ -1,0 +1,85 @@
+"""Feature descriptors — the CoIC "client pre-processing" step.
+
+The paper: "for an object recognition task using DNN model, CoIC uses the
+feature vector generated from the input image as the feature descriptor."
+
+Two implementations:
+
+* ``PrefixDescriptor`` — pooled hidden state of the first *k* transformer
+  layers (the DNN-feature-vector analogue).  Cheap relative to the full
+  model (k << L) and semantically meaningful: near-duplicate requests land
+  within a small cosine distance.
+* ``NgramSketchDescriptor`` — model-free hashed n-gram sketch.  Zero model
+  FLOPs (what a battery-constrained client would run) and fully
+  deterministic; robustness to paraphrase is weaker, which is exactly the
+  precision/recall trade the paper's threshold τ controls.
+
+Descriptors are L2-normalized so cosine similarity == dot product and the
+cache lookup is a single MXU matmul (kernels/similarity).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def l2_normalize(x: jax.Array, eps: float = 1e-8) -> jax.Array:
+    n = jnp.linalg.norm(x.astype(jnp.float32), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) / jnp.maximum(n, eps))
+
+
+@dataclasses.dataclass
+class NgramSketchDescriptor:
+    """Hashed n-gram count sketch over token ids.  dim should be a multiple
+    of 128 for TPU lane alignment."""
+
+    dim: int = 256
+    n: int = 3
+    seed: int = 0x5EED
+
+    def __call__(self, tokens: jax.Array) -> jax.Array:
+        """tokens: (B, S) int32 (padded with -1 beyond the prompt).
+        Returns (B, dim) fp32 unit descriptors."""
+        B, S = tokens.shape
+        t = tokens.astype(jnp.uint32)
+        valid = tokens >= 0
+        # rolling polynomial hash of each n-gram
+        h = jnp.zeros((B, S - self.n + 1), jnp.uint32)
+        ok = jnp.ones((B, S - self.n + 1), bool)
+        for i in range(self.n):
+            win = t[:, i:S - self.n + 1 + i]
+            h = h * jnp.uint32(1000003) + win * jnp.uint32(self.seed | 1)
+            ok &= valid[:, i:S - self.n + 1 + i]
+        bucket = (h % jnp.uint32(self.dim)).astype(jnp.int32)
+        sign = jnp.where((h >> 16) & 1, 1.0, -1.0).astype(jnp.float32)
+        contrib = jnp.where(ok, sign, 0.0)
+        sketch = jnp.zeros((B, self.dim), jnp.float32)
+        sketch = sketch.at[jnp.arange(B)[:, None], bucket].add(contrib)
+        return l2_normalize(sketch)
+
+
+@dataclasses.dataclass
+class PrefixDescriptor:
+    """Mean-pooled hidden state after the first ``k_layers`` of the model.
+
+    ``model`` must be a DecoderLM; the partial forward reuses the model's
+    own parameters, so descriptor quality tracks the serving model (the
+    paper's DNN-feature-vector behaviour).
+    """
+
+    model: object
+    k_layers: int = 2
+    out_dim: int = 0  # 0 => d_model (no projection)
+
+    def __call__(self, params: dict, tokens: jax.Array) -> jax.Array:
+        """tokens: (B, S) int32 (pad id 0 is fine; mask uses >= 0).
+        Returns (B, D) fp32 unit descriptors."""
+        hidden = self.model.forward_hidden(params, jnp.maximum(tokens, 0),
+                                           num_layers=self.k_layers)
+        mask = (tokens >= 0).astype(jnp.float32)[..., None]
+        pooled = (hidden.astype(jnp.float32) * mask).sum(1) / jnp.maximum(mask.sum(1), 1.0)
+        return l2_normalize(pooled)

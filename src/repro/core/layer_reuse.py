@@ -1,0 +1,163 @@
+"""Fine-grained per-layer KV reuse — the paper's §4 future work, implemented.
+
+CoIC §4: "we are exploring the improvement that can efficiently and
+accurately identify reusable IC workload in fine-grained (e.g., the result
+of a specific DNN layer)."  For an LM, the per-layer intermediate result of
+a prompt block is its KV-cache block; two requests sharing a (near-)
+identical block at the same offset can share every layer's KV for it.
+
+Mechanics (mirrors the paper's two lookup paths):
+
+  * exact: content hash of (offset, block tokens) — the 3D-model/panorama
+    path; splice is bit-exact.
+  * approximate: n-gram sketch descriptor at threshold tau — the DNN-feature
+    path; splice is approximate in exactly the way the paper's recognition
+    reuse is.
+
+Reuse is offset-aligned (RoPE bakes absolute positions into cached K) and
+restricted to attention-family blocks (recurrent SSM state does not splice);
+the final block is always computed so next-token logits reflect the true
+suffix.  Misses run ``model.prefill_chunk`` — chunked prefill — and insert
+their block KV for future requests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.descriptor import NgramSketchDescriptor
+from repro.core.hash_cache import HashCache, content_hash
+from repro.core.policies import EvictionPolicy
+from repro.core.semantic_cache import SemanticCache
+
+
+@dataclasses.dataclass
+class BlockReuseStats:
+    blocks_exact: int = 0
+    blocks_semantic: int = 0
+    blocks_computed: int = 0
+
+    @property
+    def reuse_rate(self) -> float:
+        total = self.blocks_exact + self.blocks_semantic + self.blocks_computed
+        return (self.blocks_exact + self.blocks_semantic) / total if total else 0.0
+
+
+class BlockReuseCache:
+    """Per-offset block KV store with exact + approximate lookup."""
+
+    def __init__(self, model, params, *, block_size: int = 64,
+                 threshold: float = 0.98, capacity_per_offset: int = 256,
+                 descriptor_dim: int = 128, max_offsets: int = 64,
+                 semantic: bool = True):
+        if model.cfg.family not in ("dense", "moe", "vlm"):
+            raise ValueError("block KV reuse needs attention-family caches "
+                             f"(got {model.cfg.family})")
+        if model.cfg.sliding_window:
+            raise ValueError("block KV reuse needs linear caches (no SWA ring)")
+        self.model = model
+        self.params = params
+        self.block_size = block_size
+        self.threshold = threshold
+        self.semantic_enabled = semantic
+        self.sketch = NgramSketchDescriptor(dim=descriptor_dim)
+        self.exact = HashCache(capacity_bytes=2 << 30)
+        self._values: List[dict] = []                 # handle -> KV block pytree
+        self._sem: Dict[int, Tuple[SemanticCache, object]] = {}
+        self._sem_capacity = capacity_per_offset
+        self._descriptor_dim = descriptor_dim
+        self.stats = BlockReuseStats()
+
+        self._chunk_fn = jax.jit(model.prefill_chunk, donate_argnums=(2,))
+
+    # ------------------------------------------------------------------
+    def _sem_cache(self, offset: int):
+        if offset not in self._sem:
+            cache = SemanticCache(capacity=self._sem_capacity,
+                                  key_dim=self._descriptor_dim, payload_dim=1,
+                                  threshold=self.threshold,
+                                  payload_dtype="int32",
+                                  policy=EvictionPolicy("lru"))
+            self._sem[offset] = [cache, cache.init()]
+        return self._sem[offset]
+
+    # ------------------------------------------------------------------
+    def _extract_block(self, cache: dict, offset: int) -> dict:
+        """Slice positions [offset*Bk, (offset+1)*Bk) of every seq-indexed leaf."""
+        Bk = self.block_size
+        out = {}
+        for k, v in cache.items():
+            if k.endswith("/conv") or k.endswith("/state"):
+                continue
+            out[k] = jax.lax.dynamic_slice_in_dim(v, offset * Bk, Bk, axis=2)
+        return out
+
+    def _splice_block(self, cache: dict, block: dict, offset: int) -> dict:
+        Bk = self.block_size
+        new = dict(cache)
+        for k, v in block.items():
+            new[k] = jax.lax.dynamic_update_slice_in_dim(
+                cache[k], v.astype(cache[k].dtype), offset * Bk, axis=2)
+        return new
+
+    # ------------------------------------------------------------------
+    def prefill(self, tokens: np.ndarray, max_len: Optional[int] = None):
+        """tokens: (S,) single-request prompt.  Returns (logits (V,), cache,
+        lengths (1,), per-request stats dict)."""
+        Bk = self.block_size
+        S = len(tokens)
+        n_blocks = S // Bk
+        assert n_blocks * Bk == S, f"prompt length {S} % block {Bk} != 0"
+        max_len = max_len or S
+        cache = {k: jnp.zeros(v.shape, v.dtype)
+                 for k, v in self.model.cache_specs(1, max_len).items()}
+        lengths = jnp.zeros((1,), jnp.int32)
+        logits = None
+        req = BlockReuseStats()
+
+        for i in range(n_blocks):
+            block_toks = tokens[i * Bk:(i + 1) * Bk]
+            last = i == n_blocks - 1
+            reused = None
+            if not last:
+                key = content_hash((i, block_toks.tobytes()))
+                reused = self.exact.get(key)
+                if reused is not None:
+                    req.blocks_exact += 1
+                elif self.semantic_enabled:
+                    sem, state = self._sem_cache(i)
+                    desc = self.sketch(jnp.asarray(block_toks[None, :]))
+                    self._sem_cache(i)[1], res = sem.lookup(state, desc)
+                    if bool(res.hit[0]):
+                        handle = int(res.value[0, 0])
+                        reused = self._values[handle]
+                        req.blocks_semantic += 1
+            if reused is not None:
+                cache = self._splice_block(cache, reused, i)
+                lengths = lengths + Bk
+                logits = None                          # stale; recomputed later
+            else:
+                req.blocks_computed += 1
+                logits, cache, lengths = self._chunk_fn(
+                    self.params, jnp.asarray(block_toks[None, :]), cache, lengths)
+                if not last:
+                    block_kv = self._extract_block(cache, i)
+                    key = content_hash((i, block_toks.tobytes()))
+                    self.exact.put(key, block_kv)
+                    if self.semantic_enabled:
+                        handle = len(self._values)
+                        self._values.append(block_kv)
+                        sem, state = self._sem_cache(i)
+                        desc = self.sketch(jnp.asarray(block_toks[None, :]))
+                        self._sem_cache(i)[1] = sem.insert(
+                            state, desc,
+                            jnp.full((1, 1), handle, jnp.int32))
+
+        self.stats.blocks_exact += req.blocks_exact
+        self.stats.blocks_semantic += req.blocks_semantic
+        self.stats.blocks_computed += req.blocks_computed
+        return logits[0], cache, lengths, dataclasses.asdict(req)

@@ -1,0 +1,39 @@
+"""Analytic network model — replaces the paper's ``tc`` emulation.
+
+The paper's testbed: Pixel phone --802.11ac (<=400 Mbps)--> edge Linux box
+--tc-shaped link--> cloud Linux box.  We model each link as
+(bandwidth, RTT) and compute transfer times analytically so benchmarks can
+sweep the same (B_M->E, B_E->C) grid as Fig 2a.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Link:
+    bandwidth_mbps: float
+    rtt_ms: float = 2.0
+
+    def transfer_ms(self, payload_bytes: float) -> float:
+        return self.rtt_ms + payload_bytes * 8.0 / (self.bandwidth_mbps * 1e3)
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkModel:
+    """mobile<->edge and edge<->cloud links."""
+
+    m_e: Link = Link(bandwidth_mbps=400.0, rtt_ms=2.0)      # 802.11ac
+    e_c: Link = Link(bandwidth_mbps=100.0, rtt_ms=20.0)     # WAN
+
+    def client_to_edge_ms(self, payload_bytes: float) -> float:
+        return self.m_e.transfer_ms(payload_bytes)
+
+    def edge_to_client_ms(self, payload_bytes: float) -> float:
+        return self.m_e.transfer_ms(payload_bytes)
+
+    def edge_to_cloud_ms(self, payload_bytes: float) -> float:
+        return self.e_c.transfer_ms(payload_bytes)
+
+    def cloud_to_edge_ms(self, payload_bytes: float) -> float:
+        return self.e_c.transfer_ms(payload_bytes)

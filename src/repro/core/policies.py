@@ -1,0 +1,43 @@
+"""Cache eviction / admission policies (functional, jittable).
+
+The paper ships a "simple cache management policy"; §4 lists smarter
+management as future work.  We implement the classic family as priority
+functions over the cache state: eviction always removes the minimum-priority
+slot, insertion prefers invalid slots (priority -inf).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class EvictionPolicy:
+    """kind: lru | lfu | fifo | lru_ttl.  ttl in engine time units (steps)."""
+
+    kind: str = "lru"
+    ttl: int = 0
+
+    def priority(self, state) -> jax.Array:
+        """(C,) fp32 — higher means keep longer.  Invalid slots get NEG so
+        they are always chosen first as insertion victims."""
+        if self.kind == "lru" or self.kind == "lru_ttl":
+            pri = state.last_used.astype(jnp.float32)
+        elif self.kind == "lfu":
+            # tie-break equal frequencies by recency
+            pri = state.freq.astype(jnp.float32) * 1e6 + state.last_used.astype(jnp.float32)
+        elif self.kind == "fifo":
+            pri = state.inserted_at.astype(jnp.float32)
+        else:
+            raise ValueError(f"unknown eviction policy {self.kind}")
+        return jnp.where(state.valid, pri, NEG)
+
+    def expire(self, state, now: jax.Array) -> jax.Array:
+        """(C,) bool — slots still alive after TTL expiry."""
+        if self.ttl <= 0:
+            return state.valid
+        return state.valid & ((now - state.inserted_at) < self.ttl)

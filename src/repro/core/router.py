@@ -1,0 +1,106 @@
+"""Two-tier (edge/cloud) request routing — host-side scheduling.
+
+Mobile RPC semantics don't exist inside a jitted program, so the hit/miss
+split happens on the host between device steps (the same place a vLLM-class
+scheduler lives).  Descriptor extraction and cache lookup are device code;
+re-batching misses for the cloud model is host logic.
+
+Latency accounting mirrors the paper's flow:
+
+  CoIC hit : t_desc + M->E(desc) + t_lookup + E->M(result)
+  CoIC miss: t_desc + M->E(desc) + t_lookup + M->E(input) + E->C(input)
+             + t_cloud + C->E(result) + E->M(result)   [+ edge insert]
+  Origin   : M->E(input) + E->C(input) + t_cloud + C->E(result) + E->M(result)
+
+(the origin baseline offloads the complete task to the cloud, no cache.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.network import NetworkModel
+
+
+@dataclasses.dataclass
+class LatencyBreakdown:
+    descriptor_ms: float = 0.0
+    uplink_ms: float = 0.0
+    lookup_ms: float = 0.0
+    cloud_net_ms: float = 0.0
+    cloud_compute_ms: float = 0.0
+    downlink_ms: float = 0.0
+
+    @property
+    def total_ms(self) -> float:
+        return (self.descriptor_ms + self.uplink_ms + self.lookup_ms
+                + self.cloud_net_ms + self.cloud_compute_ms + self.downlink_ms)
+
+
+@dataclasses.dataclass(frozen=True)
+class PayloadSizes:
+    """Wire sizes in bytes."""
+
+    input_bytes: int          # the raw request (image / prompt / pano)
+    descriptor_bytes: int     # the feature descriptor
+    result_bytes: int         # the returned result
+
+
+class TwoTierRouter:
+    """Computes per-request latency for CoIC and the origin baseline."""
+
+    def __init__(self, network: NetworkModel, sizes: PayloadSizes):
+        self.net = network
+        self.sizes = sizes
+
+    def hit_latency(self, descriptor_ms: float, lookup_ms: float) -> LatencyBreakdown:
+        return LatencyBreakdown(
+            descriptor_ms=descriptor_ms,
+            uplink_ms=self.net.client_to_edge_ms(self.sizes.descriptor_bytes),
+            lookup_ms=lookup_ms,
+            downlink_ms=self.net.edge_to_client_ms(self.sizes.result_bytes),
+        )
+
+    def miss_latency(self, descriptor_ms: float, lookup_ms: float,
+                     cloud_compute_ms: float) -> LatencyBreakdown:
+        s = self.sizes
+        return LatencyBreakdown(
+            descriptor_ms=descriptor_ms,
+            uplink_ms=(self.net.client_to_edge_ms(s.descriptor_bytes)
+                       + self.net.client_to_edge_ms(s.input_bytes)),
+            lookup_ms=lookup_ms,
+            cloud_net_ms=(self.net.edge_to_cloud_ms(s.input_bytes)
+                          + self.net.cloud_to_edge_ms(s.result_bytes)),
+            cloud_compute_ms=cloud_compute_ms,
+            downlink_ms=self.net.edge_to_client_ms(s.result_bytes),
+        )
+
+    def origin_latency(self, cloud_compute_ms: float) -> LatencyBreakdown:
+        s = self.sizes
+        return LatencyBreakdown(
+            uplink_ms=self.net.client_to_edge_ms(s.input_bytes),
+            cloud_net_ms=(self.net.edge_to_cloud_ms(s.input_bytes)
+                          + self.net.cloud_to_edge_ms(s.result_bytes)),
+            cloud_compute_ms=cloud_compute_ms,
+            downlink_ms=self.net.edge_to_client_ms(s.result_bytes),
+        )
+
+
+def partition_by_hit(hit: np.ndarray):
+    """(hit_rows, miss_rows) index arrays from a (B,) bool mask."""
+    hit = np.asarray(hit)
+    return np.nonzero(hit)[0], np.nonzero(~hit)[0]
+
+
+def pad_rows(arr: np.ndarray, rows: np.ndarray, bucket: Optional[int] = None):
+    """Gather ``rows`` and zero-pad the batch dim to ``bucket`` (static shapes
+    for jit).  Returns (padded, n_real)."""
+    sub = arr[rows]
+    n = sub.shape[0]
+    if bucket is None or n == bucket:
+        return sub, n
+    pad = bucket - n
+    pad_block = np.zeros((pad,) + sub.shape[1:], sub.dtype)
+    return np.concatenate([sub, pad_block], axis=0), n

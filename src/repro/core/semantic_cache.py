@@ -1,0 +1,142 @@
+"""Device-resident semantic cache — the CoIC edge tier.
+
+Fixed-capacity tensor store of (descriptor key, payload value) pairs with a
+vectorized batched lookup:
+
+  hit(q)  <=>  max_c cos(q, key_c) >= tau   (paper: "distance ... under a
+                                             certain threshold")
+
+All operations are functional (state in, state out) and jittable, so the
+cache can live on the same TPU mesh as the model (keys sharded over the
+``cache`` axis at scale).  The lookup matmul is the Pallas ``similarity``
+kernel on TPU and the jnp oracle elsewhere.
+
+Payloads are a fixed-width vector per slot (class logits, generated token
+ids, or a KV-block handle) — the engine owns the encoding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policies import NEG, EvictionPolicy
+from repro.kernels.similarity import similarity_lookup
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SemanticCacheState:
+    keys: jax.Array          # (C, D) fp32 unit descriptors
+    values: jax.Array        # (C, P) payload
+    valid: jax.Array         # (C,) bool
+    last_used: jax.Array     # (C,) int32 — logical clock of last hit/insert
+    inserted_at: jax.Array   # (C,) int32
+    freq: jax.Array          # (C,) int32 — hit count (LFU)
+    clock: jax.Array         # () int32 — logical time
+    hits: jax.Array          # () int32 — stats
+    misses: jax.Array        # () int32
+
+
+class LookupResult(NamedTuple):
+    hit: jax.Array           # (Q,) bool
+    index: jax.Array         # (Q,) int32
+    score: jax.Array         # (Q,) fp32
+    value: jax.Array         # (Q, P) payload (zeros when miss)
+
+
+@dataclasses.dataclass(frozen=True)
+class SemanticCache:
+    capacity: int
+    key_dim: int
+    payload_dim: int
+    threshold: float = 0.85
+    payload_dtype: str = "float32"
+    policy: EvictionPolicy = EvictionPolicy("lru")
+    lookup_impl: str = "auto"        # kernels/similarity impl switch
+
+    # ------------------------------------------------------------------
+    def init(self) -> SemanticCacheState:
+        C, D, P = self.capacity, self.key_dim, self.payload_dim
+        z = jnp.zeros
+        return SemanticCacheState(
+            keys=z((C, D), jnp.float32),
+            values=z((C, P), jnp.dtype(self.payload_dtype)),
+            valid=z((C,), bool),
+            last_used=z((C,), jnp.int32),
+            inserted_at=z((C,), jnp.int32),
+            freq=z((C,), jnp.int32),
+            clock=jnp.zeros((), jnp.int32),
+            hits=jnp.zeros((), jnp.int32),
+            misses=jnp.zeros((), jnp.int32),
+        )
+
+    # ------------------------------------------------------------------
+    @partial(jax.jit, static_argnames=("self",))
+    def lookup(self, state: SemanticCacheState, queries: jax.Array
+               ) -> Tuple[SemanticCacheState, LookupResult]:
+        """queries: (Q, D) unit descriptors.  Updates LRU/LFU/stat fields."""
+        alive = self.policy.expire(state, state.clock)
+        idx, score = similarity_lookup(queries, state.keys, alive,
+                                       impl=self.lookup_impl)
+        hit = (score >= self.threshold) & jnp.take(alive, idx)
+        value = jnp.where(hit[:, None], state.values[idx], 0)
+
+        # touch hit slots (scatter-max the clock, scatter-add freq)
+        touched = jnp.where(hit, idx, self.capacity)     # out-of-range = drop
+        last_used = state.last_used.at[touched].max(state.clock,
+                                                    mode="drop")
+        freq = state.freq.at[touched].add(1, mode="drop")
+        nhit = hit.sum(dtype=jnp.int32)
+        new_state = dataclasses.replace(
+            state, valid=alive, last_used=last_used, freq=freq,
+            clock=state.clock + 1,
+            hits=state.hits + nhit,
+            misses=state.misses + (hit.shape[0] - nhit))
+        return new_state, LookupResult(hit, idx, score, value)
+
+    # ------------------------------------------------------------------
+    @partial(jax.jit, static_argnames=("self",))
+    def insert(self, state: SemanticCacheState, keys: jax.Array,
+               values: jax.Array, mask: Optional[jax.Array] = None
+               ) -> SemanticCacheState:
+        """Insert up to Q entries (mask selects which rows are real).
+
+        Victims: lowest-priority slots (invalid first, then the policy
+        order).  Q distinct victims are chosen with top_k on -priority, so a
+        batch insert never overwrites itself.
+        """
+        Q = keys.shape[0]
+        if mask is None:
+            mask = jnp.ones((Q,), bool)
+        pri = self.policy.priority(state)                # (C,) higher=keep
+        _, victims = jax.lax.top_k(-pri, Q)              # Q lowest-priority slots
+        victims = jnp.where(mask, victims, self.capacity)  # dropped rows
+
+        keys_f = keys.astype(jnp.float32)
+        new = dataclasses.replace(
+            state,
+            keys=state.keys.at[victims].set(keys_f, mode="drop"),
+            values=state.values.at[victims].set(
+                values.astype(state.values.dtype), mode="drop"),
+            valid=state.valid.at[victims].set(True, mode="drop"),
+            last_used=state.last_used.at[victims].set(state.clock, mode="drop"),
+            inserted_at=state.inserted_at.at[victims].set(state.clock, mode="drop"),
+            freq=state.freq.at[victims].set(1, mode="drop"),
+            clock=state.clock + 1,
+        )
+        return new
+
+    # ------------------------------------------------------------------
+    def stats(self, state: SemanticCacheState) -> dict:
+        total = int(state.hits) + int(state.misses)
+        return {
+            "capacity": self.capacity,
+            "occupancy": int(state.valid.sum()),
+            "hits": int(state.hits),
+            "misses": int(state.misses),
+            "hit_rate": (int(state.hits) / total) if total else 0.0,
+        }

@@ -1,0 +1,93 @@
+"""Pallas TPU flash-decode: one query token against a long KV cache.
+
+The KV cache streams through VMEM in (BLOCK_KV, D) tiles; per-tile partial
+softmax statistics (m, l, acc) combine online exactly as flash attention
+does, so a 500k-token cache costs O(S) HBM reads at full bandwidth with a
+constant VMEM footprint — this is the kernel behind the ``decode_32k`` and
+``long_500k`` serve cells.  All G query heads of a KV group are processed
+together as a (G, D) tile so each KV block is read once per group rather
+than once per head (G-fold HBM traffic saving vs naive per-head decode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, block_kv: int, scale: float):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_len = len_ref[0]
+    k_start = j * block_kv
+
+    @pl.when(k_start < kv_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)              # (BKV, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale  # (G, BKV)
+        kp = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kp < kv_len, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv", "interpret"))
+def decode_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
+                            kv_len: jax.Array, *, block_kv: int = 512,
+                            interpret: bool = False) -> jax.Array:
+    """q: (B, K, G, D) grouped query heads; k/v: (B, K, S, D); kv_len: (B,).
+    S must be a multiple of block_kv (ops.py pads).  Returns (B, K, G, D)."""
+    B, K, G, D = q.shape
+    S = k.shape[2]
+    grid = (B, K, S // block_kv)
+    scale = 1.0 / np.sqrt(D)
+
+    kernel = functools.partial(_decode_kernel, block_kv=block_kv, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, j: (b,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), q, k, v)

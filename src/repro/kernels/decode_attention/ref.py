@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: single-token GQA attention against a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len: jax.Array) -> jax.Array:
+    """q: (B, H, D) one new token per row; k/v: (B, S, K, D); kv_len: (B,)
+    number of valid slots per row.  Returns (B, H, D)."""
+    B, H, D = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / np.sqrt(D)
+    qg = q.reshape(B, K, G, D)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    valid = jnp.arange(S)[None, :] < kv_len[:, None]     # (B, S)
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)

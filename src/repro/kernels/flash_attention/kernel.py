@@ -1,0 +1,123 @@
+"""Pallas TPU flash attention (prefill): causal, GQA, optional sliding window.
+
+Tiling: a (BLOCK_Q, D) query tile stays VMEM-resident while (BLOCK_KV, D)
+key/value tiles stream; online-softmax state (m, l, acc) lives in VMEM
+scratch.  Fully-above-diagonal KV blocks are predicated out with ``pl.when``
+so the causal lower triangle costs ~half the FLOPs of the dense product.
+Block defaults (256, 512) keep the working set
+(256x128 q + 2x512x128 kv + 256x512 logits) * 4B ~= 1.2 MB well inside VMEM
+while keeping both matmul operands MXU-aligned (multiples of 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_kv: int, causal: bool, window: int,
+                  scale: float, seq_len: int):
+    i = pl.program_id(1)          # q block
+    j = pl.program_id(2)          # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = i * block_q
+    k_start = j * block_kv
+    # skip blocks strictly above the causal diagonal / entirely left of the window
+    needed = None
+    if causal:
+        needed = k_start <= q_start + block_q - 1
+    if window > 0:
+        in_window = k_start + block_kv - 1 > q_start - window
+        needed = in_window if needed is None else (needed & in_window)
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                 # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (BKV, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qp = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+        kp = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        mask = kp < seq_len
+        if causal:
+            mask &= kp <= qp
+        if window > 0:
+            mask &= kp > qp - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    if needed is None:
+        _compute()
+    else:
+        pl.when(needed)(_compute)
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_kv", "interpret"))
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int = 0,
+                           block_q: int = 256, block_kv: int = 512,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, H, S, D); k/v: (B, K, S, D) — head-major layout.
+    S must be a multiple of the block sizes (ops.py pads)."""
+    B, H, S, D = q.shape
+    K = k.shape[1]
+    G = H // K
+    grid = (B * H, S // block_q, S // block_kv)
+    scale = 1.0 / np.sqrt(D)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_kv=block_kv, causal=causal,
+        window=window, scale=scale, seq_len=S)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda bh, i, j: (bh // H, bh % H, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda bh, i, j: (bh // H, (bh % H) // G, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda bh, i, j: (bh // H, (bh % H) // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda bh, i, j: (bh // H, bh % H, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q.reshape(B, H, S, D), k.reshape(B, K, S, D), v.reshape(B, K, S, D))

@@ -1,0 +1,43 @@
+"""Public wrapper: layout handling, padding, backend selection."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "impl", "block_q", "block_kv"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0, impl: str = "auto",
+                    block_q: int = 256, block_kv: int = 512) -> jax.Array:
+    """q: (B, S, H, D); k/v: (B, S, K, D) — sequence-major public layout.
+
+    impl: auto | pallas | pallas_interpret | ref
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return flash_attention_ref(q, k, v, causal=causal, window=window)
+
+    B, S, H, D = q.shape
+    bq = min(block_q, S)
+    bkv = min(block_kv, S)
+    pad = (-S) % max(bq, bkv)
+    qt = jnp.moveaxis(q, 1, 2)                           # (B, H, S, D)
+    kt = jnp.moveaxis(k, 1, 2)
+    vt = jnp.moveaxis(v, 1, 2)
+    if pad:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out = flash_attention_kernel(
+        qt, kt, vt, causal=causal, window=window, block_q=bq, block_kv=bkv,
+        interpret=(impl == "pallas_interpret"))
+    if pad:
+        out = out[:, :, :S]
+    return jnp.moveaxis(out, 2, 1)

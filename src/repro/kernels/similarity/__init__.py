@@ -1,0 +1,2 @@
+from repro.kernels.similarity.ops import similarity_lookup
+from repro.kernels.similarity.ref import similarity_lookup_ref

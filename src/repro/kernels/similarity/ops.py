@@ -1,0 +1,50 @@
+"""Jit'd public wrapper for the similarity lookup.
+
+Selects the Pallas TPU kernel on TPU backends and the jnp oracle elsewhere
+(this container is CPU-only; the kernel is exercised via interpret=True in
+tests).  Handles padding to block multiples.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.similarity.kernel import NEG_INF, similarity_lookup_kernel
+from repro.kernels.similarity.ref import similarity_lookup_ref
+
+
+def _backend_is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_q", "block_c"))
+def similarity_lookup(queries: jax.Array, keys: jax.Array, valid: jax.Array,
+                      *, impl: str = "auto", block_q: int = 128,
+                      block_c: int = 512):
+    """Batched nearest-neighbour cache lookup.
+
+    queries: (Q, D) unit-norm descriptors; keys: (C, D); valid: (C,) bool.
+    Returns (best_idx (Q,) int32, best_score (Q,) f32).
+
+    impl: auto | pallas | pallas_interpret | ref
+    """
+    if impl == "auto":
+        impl = "pallas" if _backend_is_tpu() else "ref"
+    if impl == "ref":
+        return similarity_lookup_ref(queries, keys, valid)
+
+    Q, D = queries.shape
+    C = keys.shape[0]
+    bq = min(block_q, max(8, Q))
+    bc = min(block_c, max(8, C))
+    pad_q = (-Q) % bq
+    pad_c = (-C) % bc
+    qp = jnp.pad(queries, ((0, pad_q), (0, 0)))
+    kp = jnp.pad(keys, ((0, pad_c), (0, 0)))
+    vp = jnp.pad(valid.astype(jnp.int8), (0, pad_c))
+    idx, score = similarity_lookup_kernel(
+        qp, kp, vp, block_q=bq, block_c=bc,
+        interpret=(impl == "pallas_interpret"))
+    return idx[:Q], score[:Q]

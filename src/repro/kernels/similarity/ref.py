@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the CoIC edge-cache lookup.
+
+The paper's edge performs: "a lookup with the feature descriptor (as the key)
+by matching the key to any results cached on the edge" — i.e. a nearest-
+neighbour scan over cached descriptors with a distance threshold.  With unit-
+norm descriptors, min-L2 == max-cosine, so the lookup is one matmul + argmax.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def similarity_lookup_ref(queries: jax.Array, keys: jax.Array,
+                          valid: jax.Array):
+    """queries: (Q, D); keys: (C, D); valid: (C,) bool.
+
+    Returns (best_idx (Q,) int32, best_score (Q,) f32) — the argmax cosine
+    similarity over valid cache slots.  Scores of invalid slots are -inf;
+    if no slot is valid the score is -inf and idx is 0.
+    """
+    scores = jnp.einsum("qd,cd->qc", queries.astype(jnp.float32),
+                        keys.astype(jnp.float32))
+    scores = jnp.where(valid[None, :], scores, -jnp.inf)
+    best_idx = jnp.argmax(scores, axis=1).astype(jnp.int32)
+    best_score = jnp.max(scores, axis=1)
+    return best_idx, best_score

@@ -1,0 +1,361 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+
+Each cell produces a JSON artifact with memory_analysis, cost_analysis and a
+collective-bytes breakdown parsed from the compiled HLO (while-loop trip
+counts are resolved so collectives inside scan bodies are counted once per
+layer, not once per program).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (the two lines above MUST precede every other import: jax locks the device
+# count at first initialization)
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, supports_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import batch_specs, decode_specs
+from repro.models import build_model
+from repro.parallel.sharding import (RULES_SERVE, RULES_SERVE_LONG, RULES_TRAIN,
+                                     set_activation_sharder)
+from repro.train.trainer import TrainerConfig, make_train_step, train_state_shapes
+
+# ---------------------------------------------------------------------------
+# Collective-bytes parsing from compiled HLO
+# ---------------------------------------------------------------------------
+
+from repro.launch.hloparse import (_COLLECTIVES, _DTYPE_BYTES,
+                                   _shape_bytes, _wire_factor,
+                                   parse_collectives)
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+
+def _state_shardings(tree_axes: dict, tree_shapes, mesh, rules):
+    return jax.tree.map(
+        lambda axes, sds: rules.sharding_for(axes, sds.shape, mesh),
+        tree_axes, tree_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def _batch_shardings(specs: dict, mesh, rules):
+    out = {}
+    for k, v in specs.items():
+        axes = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = rules.sharding_for(axes, v.shape, mesh)
+    return out
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool, *, unroll: bool = False,
+               cfg_override=None, moe_impl: str = "dropless",
+               act_sharding: bool = True):
+    """Build + lower one cell.  Returns (lowered, mesh, meta).
+
+    unroll=True disables scan-over-layers: XLA's cost_analysis does not
+    multiply while-loop bodies by their trip count, so the unrolled program
+    is the one with honest FLOP/byte totals (the scanned program is what
+    production would run; both lower to the same per-layer HLO).
+    """
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    remat = os.environ.get("REPRO_REMAT", "")
+    if remat:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    cell = SHAPES[shape]
+    ok, reason = supports_cell(cfg, cell)
+    if not ok:
+        return None, None, {"skipped": reason}
+    if unroll:
+        cfg = dataclasses.replace(cfg, scan_layers=False)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg, moe_impl=moe_impl, attention_impl="xla")
+    global RULES_TRAIN, RULES_SERVE, RULES_SERVE_LONG
+    if not act_sharding:
+        import dataclasses as _dc
+        from repro.parallel.sharding import ShardingRules
+
+        def _strip(rules):
+            return ShardingRules({k: v for k, v in rules.rules.items()
+                                  if k != "act_embed"})
+        RULES_TRAIN = _strip(RULES_TRAIN)
+        RULES_SERVE = _strip(RULES_SERVE)
+        RULES_SERVE_LONG = _strip(RULES_SERVE_LONG)
+
+    if cell.kind == "train":
+        rules = RULES_TRAIN
+        tcfg = TrainerConfig(microbatches=int(os.environ.get("REPRO_MICROBATCHES", "1")))
+        step = make_train_step(model, tcfg)
+        state_abs = train_state_shapes(model, tcfg)
+        axes = model.logical_axes()
+        p_shardings = {k: rules.sharding_for(axes[k], v.shape, mesh)
+                       for k, v in state_abs.params.items()}
+        from repro.optim.adamw import OptState
+        from repro.train.trainer import TrainState
+        state_sh = TrainState(
+            params=p_shardings,
+            opt=OptState(mu=dict(p_shardings), nu=dict(p_shardings),
+                         count=_replicated(mesh)),
+            step=_replicated(mesh))
+        bspecs = batch_specs(cfg, cell)
+        b_shardings = _batch_shardings(bspecs, mesh, rules)
+        with set_activation_sharder(mesh, rules):
+            lowered = jax.jit(
+                step, in_shardings=(state_sh, b_shardings),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            ).lower(state_abs, bspecs)
+    elif cell.kind == "prefill":
+        rules = RULES_SERVE
+        params_abs = model.init_shapes()
+        axes = model.logical_axes()
+        p_shardings = {k: rules.sharding_for(axes[k], v.shape, mesh)
+                       for k, v in params_abs.items()}
+        bspecs = batch_specs(cfg, cell)
+        b_shardings = _batch_shardings(bspecs, mesh, rules)
+
+        if cfg.family == "encdec":
+            def step(params, batch):
+                return model.prefill(params, batch["enc_embeds"],
+                                     batch["dec_tokens"])
+        elif cfg.num_image_patches:
+            def step(params, batch):
+                return model.prefill(params, batch["tokens"],
+                                     image_embeds=batch["image_embeds"],
+                                     max_len=cell.seq_len)
+        else:
+            def step(params, batch):
+                return model.prefill(params, batch["tokens"])
+
+        with set_activation_sharder(mesh, rules):
+            lowered = jax.jit(
+                step, in_shardings=(p_shardings, b_shardings),
+            ).lower(params_abs, bspecs)
+    else:  # decode
+        rules = RULES_SERVE_LONG if cell.name == "long_500k" else RULES_SERVE
+        params_abs = model.init_shapes()
+        axes = model.logical_axes()
+        p_shardings = {k: rules.sharding_for(axes[k], v.shape, mesh)
+                       for k, v in params_abs.items()}
+        cache_abs, in_abs = decode_specs(model, cfg, cell)
+        c_axes = model.cache_axes()
+        c_shardings = {k: rules.sharding_for(c_axes[k], v.shape, mesh)
+                       for k, v in cache_abs.items()}
+        i_shardings = _batch_shardings(in_abs, mesh, rules)
+
+        def step(params, cache, tokens, lengths):
+            return model.decode_step(params, cache, tokens, lengths)
+
+        with set_activation_sharder(mesh, rules):
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_shardings, c_shardings,
+                              i_shardings["tokens"], i_shardings["lengths"]),
+                donate_argnums=(1,),
+            ).lower(params_abs, cache_abs, in_abs["tokens"], in_abs["lengths"])
+
+    return lowered, mesh, {"skipped": None}
+
+
+def _periods(cfg) -> tuple:
+    """(prefix_layers, pattern_len, full_repeats) of the repeated segment."""
+    if cfg.family == "encdec":
+        return 0, 1, cfg.num_layers
+    from repro.models.transformer import build_plan
+
+    plan = build_plan(cfg)
+    prefix = sum(s.repeats for s in plan[:-1])
+    blocks = plan[-1]
+    return prefix, len(blocks.pattern), blocks.repeats
+
+
+def _with_repeats(cfg, k: int):
+    """Same-family config with k repeats of the layer pattern (unrolled)."""
+    prefix, plen, _ = _periods(cfg)
+    kw = dict(scan_layers=False, num_layers=prefix + k * plen)
+    if cfg.family == "encdec":
+        kw["encdec"] = dataclasses.replace(cfg.encdec, num_encoder_layers=k)
+    return dataclasses.replace(cfg, **kw)
+
+
+def extrapolate_costs(arch: str, shape: str, multi_pod: bool,
+                      moe_impl: str = "dropless",
+                      act_sharding: bool = True) -> dict:
+    """cost_analysis totals are affine in the repeat count k of the layer
+    pattern (XLA does not multiply while-body costs by trip count, so the
+    scanned program under-reports).  Lower the UNROLLED program at two small
+    depths, fit f(k) = a + b*k, evaluate at the full depth."""
+    cfg = get_config(arch)
+    prefix, plen, full = _periods(cfg)
+    if full >= 4:
+        k1, k2 = 2, 4
+    elif full >= 2:
+        k1, k2 = 1, 2
+    else:
+        k1, k2 = full, full
+    points = {}
+    for k in sorted({k1, k2}):
+        sub_arch_cfg = _with_repeats(cfg, k)
+        lowered, _, _ = lower_cell(arch, shape, multi_pod, cfg_override=sub_arch_cfg,
+                                   moe_impl=moe_impl, act_sharding=act_sharding)
+        compiled = lowered.compile()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        col = parse_collectives(hlo)
+        points[k] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "collective_wire_bytes": col["total_wire_bytes"],
+        }
+
+    def fit(field):
+        if k1 == k2:
+            return points[k1][field]
+        b = (points[k2][field] - points[k1][field]) / (k2 - k1)
+        return points[k1][field] + b * (full - k1)
+
+    return {
+        "points": points,
+        "full_repeats": full,
+        "flops": fit("flops"),
+        "bytes_accessed": fit("bytes_accessed"),
+        "collective_wire_bytes": fit("collective_wire_bytes"),
+    }
+
+
+class _Skip(Exception):
+    pass
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: Path,
+             *, unroll: bool = False, moe_impl: str = "dropless",
+             suffix: str = "", act_sharding: bool = True) -> dict:
+    multi_pod = mesh_kind == "multi"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind, "ok": False,
+           "unroll": unroll, "moe_impl": moe_impl, "variant": suffix or "baseline"}
+    t0 = time.time()
+    try:
+        lowered, mesh, meta = lower_cell(arch, shape, multi_pod, unroll=unroll,
+                                         moe_impl=moe_impl,
+                                         act_sharding=act_sharding)
+        if meta["skipped"]:
+            rec.update(ok=True, skipped=meta["skipped"])
+            raise _Skip()
+        rec["seconds_lower"] = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["seconds_compile"] = time.time() - t1
+
+        ma = compiled.memory_analysis()
+        mem = {}
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            mem[attr] = int(getattr(ma, attr, 0) or 0)
+        rec["memory_analysis"] = mem
+
+        ca = compiled.cost_analysis() or {}
+        rec["cost_analysis"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0)),
+        }
+        hlo = compiled.as_text()
+        rec["hlo_bytes"] = len(hlo)
+        rec["collectives"] = parse_collectives(hlo)
+        rec["num_devices"] = int(np.prod(list(mesh.shape.values())))
+        try:
+            rec["extrapolated"] = extrapolate_costs(arch, shape, multi_pod,
+                                                    moe_impl=moe_impl,
+                                                    act_sharding=act_sharding)
+        except Exception as e:  # noqa: BLE001
+            rec["extrapolated"] = {"error": f"{type(e).__name__}: {e}"}
+        rec["ok"] = True
+        print(compiled.memory_analysis())
+        print({k: v for k, v in rec["cost_analysis"].items()})
+    except _Skip:
+        pass
+    except Exception as e:  # noqa: BLE001 — record, don't crash the matrix
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    finally:
+        rec["seconds_total"] = time.time() - t0
+    out_dir.mkdir(parents=True, exist_ok=True)
+    sfx = f"__{suffix}" if suffix else ""
+    path = out_dir / f"{arch.replace('.', '_')}__{shape}__{mesh_kind}{sfx}.json"
+    path.write_text(json.dumps(rec, indent=1, default=lambda o: int(o)
+                               if isinstance(o, (np.integer,)) else float(o)))
+    status = "SKIP" if rec.get("skipped") else ("OK" if rec["ok"] else "FAIL")
+    print(f"[{status}] {arch} x {shape} x {mesh_kind} "
+          f"({rec['seconds_total']:.1f}s)", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="disable scan-over-layers (honest cost_analysis totals)")
+    ap.add_argument("--moe-impl", default="dropless",
+                    choices=["dense", "dropless", "ep"])
+    ap.add_argument("--suffix", default="", help="artifact name suffix (variants)")
+    ap.add_argument("--no-act-sharding", action="store_true",
+                    help="disable 2D activation sharding (act_embed -> model)")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        archs = list(ARCH_IDS)
+        shapes = list(SHAPES)
+    else:
+        archs = [args.arch]
+        shapes = [args.shape] if args.shape else list(SHAPES)
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                sfx = f"__{args.suffix}" if args.suffix else ""
+                path = out_dir / f"{arch.replace('.', '_')}__{shape}__{mk}{sfx}.json"
+                if args.skip_existing and path.exists():
+                    prev = json.loads(path.read_text())
+                    if prev.get("ok"):
+                        print(f"[CACHED] {arch} x {shape} x {mk}")
+                        continue
+                rec = run_cell(arch, shape, mk, out_dir, unroll=args.unroll,
+                               moe_impl=args.moe_impl, suffix=args.suffix,
+                               act_sharding=not args.no_act_sharding)
+                n_fail += (not rec["ok"])
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""Compiled-HLO collective parsing (no jax device-state side effects).
+
+Resolves while-loop trip counts so collectives inside scan bodies are
+counted once per executed iteration, and converts tensor sizes to ring-
+algorithm bytes-on-the-wire.
+"""
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[2,16,4096]' -> bytes.  Tuple shapes '(f32[..], s32[..])' summed."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _wire_factor(kind: str, group: int) -> float:
+    """Ring-algorithm bytes-on-the-wire per participating device, as a factor
+    of the op's *full* (gathered/reduced) tensor size."""
+    if group <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (group - 1) / group
+    if kind == "all-gather":
+        return (group - 1) / group
+    if kind == "reduce-scatter":
+        return (group - 1) / group
+    if kind == "all-to-all":
+        return (group - 1) / group
+    if kind == "collective-permute":
+        return 1.0
+    return 1.0
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Parse the compiled (post-SPMD) HLO, resolving while-loop trip counts so
+    scan-body collectives multiply by their execution count."""
+    # 1. split into computations (greedy ".*" so nested parens in tuple-typed
+    # parameter lists don't cut the match before the "-> ")
+    comps = {}
+    names = []
+    for m in re.finditer(r"^(ENTRY )?%?([\w\.\-]+) \(.*\) -> ", hlo, re.M):
+        names.append((m.group(2), m.start(), bool(m.group(1))))
+    for i, (name, start, is_entry) in enumerate(names):
+        end = names[i + 1][1] if i + 1 < len(names) else len(hlo)
+        comps[name] = hlo[start:end]
+    entry = next((n for n, _, e in names if e), names[-1][0] if names else "")
+
+    # 2. while ops: body/condition computation names + trip count
+    body_trip = {}
+    for name, text in comps.items():
+        for m in re.finditer(
+                r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)",
+                text):
+            cond_name, body_name = m.group(1), m.group(2)
+            cond_text = comps.get(cond_name, "")
+            consts = [int(c) for c in re.findall(r"constant\((\d+)\)", cond_text)]
+            trip = max(consts) if consts else 1
+            body_trip.setdefault(body_name, (name, trip))
+
+    # 3. propagate multipliers from entry
+    mult = {entry: 1.0}
+    changed = True
+    while changed:
+        changed = False
+        for body_name, (parent, trip) in body_trip.items():
+            if parent in mult:
+                v = mult[parent] * trip
+                if mult.get(body_name) != v:
+                    mult[body_name] = v
+                    changed = True
+        # computations called via call/fusion inherit parent's multiplier
+        for name, text in comps.items():
+            if name not in mult:
+                continue
+            for m in re.finditer(r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)",
+                                 text):
+                callee = m.group(1)
+                if callee in body_trip:
+                    continue
+                v = mult[name]
+                if mult.get(callee, 0) < v:
+                    mult[callee] = v
+                    changed = True
+
+    # 4. sum collective bytes
+    out = {k: {"count": 0, "exec": 0.0, "bytes_raw": 0.0, "bytes_wire": 0.0}
+           for k in _COLLECTIVES}
+    schedule = []
+    for name, text in comps.items():
+        m_comp = mult.get(name, 1.0)
+        for line in text.splitlines():
+            # result type may be a tuple and may carry layout braces {0,1}
+            lm = re.search(r"=\s*((?:\([^)]*\))|(?:[\w\[\],]+))(?:\{[^}]*\})?\s+"
+                           r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                           r"collective-permute)(?:-start|-done)?\(", line)
+            if not lm:
+                continue
+            if "-done(" in line:
+                continue  # count the -start, skip the -done
+            shape_str, kind = lm.group(1), lm.group(2)
+            nbytes = _shape_bytes(shape_str)
+            gm = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+            if gm:
+                group = len(gm.group(1).split(","))
+            else:
+                gm2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+                group = int(gm2.group(2)) if gm2 else 2
+            wire = nbytes * _wire_factor(kind, group)
+            out[kind]["count"] += 1
+            out[kind]["exec"] += m_comp
+            out[kind]["bytes_raw"] += nbytes * m_comp
+            out[kind]["bytes_wire"] += wire * m_comp
+            if len(schedule) < 200:
+                schedule.append({"kind": kind, "bytes": nbytes, "group": group,
+                                 "mult": m_comp, "comp": name})
+    total_wire = sum(v["bytes_wire"] for v in out.values())
+    return {"per_kind": out, "total_wire_bytes": total_wire, "schedule": schedule}
+
+

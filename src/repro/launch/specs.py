@@ -1,0 +1,56 @@
+"""Abstract input specs (ShapeDtypeStruct) per (arch x shape cell).
+
+No allocation — the dry-run lowers against these.  Modality frontends are
+stubs per the assignment: whisper gets precomputed frame embeddings
+(``enc_embeds``), llava gets precomputed patch embeddings (``image_embeds``).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, SDS]:
+    """Inputs of one train/prefill step (the ``batch`` argument)."""
+    B, S = cell.global_batch, cell.seq_len
+    if cfg.family == "encdec":
+        dec_len = max(1, int(S * cfg.encdec.decoder_len_ratio))
+        return {
+            "enc_embeds": SDS((B, S, cfg.d_model), jnp.float32),
+            "dec_tokens": SDS((B, dec_len), jnp.int32),
+        }
+    if cfg.num_image_patches:
+        n_img = cfg.num_image_patches
+        return {
+            "tokens": SDS((B, S - n_img), jnp.int32),
+            "image_embeds": SDS((B, n_img, cfg.d_model), jnp.float32),
+        }
+    return {"tokens": SDS((B, S), jnp.int32)}
+
+
+def decode_specs(model, cfg: ModelConfig, cell: ShapeCell
+                 ) -> Tuple[Dict[str, SDS], Dict[str, SDS]]:
+    """(cache_specs, step_inputs) for one decode step with a KV cache of
+    ``cell.seq_len``."""
+    B, S = cell.global_batch, cell.seq_len
+    if cfg.family == "encdec":
+        dec_len = S
+        cache = model.cache_specs(B, dec_len, enc_len=S)
+    else:
+        cache = model.cache_specs(B, S)
+    inputs = {"tokens": SDS((B,), jnp.int32), "lengths": SDS((B,), jnp.int32)}
+    return cache, inputs
+
+
+def input_specs(model, cfg: ModelConfig, cell: ShapeCell) -> Dict[str, SDS]:
+    """All abstract inputs for the cell's step function (flat dict)."""
+    if cell.kind in ("train", "prefill"):
+        return batch_specs(cfg, cell)
+    cache, inputs = decode_specs(model, cfg, cell)
+    return {**{f"cache/{k}": v for k, v in cache.items()}, **inputs}

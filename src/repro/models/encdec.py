@@ -1,0 +1,318 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_enc, d_model) supplied by
+``input_specs()``.  LayerNorm (with bias) + GELU MLP + absolute positions
+(sinusoidal encoder / learned decoder), matching whisper; projection biases
+are applied on q/v/out as in the original (k has none).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import ParamSpec
+
+
+def sinusoids(length: int, channels: int) -> jax.Array:
+    """Whisper sinusoidal position embedding (length, channels)."""
+    log_timescale = np.log(10000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2, dtype=jnp.float32))
+    t = jnp.arange(length, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(t), jnp.cos(t)], axis=1)
+
+
+class EncDecLM:
+    MAX_DEC_POSITIONS = 32768  # covers decode_32k; long_500k is skipped (full attn)
+
+    def __init__(self, cfg: ModelConfig, *, attention_impl: str = "xla",
+                 moe_impl: Optional[str] = None):
+        assert cfg.encdec is not None
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # ------------------------------------------------------------------
+    def _attn_specs(self, prefix: str, *, k_bias: bool = False) -> Dict[str, ParamSpec]:
+        cfg = self.cfg
+        D, H, Dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+        specs = {
+            f"{prefix}/wq": ParamSpec((D, H, Dh), ("embed", "heads", "qk_dim")),
+            f"{prefix}/bq": ParamSpec((H, Dh), ("heads", "qk_dim"), init="zeros"),
+            f"{prefix}/wk": ParamSpec((D, H, Dh), ("embed", "heads", "qk_dim")),
+            f"{prefix}/wv": ParamSpec((D, H, Dh), ("embed", "heads", "qk_dim")),
+            f"{prefix}/bv": ParamSpec((H, Dh), ("heads", "qk_dim"), init="zeros"),
+            f"{prefix}/wo": ParamSpec((H, Dh, D), ("heads", "qk_dim", "embed")),
+            f"{prefix}/bo": ParamSpec((D,), ("embed",), init="zeros"),
+        }
+        return specs
+
+    def _ln_specs(self, prefix: str) -> Dict[str, ParamSpec]:
+        D = self.cfg.d_model
+        return {f"{prefix}/w": ParamSpec((D,), ("embed",), init="ones"),
+                f"{prefix}/b": ParamSpec((D,), ("embed",), init="zeros")}
+
+    def param_specs(self) -> Dict[str, ParamSpec]:
+        cfg = self.cfg
+        specs: Dict[str, ParamSpec] = {
+            "embed/tokens": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed")),
+            "embed/dec_pos": ParamSpec((self.MAX_DEC_POSITIONS, cfg.d_model),
+                                       ("cache_seq", "embed")),
+        }
+        specs.update(self._ln_specs("enc/final_ln"))
+        specs.update(self._ln_specs("dec/final_ln"))
+        ne = cfg.encdec.num_encoder_layers
+        nd = cfg.num_layers
+
+        def stack(d: Dict[str, ParamSpec], n: int) -> Dict[str, ParamSpec]:
+            return {k: ParamSpec((n,) + sp.shape, ("layers",) + sp.axes,
+                                 init=sp.init, dtype=sp.dtype) for k, sp in d.items()}
+
+        enc_layer: Dict[str, ParamSpec] = {}
+        enc_layer.update(self._ln_specs("enc/l/attn_ln"))
+        enc_layer.update(self._attn_specs("enc/l/attn"))
+        enc_layer.update(self._ln_specs("enc/l/mlp_ln"))
+        enc_layer.update(L.gelu_mlp_specs(cfg, "enc/l/mlp"))
+        specs.update(stack(enc_layer, ne))
+
+        dec_layer: Dict[str, ParamSpec] = {}
+        dec_layer.update(self._ln_specs("dec/l/self_ln"))
+        dec_layer.update(self._attn_specs("dec/l/self"))
+        dec_layer.update(self._ln_specs("dec/l/cross_ln"))
+        dec_layer.update(self._attn_specs("dec/l/cross"))
+        dec_layer.update(self._ln_specs("dec/l/mlp_ln"))
+        dec_layer.update(L.gelu_mlp_specs(cfg, "dec/l/mlp"))
+        specs.update(stack(dec_layer, nd))
+        return specs
+
+    def init_shapes(self) -> Dict[str, jax.ShapeDtypeStruct]:
+        return {k: jax.ShapeDtypeStruct(sp.shape, sp.dtype or self.dtype)
+                for k, sp in self.param_specs().items()}
+
+    def logical_axes(self) -> Dict[str, tuple]:
+        return {k: sp.axes for k, sp in self.param_specs().items()}
+
+    def init(self, rng: jax.Array) -> Dict[str, jax.Array]:
+        return {name: L.init_leaf(sp, jax.random.fold_in(rng, hash(name) % (2 ** 31)),
+                                  self.dtype)
+                for name, sp in sorted(self.param_specs().items())}
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _attn(p: dict, prefix: str, xq: jax.Array, xk: jax.Array,
+              mask: Optional[jax.Array], *, causal: bool = False) -> jax.Array:
+        q = jnp.einsum("bsd,dhe->bshe", xq, p[f"{prefix}/wq"]) + p[f"{prefix}/bq"]
+        k = jnp.einsum("bsd,dhe->bshe", xk, p[f"{prefix}/wk"])
+        v = jnp.einsum("bsd,dhe->bshe", xk, p[f"{prefix}/wv"]) + p[f"{prefix}/bv"]
+        if mask is None:
+            # q-chunked for long sequences (whisper encoder at 32k would
+            # otherwise materialize (H, S, S) logits: ~50 GB/layer)
+            B, Sq = q.shape[0], q.shape[1]
+            Sk = k.shape[1]
+            qpos = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+            kpos = jnp.broadcast_to(jnp.arange(Sk)[None], (B, Sk))
+            out = L.causal_attention(q, k, v, qpos, kpos, causal=causal)
+        else:
+            out = L.gqa_attention(q, k, v, mask)
+        return jnp.einsum("bshe,hed->bsd", out, p[f"{prefix}/wo"]) + p[f"{prefix}/bo"]
+
+    def _stack_params(self, params: dict, prefix: str) -> dict:
+        return {k: v for k, v in params.items() if k.startswith(prefix)}
+
+    def encode(self, params: dict, enc_embeds: jax.Array) -> jax.Array:
+        """enc_embeds: (B, S_enc, D) precomputed frame embeddings (stub frontend)."""
+        cfg = self.cfg
+        x = enc_embeds.astype(self.dtype)
+        S = x.shape[1]
+        x = x + sinusoids(S, cfg.d_model).astype(self.dtype)[None]
+        enc_params = self._stack_params(params, "enc/l/")
+
+        def body(x, lp):
+            h = L.layer_norm(x, lp["enc/l/attn_ln/w"], lp["enc/l/attn_ln/b"], cfg.norm_eps)
+            x = x + self._attn(lp, "enc/l/attn", h, h, mask=None)
+            h = L.layer_norm(x, lp["enc/l/mlp_ln/w"], lp["enc/l/mlp_ln/b"], cfg.norm_eps)
+            x = x + L.gelu_mlp_apply(lp, "enc/l/mlp", h)
+            return x, None
+
+        if cfg.scan_layers:
+            body_r = jax.checkpoint(body) if cfg.remat != "nothing" else body
+            x, _ = jax.lax.scan(body_r, x, enc_params)
+        else:
+            n = params["enc/l/attn/wq"].shape[0]
+            for r in range(n):
+                x, _ = body(x, {k: v[r] for k, v in enc_params.items()})
+        return L.layer_norm(x, params["enc/final_ln/w"], params["enc/final_ln/b"],
+                            cfg.norm_eps)
+
+    def decode_full(self, params: dict, enc_out: jax.Array, dec_tokens: jax.Array):
+        """Teacher-forced decoder pass (training)."""
+        cfg = self.cfg
+        B, Sd = dec_tokens.shape
+        x = params["embed/tokens"][dec_tokens]
+        x = x + params["embed/dec_pos"][:Sd][None]
+        dec_params = self._stack_params(params, "dec/l/")
+
+        def body(x, lp):
+            h = L.layer_norm(x, lp["dec/l/self_ln/w"], lp["dec/l/self_ln/b"], cfg.norm_eps)
+            x = x + self._attn(lp, "dec/l/self", h, h, None, causal=True)
+            h = L.layer_norm(x, lp["dec/l/cross_ln/w"], lp["dec/l/cross_ln/b"], cfg.norm_eps)
+            x = x + self._attn(lp, "dec/l/cross", h, enc_out, mask=None)
+            h = L.layer_norm(x, lp["dec/l/mlp_ln/w"], lp["dec/l/mlp_ln/b"], cfg.norm_eps)
+            x = x + L.gelu_mlp_apply(lp, "dec/l/mlp", h)
+            return x, None
+
+        if cfg.scan_layers:
+            body_r = jax.checkpoint(body) if cfg.remat != "nothing" else body
+            x, _ = jax.lax.scan(body_r, x, dec_params)
+        else:
+            n = params["dec/l/self/wq"].shape[0]
+            for r in range(n):
+                x, _ = body(x, {k: v[r] for k, v in dec_params.items()})
+        x = L.layer_norm(x, params["dec/final_ln/w"], params["dec/final_ln/b"],
+                         cfg.norm_eps)
+        return jnp.einsum("bsd,vd->bsv", x, params["embed/tokens"])
+
+    def forward(self, params: dict, batch: dict):
+        enc_out = self.encode(params, batch["enc_embeds"])
+        return self.decode_full(params, enc_out, batch["dec_tokens"])
+
+    def loss(self, params: dict, batch: dict):
+        logits = self.forward(params, batch).astype(jnp.float32)
+        targets = batch["dec_tokens"][:, 1:]
+        logits = logits[:, :-1]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        loss = jnp.mean(logz - tgt)
+        return loss, {"loss": loss, "aux_loss": jnp.zeros((), jnp.float32),
+                      "total_loss": loss}
+
+    # ------------------------------------------------------------------
+    # Serving: prefill computes encoder states + cross K/V, decode steps.
+    # ------------------------------------------------------------------
+    def cache_specs(self, batch: int, max_len: int, enc_len: int
+                    ) -> Dict[str, jax.ShapeDtypeStruct]:
+        cfg = self.cfg
+        nd = cfg.num_layers
+        H, Dh = cfg.num_heads, cfg.head_dim
+        return {
+            "dec/k": jax.ShapeDtypeStruct((nd, batch, max_len, H, Dh), self.dtype),
+            "dec/v": jax.ShapeDtypeStruct((nd, batch, max_len, H, Dh), self.dtype),
+            "cross/k": jax.ShapeDtypeStruct((nd, batch, enc_len, H, Dh), self.dtype),
+            "cross/v": jax.ShapeDtypeStruct((nd, batch, enc_len, H, Dh), self.dtype),
+        }
+
+    def cache_axes(self) -> Dict[str, tuple]:
+        a = ("layers", "batch", "cache_seq", "heads", "qk_dim")
+        return {"dec/k": a, "dec/v": a, "cross/k": a, "cross/v": a}
+
+    def prefill(self, params: dict, enc_embeds: jax.Array, dec_tokens: jax.Array,
+                *, max_len: Optional[int] = None):
+        """Encode + teacher-forced decoder prefill.  Returns (last logits,
+        cache, lengths)."""
+        cfg = self.cfg
+        B, Sd = dec_tokens.shape
+        max_len = max_len or Sd
+        enc_out = self.encode(params, enc_embeds)
+        dec_params = self._stack_params(params, "dec/l/")
+
+        # cross K/V once per layer
+        def cross_kv(lp):
+            k = jnp.einsum("bsd,dhe->bshe", enc_out, lp["dec/l/cross/wk"])
+            v = jnp.einsum("bsd,dhe->bshe", enc_out, lp["dec/l/cross/wv"]) + lp["dec/l/cross/bv"]
+            return k, v
+
+        cross_k, cross_v = jax.vmap(cross_kv)(dec_params)          # (nd, B, S_enc, H, Dh)
+
+        x = params["embed/tokens"][dec_tokens] + params["embed/dec_pos"][:Sd][None]
+        positions = jnp.broadcast_to(jnp.arange(Sd)[None, :], (B, Sd))
+
+        def body(x, xs):
+            lp, ck, cv = xs
+            h = L.layer_norm(x, lp["dec/l/self_ln/w"], lp["dec/l/self_ln/b"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dhe->bshe", h, lp["dec/l/self/wq"]) + lp["dec/l/self/bq"]
+            k = jnp.einsum("bsd,dhe->bshe", h, lp["dec/l/self/wk"])
+            v = jnp.einsum("bsd,dhe->bshe", h, lp["dec/l/self/wv"]) + lp["dec/l/self/bv"]
+            attn = L.causal_attention(q, k, v, positions, positions, causal=True)
+            x = x + jnp.einsum("bshe,hed->bsd", attn, lp["dec/l/self/wo"]) + lp["dec/l/self/bo"]
+            h = L.layer_norm(x, lp["dec/l/cross_ln/w"], lp["dec/l/cross_ln/b"], cfg.norm_eps)
+            qc = jnp.einsum("bsd,dhe->bshe", h, lp["dec/l/cross/wq"]) + lp["dec/l/cross/bq"]
+            qp = jnp.broadcast_to(jnp.arange(qc.shape[1])[None], qc.shape[:2])
+            kp = jnp.broadcast_to(jnp.arange(ck.shape[1])[None], ck.shape[:2])
+            attn_c = L.causal_attention(qc, ck, cv, qp, kp, causal=False)
+            x = x + jnp.einsum("bshe,hed->bsd", attn_c, lp["dec/l/cross/wo"]) + lp["dec/l/cross/bo"]
+            h = L.layer_norm(x, lp["dec/l/mlp_ln/w"], lp["dec/l/mlp_ln/b"], cfg.norm_eps)
+            x = x + L.gelu_mlp_apply(lp, "dec/l/mlp", h)
+            pad = max_len - k.shape[1]
+            kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return x, (kp, vp)
+
+        if cfg.scan_layers:
+            x, (dk, dv) = jax.lax.scan(body, x, (dec_params, cross_k, cross_v))
+        else:
+            nd = cfg.num_layers
+            dks, dvs = [], []
+            for r in range(nd):
+                lp = {k: v[r] for k, v in dec_params.items()}
+                x, (kp, vp) = body(x, (lp, cross_k[r], cross_v[r]))
+                dks.append(kp)
+                dvs.append(vp)
+            dk, dv = jnp.stack(dks), jnp.stack(dvs)
+
+        x = L.layer_norm(x, params["dec/final_ln/w"], params["dec/final_ln/b"], cfg.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", x[:, -1], params["embed/tokens"])
+        cache = {"dec/k": dk, "dec/v": dv, "cross/k": cross_k, "cross/v": cross_v}
+        return logits, cache, jnp.full((B,), Sd, jnp.int32)
+
+    def decode_step(self, params: dict, cache: dict, tokens: jax.Array,
+                    lengths: jax.Array):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        pos = jnp.clip(lengths, 0, self.MAX_DEC_POSITIONS - 1)
+        x = params["embed/tokens"][tokens][:, None, :] + params["embed/dec_pos"][pos][:, None, :]
+        dec_params = self._stack_params(params, "dec/l/")
+        Sk = cache["dec/k"].shape[2]
+        kpos = jnp.arange(Sk)[None, :]
+        mask = (kpos <= lengths[:, None])[:, None, :]
+
+        def body(x, xs):
+            lp, ck_self, cv_self, ck, cv = xs
+            h = L.layer_norm(x, lp["dec/l/self_ln/w"], lp["dec/l/self_ln/b"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dhe->bshe", h, lp["dec/l/self/wq"]) + lp["dec/l/self/bq"]
+            k = jnp.einsum("bsd,dhe->bshe", h, lp["dec/l/self/wk"])
+            v = jnp.einsum("bsd,dhe->bshe", h, lp["dec/l/self/wv"]) + lp["dec/l/self/bv"]
+            ck_self = ck_self.at[jnp.arange(B), lengths].set(k[:, 0])
+            cv_self = cv_self.at[jnp.arange(B), lengths].set(v[:, 0])
+            attn = L.gqa_attention(q, ck_self, cv_self, mask)
+            x = x + jnp.einsum("bshe,hed->bsd", attn, lp["dec/l/self/wo"]) + lp["dec/l/self/bo"]
+            h = L.layer_norm(x, lp["dec/l/cross_ln/w"], lp["dec/l/cross_ln/b"], cfg.norm_eps)
+            qc = jnp.einsum("bsd,dhe->bshe", h, lp["dec/l/cross/wq"]) + lp["dec/l/cross/bq"]
+            attn_c = L.mha_cross_attention(qc, ck, cv)
+            x = x + jnp.einsum("bshe,hed->bsd", attn_c, lp["dec/l/cross/wo"]) + lp["dec/l/cross/bo"]
+            h = L.layer_norm(x, lp["dec/l/mlp_ln/w"], lp["dec/l/mlp_ln/b"], cfg.norm_eps)
+            x = x + L.gelu_mlp_apply(lp, "dec/l/mlp", h)
+            return x, (ck_self, cv_self)
+
+        xs = (dec_params, cache["dec/k"], cache["dec/v"], cache["cross/k"], cache["cross/v"])
+        if cfg.scan_layers:
+            x, (dk, dv) = jax.lax.scan(body, x, xs)
+        else:
+            nd = cfg.num_layers
+            dks, dvs = [], []
+            for r in range(nd):
+                x, (kc, vc) = body(x, ({k: v[r] for k, v in dec_params.items()},
+                                       cache["dec/k"][r], cache["dec/v"][r],
+                                       cache["cross/k"][r], cache["cross/v"][r]))
+                dks.append(kc)
+                dvs.append(vc)
+            dk, dv = jnp.stack(dks), jnp.stack(dvs)
+
+        x = L.layer_norm(x, params["dec/final_ln/w"], params["dec/final_ln/b"], cfg.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", x[:, 0], params["embed/tokens"])
+        new_cache = dict(cache)
+        new_cache["dec/k"], new_cache["dec/v"] = dk, dv
+        return logits, new_cache, lengths + 1

@@ -1,0 +1,17 @@
+"""arch-id -> model builder."""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+
+
+def build_model(cfg: ModelConfig, *, moe_impl: Optional[str] = None,
+                attention_impl: str = "xla"):
+    if cfg.family == "encdec":
+        from repro.models.encdec import EncDecLM
+
+        return EncDecLM(cfg, attention_impl=attention_impl, moe_impl=moe_impl)
+    from repro.models.transformer import DecoderLM
+
+    return DecoderLM(cfg, moe_impl=moe_impl, attention_impl=attention_impl)

@@ -1,0 +1,229 @@
+"""Mamba-2 SSD (state-space duality) block — chunked training/prefill form and
+O(1) decode recurrence.  [arXiv:2405.21060]
+
+Used by ``mamba2-2.7b`` (pure SSM) and ``jamba-v0.1-52b`` (hybrid).  Jamba
+v0.1 historically used Mamba-1 (S6); we standardize on the SSD block — a
+TPU-friendlier formulation whose chunked intra/inter decomposition maps to
+MXU matmuls (hardware-adaptation note in DESIGN.md).
+
+Shapes: d_inner = expand * d_model; H = d_inner // head_dim SSD heads of dim
+P = head_dim; state N = d_state; G = ngroups shared B/C projections.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.layers import ParamSpec, rms_norm
+
+
+def ssm_dims(cfg: ModelConfig):
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.ngroups * s.d_state
+    return d_inner, H, conv_dim
+
+
+def ssm_specs(cfg: ModelConfig, prefix: str) -> dict:
+    s: SSMConfig = cfg.ssm
+    D = cfg.d_model
+    d_inner, H, conv_dim = ssm_dims(cfg)
+    in_dim = 2 * d_inner + 2 * s.ngroups * s.d_state + H
+    return {
+        f"{prefix}/w_in": ParamSpec((D, in_dim), ("embed", "ssm_inner")),
+        f"{prefix}/conv_w": ParamSpec((s.d_conv, conv_dim), ("conv_w", "ssm_inner"), init="normal"),
+        f"{prefix}/conv_b": ParamSpec((conv_dim,), ("ssm_inner",), init="zeros"),
+        f"{prefix}/a_log": ParamSpec((H,), ("ssm_heads",), init="ones"),
+        f"{prefix}/d_skip": ParamSpec((H,), ("ssm_heads",), init="ones"),
+        f"{prefix}/dt_bias": ParamSpec((H,), ("ssm_heads",), init="zeros"),
+        f"{prefix}/norm_w": ParamSpec((d_inner,), ("ssm_inner",), init="ones"),
+        f"{prefix}/w_out": ParamSpec((d_inner, D), ("ssm_inner", "embed")),
+    }
+
+
+def _split_in_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    s = cfg.ssm
+    d_inner, H, _ = ssm_dims(cfg)
+    gn = s.ngroups * s.d_state
+    z, xc, b, c, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + gn, 2 * d_inner + 2 * gn], axis=-1)
+    return z, xc, b, c, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv1d.  x: (B, L, C); w: (W, C); state: (B, W-1, C)
+    holds the trailing inputs of the previous segment (decode).  Returns
+    (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)                       # (B, L+W-1, C)
+    # y[t] = sum_k w[k] * xp[t+k]
+    y = sum(xp[:, k:k + x.shape[1], :] * w[k][None, None, :] for k in range(W))
+    y = y + b
+    new_state = xp[:, -(W - 1):, :] if W > 1 else state
+    return y, new_state
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array,
+                b: jax.Array, c: jax.Array, chunk: int,
+                h0: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x: (B, L, H, P); dt: (B, L, H) (post-softplus); a: (H,) negative;
+    b, c: (B, L, G, N).  Returns (y (B,L,H,P), h_final (B,H,P,N)).
+    All decay math in fp32.
+    """
+    Bsz, L, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    assert L % chunk == 0, f"seq {L} % chunk {chunk} != 0"
+    NC = L // chunk
+    rep = H // G
+
+    xc = x.reshape(Bsz, NC, chunk, H, P)
+    dtc = dt.reshape(Bsz, NC, chunk, H).astype(jnp.float32)
+    bc = b.reshape(Bsz, NC, chunk, G, N)
+    cc = c.reshape(Bsz, NC, chunk, G, N)
+
+    da = dtc * a.astype(jnp.float32)                               # (B,NC,Q,H) <= 0
+    cs = jnp.cumsum(da, axis=2)                                    # inclusive cumsum
+
+    # ---- intra-chunk (quadratic within chunk, matmul-shaped) ----
+    cb = jnp.einsum("bcqgn,bckgn->bcgqk", cc.astype(jnp.float32), bc.astype(jnp.float32))
+    cb = jnp.repeat(cb, rep, axis=2)                               # (B,NC,H,Q,Q)
+    # decay[b,c,h,i,j] = exp(cs[i]-cs[j])
+    cs_h = cs.transpose(0, 1, 3, 2)                                # (B,NC,H,Q)
+    decay = jnp.exp(cs_h[..., :, None] - cs_h[..., None, :])       # (B,NC,H,Q,Q)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    m = jnp.where(causal, cb * decay, 0.0)                         # (B,NC,H,Q,Q)
+    m = m * dtc.transpose(0, 1, 3, 2)[..., None, :]                # * dt_j
+    y_intra = jnp.einsum("bchik,bckhp->bcihp", m, xc.astype(jnp.float32))
+
+    # ---- chunk states ----
+    decay_states = jnp.exp(cs_h[..., -1:] - cs_h)                  # (B,NC,H,Q)
+    bg = jnp.repeat(bc.astype(jnp.float32), rep, axis=3)           # (B,NC,Q,H,N)
+    bx = jnp.einsum("bckhn,bckh,bckhp->bchpn",
+                    bg,
+                    (dtc * decay_states.transpose(0, 1, 3, 2)),
+                    xc.astype(jnp.float32))                        # (B,NC,H,P,N)
+
+    # ---- inter-chunk recurrence over NC chunks ----
+    chunk_decay = jnp.exp(cs_h[..., -1])                           # (B,NC,H)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        s_c, dec = inp                                             # (B,H,P,N), (B,H)
+        h_prev = h
+        h = h * dec[..., None, None] + s_c
+        return h, h_prev
+
+    h_final, h_prevs = jax.lax.scan(
+        step, h0,
+        (bx.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))           # scan over NC
+    h_prevs = h_prevs.swapaxes(0, 1)                               # (B,NC,H,P,N)
+
+    # ---- inter-chunk output ----
+    state_decay = jnp.exp(cs_h)                                    # (B,NC,H,Q)
+    cg = jnp.repeat(cc.astype(jnp.float32), rep, axis=3)           # (B,NC,Q,H,N)
+    y_inter = jnp.einsum("bcqhn,bchpn,bchq->bcqhp", cg, h_prevs,
+                         state_decay)
+    y = (y_intra + y_inter).reshape(Bsz, L, H, P)
+    return y, h_final
+
+
+def ssm_apply(cfg: ModelConfig, p: dict, prefix: str, x: jax.Array,
+              conv_state: Optional[jax.Array] = None,
+              ssd_state: Optional[jax.Array] = None,
+              return_state: bool = False):
+    """Full Mamba-2 block over a sequence.  x: (B, L, D)."""
+    s: SSMConfig = cfg.ssm
+    d_inner, H, conv_dim = ssm_dims(cfg)
+    P, N, G = s.head_dim, s.d_state, s.ngroups
+
+    zxbcdt = jnp.einsum("bld,de->ble", x, p[f"{prefix}/w_in"])
+    z, xc, b, c, dt = _split_in_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xc, b, c], axis=-1)                 # (B,L,conv_dim)
+    conv_out, new_conv_state = _causal_conv(conv_in, p[f"{prefix}/conv_w"],
+                                            p[f"{prefix}/conv_b"], conv_state)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xc, b, c = jnp.split(conv_out, [d_inner, d_inner + G * N], axis=-1)
+
+    Bsz, L, _ = x.shape
+    from repro.parallel.sharding import constrain
+
+    xh = constrain(xc.reshape(Bsz, L, H, P), ("batch", None, "ssm_heads", None))
+    bh = b.reshape(Bsz, L, G, N)
+    ch = c.reshape(Bsz, L, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p[f"{prefix}/dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p[f"{prefix}/a_log"].astype(jnp.float32))
+
+    chunk = min(s.chunk_size, L)
+    pad = (-L) % chunk
+    if pad:
+        # zero-pad the tail: dt=0 => decay 1 and zero input contribution, so
+        # padded positions never affect earlier outputs or the final state.
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bh = jnp.pad(bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        ch = jnp.pad(ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    y, h_final = ssd_chunked(xh, dt, a, bh, ch, chunk, ssd_state)
+    if pad:
+        y = y[:, :L]
+        xh = xh[:, :L]
+    y = y + xh.astype(jnp.float32) * p[f"{prefix}/d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(Bsz, L, d_inner).astype(x.dtype)
+
+    # gated norm + out projection
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, p[f"{prefix}/norm_w"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, p[f"{prefix}/w_out"])
+    if return_state:
+        return out, (new_conv_state, h_final)
+    return out
+
+
+def ssm_decode_step(cfg: ModelConfig, p: dict, prefix: str, x: jax.Array,
+                    conv_state: jax.Array, ssd_state: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token recurrence.  x: (B, 1, D); conv_state: (B, W-1, conv_dim);
+    ssd_state: (B, H, P, N) fp32.  Returns (y (B,1,D), conv_state, ssd_state)."""
+    s: SSMConfig = cfg.ssm
+    d_inner, H, conv_dim = ssm_dims(cfg)
+    P, N, G = s.head_dim, s.d_state, s.ngroups
+    Bsz = x.shape[0]
+
+    zxbcdt = jnp.einsum("bld,de->ble", x, p[f"{prefix}/w_in"])
+    z, xc, b, c, dt = _split_in_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xc, b, c], axis=-1)                 # (B,1,conv_dim)
+    conv_out, new_conv_state = _causal_conv(conv_in, p[f"{prefix}/conv_w"],
+                                            p[f"{prefix}/conv_b"], conv_state)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xc, b, c = jnp.split(conv_out, [d_inner, d_inner + G * N], axis=-1)
+
+    xh = xc.reshape(Bsz, H, P).astype(jnp.float32)
+    bh = b.reshape(Bsz, G, N).astype(jnp.float32)
+    ch = c.reshape(Bsz, G, N).astype(jnp.float32)
+    rep = H // G
+    bh = jnp.repeat(bh, rep, axis=1)                               # (B,H,N)
+    ch = jnp.repeat(ch, rep, axis=1)
+
+    dt1 = jax.nn.softplus(dt.astype(jnp.float32)[:, 0, :] + p[f"{prefix}/dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p[f"{prefix}/a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt1 * a[None, :])                              # (B,H)
+
+    new_state = (ssd_state * decay[..., None, None]
+                 + jnp.einsum("bh,bhp,bhn->bhpn", dt1, xh, bh))
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, ch)
+    y = y + xh * p[f"{prefix}/d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(Bsz, 1, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, p[f"{prefix}/norm_w"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, p[f"{prefix}/w_out"])
+    return out, new_conv_state, new_state

@@ -1,0 +1,9 @@
+from repro.optim.adamw import AdamW, AdamWConfig, OptState
+from repro.optim.schedule import cosine_with_warmup
+from repro.optim.grad_compress import (
+    CompressionState,
+    ef_int8_compress,
+    ef_int8_decompress,
+    init_compression_state,
+    topk_compress,
+)

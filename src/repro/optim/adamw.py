@@ -1,0 +1,81 @@
+"""AdamW with fp32 master weights / moments over bf16 compute params.
+
+Functional: ``init`` builds the state pytree (sharded like the params by the
+caller's in_shardings), ``update`` consumes fp32 grads.  Global-norm clipping
+and decoupled weight decay included.  Norm/bias/scalar leaves (ndim <= 1) are
+excluded from weight decay, matching common practice.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    mu: Dict[str, jax.Array]
+    nu: Dict[str, jax.Array]
+    count: jax.Array
+
+
+class AdamW:
+    def __init__(self, cfg: AdamWConfig, schedule: Callable[[jax.Array], jax.Array]):
+        self.cfg = cfg
+        self.schedule = schedule
+
+    def init(self, params: dict) -> OptState:
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return OptState(mu=zeros,
+                        nu=jax.tree.map(jnp.copy, zeros),
+                        count=jnp.zeros((), jnp.int32))
+
+    def update(self, grads: dict, state: OptState, params: dict
+               ) -> Tuple[dict, OptState, dict]:
+        """grads/params fp32.  Returns (new_params, new_state, metrics)."""
+        cfg = self.cfg
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, cfg.grad_clip_norm / (gnorm + 1e-9))
+        count = state.count + 1
+        lr = self.schedule(count)
+        b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+        def leaf(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m = cfg.b1 * m + (1 - cfg.b1) * g
+            v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+            mhat = m / b1c
+            vhat = v / b2c
+            upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            if p.ndim > 1:
+                upd = upd + cfg.weight_decay * p
+            return p - lr * upd, m, v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state.mu)
+        flat_v = jax.tree.leaves(state.nu)
+        out_p, out_m, out_v = [], [], []
+        for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+            np_, nm, nv = leaf(g, m, v, p)
+            out_p.append(np_)
+            out_m.append(nm)
+            out_v.append(nv)
+        new_params = jax.tree.unflatten(treedef, out_p)
+        new_state = OptState(mu=jax.tree.unflatten(treedef, out_m),
+                             nu=jax.tree.unflatten(treedef, out_v),
+                             count=count)
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_params, new_state, metrics

@@ -1,0 +1,18 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def cosine_with_warmup(peak_lr: float, warmup_steps: int, total_steps: int,
+                       final_ratio: float = 0.1):
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(1, warmup_steps)
+        progress = jnp.clip((step - warmup_steps) / max(1, total_steps - warmup_steps),
+                            0.0, 1.0)
+        cos = final_ratio + (1 - final_ratio) * 0.5 * (1 + jnp.cos(np.pi * progress))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return schedule

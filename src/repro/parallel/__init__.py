@@ -1,0 +1,8 @@
+from repro.parallel.sharding import (
+    RULES_SERVE,
+    RULES_TRAIN,
+    ShardingRules,
+    logical_to_sharding,
+    set_activation_sharder,
+    constrain,
+)

@@ -1,0 +1,2 @@
+from repro.serving.engine import ServingConfig, ServingEngine
+from repro.serving.kv_cache import batch_cache_insert, init_batch_cache

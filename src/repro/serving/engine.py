@@ -1,0 +1,188 @@
+"""Batched serving engine with continuous batching and the CoIC edge cache
+in front of the model — the deployment shape of the paper's Figure 1.
+
+Request lifecycle:
+
+  submit -> [CoIC semantic lookup]  hit  -> result immediately ("edge")
+                                    miss -> admission queue
+  admission: free slot? prefill(prompt) -> scatter into slot
+  every engine step: one decode_step over the whole active batch
+  retirement: EOS or max_new_tokens -> result + CoIC insert ("cloud")
+
+All device work has static shapes (B slots, max_len cache); scheduling is
+host-side, as in vLLM-class systems.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coic import CoICConfig
+from repro.core.descriptor import NgramSketchDescriptor, PrefixDescriptor
+from repro.core.semantic_cache import SemanticCache
+from repro.serving.kv_cache import batch_cache_insert, init_batch_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    max_batch: int = 8
+    max_len: int = 512               # cache capacity per slot
+    max_new_tokens: int = 32
+    eos_id: int = -1                 # -1: no EOS, always run to max_new
+    coic: Optional[CoICConfig] = None
+
+
+@dataclasses.dataclass
+class _Active:
+    req_id: int
+    slot: int
+    generated: list
+    t_admit: float
+
+
+@dataclasses.dataclass
+class ServedResult:
+    req_id: int
+    tokens: np.ndarray
+    source: str                      # edge | cloud
+    latency_s: float
+    decode_steps: int
+
+
+class ServingEngine:
+    def __init__(self, model, params, cfg: ServingConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.queue: deque = deque()
+        self.active: Dict[int, _Active] = {}
+        self.free_slots = list(range(cfg.max_batch))
+        self.results: List[ServedResult] = []
+        self._req_counter = 0
+        self._prompts: Dict[int, np.ndarray] = {}
+
+        B = cfg.max_batch
+        self.cache = init_batch_cache(model, B, cfg.max_len)
+        self.lengths = jnp.zeros((B,), jnp.int32)
+        self.tokens = jnp.zeros((B,), jnp.int32)
+        self.row_active = np.zeros((B,), bool)
+
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self._prefill = jax.jit(
+            lambda p, t: model.prefill(p, t, max_len=cfg.max_len))
+
+        # CoIC front
+        self.coic_cfg = cfg.coic
+        self.semantic = None
+        if cfg.coic is not None:
+            c = cfg.coic
+            if c.descriptor == "prefix":
+                self._descriptor = PrefixDescriptor(model, k_layers=c.k_layers)
+                key_dim = model.cfg.d_model
+                self._desc_fn = jax.jit(lambda p, t: self._descriptor(p, t))
+            else:
+                sk = NgramSketchDescriptor(dim=c.descriptor_dim)
+                key_dim = c.descriptor_dim
+                self._desc_fn = jax.jit(lambda p, t: sk(t))
+            self.semantic = SemanticCache(
+                capacity=c.capacity, key_dim=key_dim,
+                payload_dim=cfg.max_new_tokens, threshold=c.threshold,
+                payload_dtype="int32", policy=c.policy, lookup_impl=c.lookup_impl)
+            self.sem_state = self.semantic.init()
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray) -> int:
+        """prompt: (S,) int32.  Returns request id (result arrives via
+        ``step()`` -> self.results)."""
+        rid = self._req_counter
+        self._req_counter += 1
+        if self.semantic is not None:
+            desc = self._desc_fn(self.params, jnp.asarray(prompt[None, :]))
+            self.sem_state, res = self.semantic.lookup(self.sem_state, desc)
+            if bool(res.hit[0]):
+                toks = np.asarray(res.value[0], np.int32)
+                self.results.append(ServedResult(
+                    req_id=rid, tokens=toks, source="edge", latency_s=0.0,
+                    decode_steps=0))
+                return rid
+        self.queue.append((rid, np.asarray(prompt, np.int32)))
+        return rid
+
+    # ------------------------------------------------------------------
+    def _admit(self) -> None:
+        while self.queue and self.free_slots:
+            rid, prompt = self.queue.popleft()
+            slot = self.free_slots.pop()
+            logits, one_cache, one_len = self._prefill(self.params,
+                                                       jnp.asarray(prompt[None, :]))
+            self.cache = batch_cache_insert(self.cache, one_cache, slot)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)[0]
+            self.tokens = self.tokens.at[slot].set(nxt)
+            self.lengths = self.lengths.at[slot].set(int(one_len[0]))
+            self.row_active[slot] = True
+            self.active[slot] = _Active(req_id=rid, slot=slot,
+                                        generated=[int(nxt)],
+                                        t_admit=time.perf_counter())
+            self._prompts[rid] = prompt
+
+    def _retire(self, slot: int) -> None:
+        a = self.active.pop(slot)
+        toks = np.asarray(a.generated[:self.cfg.max_new_tokens], np.int32)
+        self.results.append(ServedResult(
+            req_id=a.req_id, tokens=toks, source="cloud",
+            latency_s=time.perf_counter() - a.t_admit,
+            decode_steps=len(a.generated)))
+        self.row_active[slot] = False
+        self.free_slots.append(slot)
+        if self.semantic is not None:
+            prompt = self._prompts.pop(a.req_id)
+            desc = self._desc_fn(self.params, jnp.asarray(prompt[None, :]))
+            pad = np.zeros((self.cfg.max_new_tokens,), np.int32)
+            pad[:len(toks)] = toks
+            self.sem_state = self.semantic.insert(
+                self.sem_state, desc, jnp.asarray(pad[None, :]))
+        else:
+            self._prompts.pop(a.req_id, None)
+
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        """One engine iteration: admit + one batched decode step."""
+        self._admit()
+        if not self.active:
+            return
+        logits, self.cache, self.lengths = self._decode(
+            self.params, self.cache, self.tokens, self.lengths)
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        for slot in list(self.active):
+            a = self.active[slot]
+            a.generated.append(int(nxt[slot]))
+            done = (len(a.generated) >= self.cfg.max_new_tokens
+                    or (self.cfg.eos_id >= 0 and nxt[slot] == self.cfg.eos_id)
+                    or int(self.lengths[slot]) >= self.cfg.max_len - 1)
+            if done:
+                self._retire(slot)
+        self.tokens = jnp.asarray(nxt)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[ServedResult]:
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.results
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        out = {
+            "completed": len(self.results),
+            "edge_hits": sum(r.source == "edge" for r in self.results),
+            "cloud": sum(r.source == "cloud" for r in self.results),
+        }
+        if self.semantic is not None:
+            out["semantic"] = self.semantic.stats(self.sem_state)
+        return out

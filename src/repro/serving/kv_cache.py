@@ -1,0 +1,41 @@
+"""Slotted KV-cache management for continuous batching.
+
+The model's cache is a flat dict of stacked leaves with a batch dim at index
+1 (decoder LMs: (layers, B, S, ...); whisper: same).  The engine owns a
+B-slot batch cache; per-request prefill caches (B=1) are scattered into a
+slot on admission and slots are recycled on retirement.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def init_batch_cache(model, batch: int, max_len: int, **kw) -> Dict[str, jax.Array]:
+    specs = model.cache_specs(batch, max_len, **kw)
+    return {k: jnp.zeros(v.shape, v.dtype) for k, v in specs.items()}
+
+
+def batch_cache_insert(batch_cache: Dict[str, jax.Array],
+                       one_cache: Dict[str, jax.Array], slot: int
+                       ) -> Dict[str, jax.Array]:
+    """Write a B=1 prefill cache into slot ``slot`` of the batch cache.
+
+    Leaves may differ in their seq dim (prefill ran at prompt length,
+    the batch cache at max_len): the prefix is written, the tail stays
+    zero (masked out by per-row lengths).
+    """
+    out = {}
+    for k, dst in batch_cache.items():
+        src = one_cache[k]
+        # batch dim is axis 1 ((layers, B, ...)); align seq dim if present
+        if src.shape[2:] != dst.shape[2:]:
+            pads = []
+            for i in range(2, dst.ndim):
+                pads.append((0, dst.shape[i] - src.shape[i]))
+            src = jnp.pad(src, ((0, 0), (0, 0)) + tuple(pads))
+        out[k] = jax.lax.dynamic_update_slice_in_dim(dst, src.astype(dst.dtype),
+                                                     slot, axis=1)
+    return out

@@ -1,0 +1,140 @@
+"""Elastic scaling + failure handling.
+
+At 1000-node scale the failure model is: a host stops heartbeating, its
+chips disappear, and the job must continue on the survivors.  The mechanism
+here is mesh-shape-agnostic and exercised in tests with simulated failures
+on a multi-device host platform:
+
+  1. ``HeartbeatMonitor`` declares hosts dead after ``timeout`` silence.
+  2. The runner rebuilds the mesh on the surviving device set (the data
+     axis shrinks; the model axis is preserved — TP groups must stay whole).
+  3. The latest checkpoint is restored WITH RESHARDING onto the new mesh
+     (checkpoint/checkpointer.py handles device_put with new shardings).
+  4. The deterministic data pipeline replays from the restored step, so no
+     batch is skipped or repeated.
+
+Growth (nodes coming back) is the same path with a larger mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.pipeline import SyntheticLMData, shard_batch
+from repro.launch.mesh import make_mesh
+from repro.parallel.sharding import RULES_TRAIN, set_activation_sharder
+from repro.train.trainer import (TrainerConfig, TrainState, make_train_step,
+                                 make_optimizer)
+
+
+class SimulatedFailure(Exception):
+    def __init__(self, surviving_data_shards: int):
+        self.surviving_data_shards = surviving_data_shards
+        super().__init__(f"node failure: {surviving_data_shards} data shards survive")
+
+
+class HeartbeatMonitor:
+    def __init__(self, hosts: List[str], timeout_s: float = 60.0):
+        self.timeout_s = timeout_s
+        now = time.monotonic()
+        self.last: Dict[str, float] = {h: now for h in hosts}
+
+    def beat(self, host: str, at: Optional[float] = None) -> None:
+        self.last[host] = time.monotonic() if at is None else at
+
+    def dead(self, now: Optional[float] = None) -> List[str]:
+        now = time.monotonic() if now is None else now
+        return [h for h, t in self.last.items() if now - t > self.timeout_s]
+
+    def alive(self, now: Optional[float] = None) -> List[str]:
+        dead = set(self.dead(now))
+        return [h for h in self.last if h not in dead]
+
+
+@dataclasses.dataclass
+class ElasticConfig:
+    data_shards: int                 # initial data-axis size
+    model_shards: int = 1
+    checkpoint_every: int = 5
+    checkpoint_dir: str = "/tmp/repro_elastic_ckpt"
+
+
+class ElasticTrainer:
+    """Drives training across mesh reconfigurations.
+
+    ``failure_schedule``: {step: new_data_shards} — at those steps a failure
+    (or recovery, if larger) is injected; the runner reshapes and resumes
+    from the latest checkpoint.
+    """
+
+    def __init__(self, model, tcfg: TrainerConfig, ecfg: ElasticConfig,
+                 data: SyntheticLMData,
+                 failure_schedule: Optional[Dict[int, int]] = None):
+        self.model = model
+        self.tcfg = tcfg
+        self.ecfg = ecfg
+        self.data = data
+        self.failure_schedule = failure_schedule or {}
+        self.ckpt = Checkpointer(ecfg.checkpoint_dir, keep=2, async_save=False)
+        self.events: List[str] = []
+
+    # ------------------------------------------------------------------
+    def _build(self, data_shards: int):
+        mesh = make_mesh((data_shards, self.ecfg.model_shards), ("data", "model"))
+        axes = self.model.logical_axes()
+        shapes = self.model.init_shapes()
+        p_sh = {k: RULES_TRAIN.sharding_for(axes[k], shapes[k].shape, mesh)
+                for k in shapes}
+        from repro.optim.adamw import OptState
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        state_sh = TrainState(
+            params=p_sh,
+            opt=OptState(mu=dict(p_sh), nu=dict(p_sh),
+                         count=NamedSharding(mesh, P())),
+            step=NamedSharding(mesh, P()))
+        step_fn = jax.jit(make_train_step(self.model, self.tcfg),
+                          in_shardings=(state_sh, None),
+                          out_shardings=(state_sh, None),
+                          donate_argnums=(0,))
+        return mesh, state_sh, step_fn
+
+    def _init_state(self, mesh, state_sh) -> TrainState:
+        from repro.train.trainer import init_train_state
+
+        state = init_train_state(self.model, jax.random.PRNGKey(0), self.tcfg)
+        return jax.device_put(state, state_sh)
+
+    # ------------------------------------------------------------------
+    def run(self, num_steps: int) -> Tuple[TrainState, List[dict]]:
+        shards = self.ecfg.data_shards
+        mesh, state_sh, step_fn = self._build(shards)
+        state = self._init_state(mesh, state_sh)
+        self.ckpt.save(0, state, block=True)
+        history: List[dict] = []
+        step = 0
+        while step < num_steps:
+            if step in self.failure_schedule and self.failure_schedule[step] != shards:
+                shards = self.failure_schedule[step]
+                self.events.append(f"step {step}: reconfigure to {shards} data shards")
+                mesh, state_sh, step_fn = self._build(shards)
+                latest = self.ckpt.latest_step()
+                state = self.ckpt.restore(latest, state, shardings=state_sh)
+                step = latest
+                self.events.append(f"restored step {latest} onto new mesh")
+                continue
+            batch = self.data.batch_at(step)
+            with set_activation_sharder(mesh, RULES_TRAIN):
+                with mesh:
+                    dbatch = shard_batch(batch, mesh, RULES_TRAIN)
+                    state, metrics = step_fn(state, dbatch)
+            history.append({k: float(v) for k, v in metrics.items()})
+            step += 1
+            if step % self.ecfg.checkpoint_every == 0:
+                self.ckpt.save(step, state, block=True)
+        return state, history

@@ -1,0 +1,42 @@
+"""Small pytree utilities shared across the framework."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def tree_param_count(tree: Any) -> int:
+    """Total number of scalar parameters in a pytree of arrays/ShapeDtypeStructs."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(int(np.prod(l.shape)) for l in leaves))
+
+
+def tree_size_bytes(tree: Any) -> int:
+    """Total byte size of a pytree of arrays/ShapeDtypeStructs."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for l in leaves:
+        itemsize = np.dtype(l.dtype).itemsize
+        total += int(np.prod(l.shape)) * itemsize
+    return total
+
+
+def map_with_paths(fn: Callable[[tuple, Any], Any], tree: Any) -> Any:
+    """tree_map where fn receives (path, leaf). Path elements are strings."""
+
+    def _norm(path) -> tuple:
+        out = []
+        for p in path:
+            if hasattr(p, "key"):
+                out.append(str(p.key))
+            elif hasattr(p, "idx"):
+                out.append(str(p.idx))
+            elif hasattr(p, "name"):
+                out.append(str(p.name))
+            else:
+                out.append(str(p))
+        return tuple(out)
+
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(_norm(p), x), tree)

@@ -1,0 +1,31 @@
+import os
+import sys
+
+# Make src/ importable when PYTHONPATH isn't set
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def nprng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_model():
+    """coic-paper scale model + params, shared across tests."""
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config("coic-paper")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params

@@ -1,0 +1,74 @@
+"""Checkpoint/restore: atomicity, retention, async, restore-with-resharding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"params": {"w": jnp.asarray(rng.standard_normal((4, 4)), jnp.float32),
+                       "b": jnp.asarray(rng.standard_normal(4), jnp.float32)},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    ckpt = Checkpointer(str(tmp_path), async_save=False)
+    state = _state()
+    ckpt.save(7, state)
+    restored = ckpt.restore(7, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_then_wait(tmp_path):
+    ckpt = Checkpointer(str(tmp_path), async_save=True)
+    state = _state()
+    ckpt.save(1, state)
+    ckpt.wait()
+    assert ckpt.latest_step() == 1
+    restored = ckpt.restore(1, state)
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+
+
+def test_retention_keeps_newest(tmp_path):
+    ckpt = Checkpointer(str(tmp_path), keep=2, async_save=False)
+    state = _state()
+    for s in (1, 2, 3, 4):
+        ckpt.save(s, state)
+    assert ckpt.steps() == [3, 4]
+
+
+def test_no_tmp_dirs_left(tmp_path):
+    ckpt = Checkpointer(str(tmp_path), async_save=False)
+    ckpt.save(5, _state())
+    assert not list(tmp_path.glob("*.tmp"))
+
+
+def test_restore_with_new_sharding(tmp_path):
+    """Restore placing leaves with explicit (new-mesh) shardings."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = NamedSharding(mesh, P())
+    ckpt = Checkpointer(str(tmp_path), async_save=False)
+    state = _state()
+    ckpt.save(2, state)
+    shardings = jax.tree.map(lambda _: sh, state)
+    restored = ckpt.restore(2, state, shardings=shardings)
+    assert restored["params"]["w"].sharding == sh
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+
+
+def test_restore_missing_leaf_raises(tmp_path):
+    ckpt = Checkpointer(str(tmp_path), async_save=False)
+    state = _state()
+    ckpt.save(3, state)
+    bigger = dict(state)
+    bigger["params"] = dict(state["params"], extra=jnp.zeros(3))
+    with pytest.raises(KeyError):
+        ckpt.restore(3, bigger)

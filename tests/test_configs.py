@@ -1,0 +1,109 @@
+"""Config integrity: every assigned arch loads with its published numbers."""
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, reduced_config, supports_cell
+from repro.models.transformer import build_plan
+
+EXPECTED = {
+    "h2o_danube3_4b": dict(num_layers=24, d_model=3840, num_heads=32,
+                           num_kv_heads=8, d_ff=10240, vocab_size=32000),
+    "granite_20b": dict(num_layers=52, d_model=6144, num_heads=48,
+                        num_kv_heads=1, d_ff=24576, vocab_size=49152),
+    "llama32_1b": dict(num_layers=16, d_model=2048, num_heads=32,
+                       num_kv_heads=8, d_ff=8192, vocab_size=128256),
+    "qwen2_72b": dict(num_layers=80, d_model=8192, num_heads=64,
+                      num_kv_heads=8, d_ff=29568, vocab_size=152064),
+    "mamba2_2p7b": dict(num_layers=64, d_model=2560, vocab_size=50280),
+    "whisper_small": dict(num_layers=12, d_model=768, num_heads=12,
+                          d_ff=3072, vocab_size=51865),
+    "deepseek_v2_lite_16b": dict(num_layers=27, d_model=2048, num_heads=16,
+                                 vocab_size=102400),
+    "granite_moe_3b_a800m": dict(num_layers=32, d_model=1536, num_heads=24,
+                                 num_kv_heads=8, vocab_size=49155),
+    "llava_next_34b": dict(num_layers=60, d_model=7168, num_heads=56,
+                           num_kv_heads=8, d_ff=20480, vocab_size=64000),
+    "jamba_v01_52b": dict(num_layers=32, d_model=4096, num_heads=32,
+                          num_kv_heads=8, d_ff=14336, vocab_size=65536),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_config_numbers(arch):
+    cfg = get_config(arch)
+    for field, want in EXPECTED[arch].items():
+        assert getattr(cfg, field) == want, (arch, field)
+
+
+def test_qwen_has_qkv_bias():
+    assert get_config("qwen2_72b").qkv_bias
+
+
+def test_danube_has_sliding_window():
+    assert get_config("h2o_danube3_4b").sliding_window > 0
+
+
+def test_deepseek_mla_and_moe():
+    cfg = get_config("deepseek_v2_lite_16b")
+    assert cfg.mla is not None and cfg.mla.kv_lora_rank == 512
+    assert cfg.moe.num_experts == 64 and cfg.moe.top_k == 6
+    assert cfg.moe.num_shared_experts == 2
+    assert cfg.moe.first_dense_layers == 1
+
+
+def test_granite_moe_routing():
+    cfg = get_config("granite_moe_3b_a800m")
+    assert cfg.moe.num_experts == 40 and cfg.moe.top_k == 8
+
+
+def test_jamba_interleave():
+    cfg = get_config("jamba_v01_52b")
+    kinds = [cfg.layer_kind(i) for i in range(cfg.num_layers)]
+    assert kinds.count("attn") == 4            # 1:7 over 32 layers
+    assert all(kinds[i] == "attn" for i in (4, 12, 20, 28))
+    moes = [cfg.is_moe_layer(i) for i in range(cfg.num_layers)]
+    assert sum(moes) == 16                     # every other layer
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_plan_covers_all_layers(arch):
+    cfg = get_config(arch)
+    if cfg.family == "encdec":
+        pytest.skip("encdec stacks are explicit")
+    plan = build_plan(cfg)
+    total = sum(len(s.pattern) * s.repeats for s in plan)
+    assert total == cfg.num_layers
+
+
+def test_long_500k_skips_full_attention():
+    cell = SHAPES["long_500k"]
+    runnable = {a: supports_cell(get_config(a), cell)[0] for a in ARCH_IDS}
+    assert runnable["mamba2_2p7b"] and runnable["jamba_v01_52b"]
+    assert runnable["h2o_danube3_4b"]          # SWA => sub-quadratic
+    for full_attn in ("granite_20b", "llama32_1b", "qwen2_72b", "whisper_small",
+                      "deepseek_v2_lite_16b", "granite_moe_3b_a800m",
+                      "llava_next_34b"):
+        assert not runnable[full_attn], full_attn
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_config_same_family(arch):
+    cfg = get_config(arch)
+    red = reduced_config(cfg)
+    assert red.family == cfg.family
+    assert red.d_model <= 128 and red.vocab_size <= 512
+
+
+def test_param_counts_match_billing():
+    """Sanity: full-config parameter counts are near the advertised sizes."""
+    import jax
+
+    expect = {"llama32_1b": (1.0e9, 1.7e9), "qwen2_72b": (70e9, 80e9),
+              "mamba2_2p7b": (2.4e9, 3.0e9), "granite_20b": (18e9, 22e9)}
+    for arch, (lo, hi) in expect.items():
+        cfg = get_config(arch)
+        from repro.models import build_model
+        from repro.utils.tree import tree_param_count
+
+        n = tree_param_count(build_model(cfg).init_shapes())
+        assert lo < n < hi, (arch, n)

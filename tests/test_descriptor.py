@@ -1,0 +1,54 @@
+"""Feature descriptors: unit norm, determinism, semantic behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.descriptor import NgramSketchDescriptor, PrefixDescriptor
+
+
+def test_sketch_unit_norm_and_deterministic(nprng):
+    d = NgramSketchDescriptor(dim=64)
+    toks = jnp.asarray(nprng.integers(0, 1000, size=(4, 32)), jnp.int32)
+    a = np.asarray(d(toks))
+    b = np.asarray(d(toks))
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_allclose(np.linalg.norm(a, axis=1), 1.0, rtol=1e-5)
+
+
+def test_sketch_identical_inputs_similarity_one(nprng):
+    d = NgramSketchDescriptor(dim=64)
+    row = nprng.integers(0, 1000, size=(32,))
+    toks = jnp.asarray(np.stack([row, row]), jnp.int32)
+    desc = np.asarray(d(toks))
+    assert desc[0] @ desc[1] > 0.999
+
+
+def test_sketch_different_inputs_lower_similarity(nprng):
+    d = NgramSketchDescriptor(dim=256)
+    a = nprng.integers(0, 1000, size=(32,))
+    b = nprng.integers(0, 1000, size=(32,))
+    desc = np.asarray(d(jnp.asarray(np.stack([a, b]), jnp.int32)))
+    assert desc[0] @ desc[1] < 0.9
+
+
+def test_prefix_descriptor_tracks_model(tiny_model, nprng):
+    model, params = tiny_model
+    d = PrefixDescriptor(model, k_layers=2)
+    a = nprng.integers(0, 100, size=(32,))
+    b = a.copy()
+    b[-1] = (b[-1] + 7) % 100                      # one-token perturbation
+    c = nprng.integers(0, 100, size=(32,))
+    desc = np.asarray(d(params, jnp.asarray(np.stack([a, b, c]), jnp.int32)))
+    np.testing.assert_allclose(np.linalg.norm(desc, axis=1), 1.0, rtol=1e-5)
+    sim_ab = desc[0] @ desc[1]
+    sim_ac = desc[0] @ desc[2]
+    assert sim_ab > sim_ac                         # perturbation ~ nearer than random
+    assert sim_ab > 0.9
+
+
+def test_prefix_descriptor_cheaper_than_full(tiny_model):
+    """The descriptor prefix runs k << L layers (the paper's 'pre-process')."""
+    model, params = tiny_model
+    assert model.cfg.num_layers >= 4
+    h = model.forward_hidden(params, jnp.zeros((1, 8), jnp.int32), num_layers=2)
+    assert h.shape == (1, 8, model.cfg.d_model)

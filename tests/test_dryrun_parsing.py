@@ -1,0 +1,91 @@
+"""Collective parsing + roofline math used by the dry-run artifacts.
+
+repro.launch.hloparse carries the parsing logic without any jax device-state
+side effects (repro.launch.dryrun sets XLA_FLAGS for 512 host devices, so it
+must never be imported in-process here)."""
+import numpy as np
+import pytest
+
+from repro.launch import hloparse as dr
+
+
+def test_shape_bytes():
+    assert dr._shape_bytes("bf16[2,16,4096]") == 2 * 16 * 4096 * 2
+    assert dr._shape_bytes("f32[128]") == 512
+    assert dr._shape_bytes("(f32[4], s32[4])") == 16 + 16
+    assert dr._shape_bytes("pred[]") == 1
+
+
+def test_wire_factors():
+    assert dr._wire_factor("all-reduce", 16) == pytest.approx(2 * 15 / 16)
+    assert dr._wire_factor("all-gather", 16) == pytest.approx(15 / 16)
+    assert dr._wire_factor("collective-permute", 2) == 1.0
+    assert dr._wire_factor("all-reduce", 1) == 0.0
+
+
+def test_parse_real_compiled_module():
+    """Parse the compiled HLO of a real computation with a scan: single
+    device => zero collectives, but the parser must run cleanly end-to-end."""
+    import jax
+    import jax.numpy as jnp
+
+    def f(x):
+        def body(c, _):
+            return c @ x, None
+        c, _ = jax.lax.scan(body, x, None, length=5)
+        return c.sum()
+
+    compiled = jax.jit(f).lower(jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    out = dr.parse_collectives(compiled.as_text())
+    assert out["total_wire_bytes"] == 0.0
+    assert set(out["per_kind"]) == {"all-gather", "all-reduce", "reduce-scatter",
+                                    "all-to-all", "collective-permute"}
+
+
+def test_trip_count_multiplication():
+    """Hand-written HLO: an all-reduce inside a while body with trip 7."""
+    hlo = """
+HloModule test
+
+%body.1 (p: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %ar = f32[128]{0} all-reduce(f32[128]{0} %x), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %t = (s32[], f32[128]) tuple(%i, %ar)
+}
+
+%cond.1 (p: (s32[], f32[128])) -> pred[] {
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(s32[] %i, s32[] %c), direction=LT
+}
+
+ENTRY %main (a: f32[128]) -> f32[128] {
+  %init = (s32[], f32[128]) tuple(%zero, %a)
+  %w = (s32[], f32[128]) while((s32[], f32[128]) %init), condition=%cond.1, body=%body.1
+  ROOT %out = f32[128]{0} get-tuple-element((s32[], f32[128]) %w), index=1
+}
+"""
+    out = dr.parse_collectives(hlo)
+    ar = out["per_kind"]["all-reduce"]
+    assert ar["count"] == 1
+    assert ar["exec"] == 7.0
+    want_wire = 128 * 4 * (2 * 3 / 4) * 7
+    assert ar["bytes_wire"] == pytest.approx(want_wire)
+
+
+def test_roofline_terms_from_artifacts():
+    """If dry-run artifacts exist, the roofline analyzer must produce finite
+    terms and a dominant bottleneck for every runnable cell."""
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.roofline import load_all
+
+    rows = load_all("single")
+    if not rows:
+        pytest.skip("no dry-run artifacts yet")
+    ran = [r for r in rows if "skipped" not in r and "error" not in r]
+    assert len(ran) >= 10
+    for r in ran:
+        assert r["t_compute_s"] > 0 and np.isfinite(r["t_compute_s"])
+        assert r["dominant"] in ("compute", "memory", "collective")
+        assert 0 < r["useful_ratio"] < 10, r

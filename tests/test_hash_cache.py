@@ -1,0 +1,56 @@
+"""Hash cache (the paper's 3D-model/panorama path) properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hash_cache import HashCache, content_hash
+
+
+def test_content_hash_deterministic_and_distinct():
+    a = np.arange(100, dtype=np.int32)
+    assert content_hash(a) == content_hash(a.copy())
+    b = a.copy()
+    b[50] = -1
+    assert content_hash(a) != content_hash(b)
+    assert content_hash(a) != content_hash(a.astype(np.int64))  # dtype-aware
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 20))
+def test_put_get_roundtrip(n):
+    cache = HashCache(capacity_bytes=1 << 20)
+    arrays = [np.full((8,), i, np.float32) for i in range(n)]
+    for i, a in enumerate(arrays):
+        cache.put(f"k{i}", a)
+    for i, a in enumerate(arrays):
+        got = cache.get(f"k{i}")
+        assert got is not None
+        np.testing.assert_array_equal(np.asarray(got), a)
+
+
+def test_byte_bound_evicts_lru():
+    item = np.zeros((256,), np.float32)            # 1 KiB each
+    cache = HashCache(capacity_bytes=4 * item.nbytes)
+    for i in range(6):
+        cache.put(f"k{i}", item.copy())
+    assert cache.size_bytes <= 4 * item.nbytes
+    assert cache.get("k0") is None and cache.get("k1") is None
+    assert cache.get("k5") is not None
+
+
+def test_get_refreshes_recency():
+    item = np.zeros((64,), np.float32)
+    cache = HashCache(capacity_bytes=3 * item.nbytes)
+    for i in range(3):
+        cache.put(f"k{i}", item.copy())
+    cache.get("k0")                                # refresh k0
+    cache.put("k3", item.copy())                   # evicts k1, not k0
+    assert cache.get("k0") is not None
+    assert cache.get("k1") is None
+
+
+def test_oversized_value_not_stored():
+    cache = HashCache(capacity_bytes=100)
+    cache.put("big", np.zeros((1000,), np.float32))
+    assert cache.get("big") is None
+    assert len(cache) == 0

@@ -1,0 +1,79 @@
+"""Fine-grained per-layer KV-block reuse (paper §4 future work)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.layer_reuse import BlockReuseCache
+from repro.models import build_model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_config("coic-paper"), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_chunked_prefill_matches_full(setup, nprng):
+    """prefill_chunk over blocks == one-shot prefill (same logits + cache)."""
+    cfg, model, params = setup
+    S, Bk = 96, 32
+    toks = nprng.integers(0, cfg.vocab_size, size=(2, S)).astype(np.int32)
+    ref_logits, ref_cache, ref_len = model.prefill(
+        params, jnp.asarray(toks), max_len=S + 8)
+    cache = {k: jnp.zeros(v.shape, v.dtype)
+             for k, v in model.cache_specs(2, S + 8).items()}
+    lengths = jnp.zeros((2,), jnp.int32)
+    for i in range(S // Bk):
+        logits, cache, lengths = model.prefill_chunk(
+            params, jnp.asarray(toks[:, i * Bk:(i + 1) * Bk]), cache, lengths)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
+                               rtol=1e-4, atol=1e-4)
+    for k in ref_cache:
+        np.testing.assert_allclose(np.asarray(cache[k], np.float32),
+                                   np.asarray(ref_cache[k], np.float32),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_exact_block_reuse_identical_logits(setup, nprng):
+    cfg, model, params = setup
+    S, Bk = 128, 32
+    prompt = nprng.integers(0, cfg.vocab_size, size=(S,)).astype(np.int32)
+    brc = BlockReuseCache(model, params, block_size=Bk)
+    lg1, _, _, st1 = brc.prefill(prompt, max_len=S + 16)
+    assert st1["blocks_computed"] == 4
+    lg2, _, _, st2 = brc.prefill(prompt.copy(), max_len=S + 16)
+    assert st2["blocks_exact"] == 3 and st2["blocks_computed"] == 1
+    ref, _, _ = model.prefill(params, jnp.asarray(prompt[None]), max_len=S + 16)
+    np.testing.assert_allclose(np.asarray(lg2), np.asarray(ref[0]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_prefix_reuse_with_changed_suffix(setup, nprng):
+    cfg, model, params = setup
+    S, Bk = 128, 32
+    prompt = nprng.integers(0, cfg.vocab_size, size=(S,)).astype(np.int32)
+    brc = BlockReuseCache(model, params, block_size=Bk)
+    brc.prefill(prompt, max_len=S + 16)
+    p2 = prompt.copy()
+    p2[-Bk:] = nprng.integers(0, cfg.vocab_size, size=(Bk,))
+    lg, _, _, st = brc.prefill(p2, max_len=S + 16)
+    assert st["blocks_exact"] == 3                 # shared prefix reused
+    ref, _, _ = model.prefill(params, jnp.asarray(p2[None]), max_len=S + 16)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(ref[0]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_reuse_rejects_ssm(setup):
+    cfg0 = get_config("mamba2_2p7b")
+    from repro.configs import reduced_config
+
+    cfg = reduced_config(cfg0)
+    model = build_model(cfg)
+    with pytest.raises(ValueError):
+        BlockReuseCache(model, {}, block_size=8)

@@ -1,0 +1,81 @@
+"""Per-arch smoke tests (deliverable f): reduced same-family config, one
+forward/train step on CPU, asserting output shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced_config
+from repro.models import build_model
+
+
+def _batch(cfg, rng, B=2, S=32):
+    if cfg.family == "encdec":
+        return {"enc_embeds": np.asarray(jax.random.normal(rng, (B, S, cfg.d_model)),
+                                         np.float32),
+                "dec_tokens": np.asarray(jax.random.randint(rng, (B, 16), 0,
+                                                            cfg.vocab_size), np.int32)}
+    batch = {"tokens": np.asarray(jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+                                  np.int32)}
+    if cfg.num_image_patches:
+        batch["image_embeds"] = np.asarray(
+            jax.random.normal(rng, (B, cfg.num_image_patches, cfg.d_model)),
+            np.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch, rng):
+    cfg = reduced_config(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(rng)
+    batch = _batch(cfg, rng)
+    if cfg.family == "encdec":
+        logits = model.forward(params, batch)
+        B, Sd = batch["dec_tokens"].shape
+        assert logits.shape == (B, Sd, cfg.vocab_size)
+    else:
+        logits = model.forward(params, batch["tokens"],
+                               image_embeds=batch.get("image_embeds"))
+        B, S = batch["tokens"].shape
+        total = S + cfg.num_image_patches
+        assert logits.shape == (B, total, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step_reduces_nothing_nan(arch, rng):
+    from repro.train.trainer import TrainerConfig, init_train_state, make_train_step
+
+    cfg = reduced_config(get_config(arch))
+    model = build_model(cfg)
+    tcfg = TrainerConfig(peak_lr=1e-3, warmup_steps=1, total_steps=10)
+    state = init_train_state(model, rng, tcfg)
+    step = jax.jit(make_train_step(model, tcfg))
+    batch = _batch(cfg, rng)
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(state.step) == 1
+    for k, v in state.params.items():
+        assert np.all(np.isfinite(np.asarray(v, np.float32))), k
+
+
+@pytest.mark.parametrize("arch", ["llama32_1b", "deepseek_v2_lite_16b",
+                                  "jamba_v01_52b", "mamba2_2p7b"])
+def test_scan_vs_unrolled_equivalence(arch, rng):
+    """scan-over-layers and the unrolled python loop compute the same fn."""
+    import dataclasses
+
+    # fp32: under bf16, MoE router top-k near-ties can flip expert choice
+    # between the two schedules — numerics, not a scan bug
+    cfg = dataclasses.replace(reduced_config(get_config(arch)), dtype="float32")
+    cfg_s = dataclasses.replace(cfg, scan_layers=True,
+                                num_layers=8 if cfg.family == "hybrid" else 4)
+    cfg_u = dataclasses.replace(cfg_s, scan_layers=False)
+    m_s, m_u = build_model(cfg_s), build_model(cfg_u)
+    params = m_s.init(rng)
+    toks = np.asarray(jax.random.randint(rng, (2, 24), 0, cfg.vocab_size), np.int32)
+    np.testing.assert_allclose(
+        np.asarray(m_s.forward(params, toks), np.float32),
+        np.asarray(m_u.forward(params, toks), np.float32), rtol=2e-2, atol=2e-2)

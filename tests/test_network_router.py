@@ -1,0 +1,38 @@
+"""Two-tier router latency accounting (paper Fig-1 flow)."""
+import numpy as np
+
+from repro.core.network import Link, NetworkModel
+from repro.core.router import PayloadSizes, TwoTierRouter
+
+
+def mk_router(me=400.0, ec=100.0):
+    net = NetworkModel(m_e=Link(me, rtt_ms=2.0), e_c=Link(ec, rtt_ms=20.0))
+    sizes = PayloadSizes(input_bytes=256 * 1024, descriptor_bytes=1024,
+                         result_bytes=4096)
+    return TwoTierRouter(net, sizes)
+
+
+def test_hit_faster_than_miss_and_origin():
+    r = mk_router()
+    hit = r.hit_latency(descriptor_ms=2.0, lookup_ms=0.5).total_ms
+    miss = r.miss_latency(descriptor_ms=2.0, lookup_ms=0.5,
+                          cloud_compute_ms=50.0).total_ms
+    origin = r.origin_latency(cloud_compute_ms=50.0).total_ms
+    assert hit < origin < miss                    # miss pays descriptor overhead
+
+
+def test_latency_reduction_grows_with_slower_cloud_link():
+    """Paper Fig 2a: the slower E<->C is, the bigger CoIC's win."""
+    reductions = []
+    for ec in (200.0, 50.0, 10.0):
+        r = mk_router(ec=ec)
+        hit = r.hit_latency(2.0, 0.5).total_ms
+        origin = r.origin_latency(50.0).total_ms
+        reductions.append(1 - hit / origin)
+    assert reductions[0] < reductions[1] < reductions[2]
+
+
+def test_transfer_time_formula():
+    link = Link(bandwidth_mbps=100.0, rtt_ms=10.0)
+    # 1 MB over 100 Mbps = 80 ms + 10 rtt
+    assert abs(link.transfer_ms(1_000_000) - 90.0) < 1e-6

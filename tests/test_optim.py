@@ -1,0 +1,87 @@
+"""Optimizer + schedule + gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.adamw import AdamW, AdamWConfig
+from repro.optim.grad_compress import (ef_int8_compress, ef_int8_decompress,
+                                       init_compression_state, topk_compress)
+from repro.optim.schedule import cosine_with_warmup
+
+
+def test_adamw_minimizes_quadratic():
+    opt = AdamW(AdamWConfig(weight_decay=0.0), lambda s: jnp.float32(0.1))
+    params = {"w": jnp.asarray([3.0, -2.0], jnp.float32)}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}             # d/dw ||w||^2
+        params, state, _ = opt.update(grads, state, params)
+    assert float(jnp.linalg.norm(params["w"])) < 1e-2
+
+
+def test_grad_clip_bounds_update():
+    cfg = AdamWConfig(grad_clip_norm=1.0, weight_decay=0.0)
+    opt = AdamW(cfg, lambda s: jnp.float32(1.0))
+    params = {"w": jnp.zeros((4,), jnp.float32)}
+    state = opt.init(params)
+    huge = {"w": jnp.full((4,), 1e9, jnp.float32)}
+    _, _, metrics = opt.update(huge, state, params)
+    assert float(metrics["grad_norm"]) > 1e8       # reported pre-clip
+
+
+def test_weight_decay_skips_vectors():
+    cfg = AdamWConfig(weight_decay=0.5)
+    opt = AdamW(cfg, lambda s: jnp.float32(0.1))
+    params = {"mat": jnp.ones((2, 2)), "vec": jnp.ones((2,))}
+    state = opt.init(params)
+    zero_g = jax.tree.map(jnp.zeros_like, params)
+    new, _, _ = opt.update(zero_g, state, params)
+    assert float(new["mat"][0, 0]) < 1.0           # decayed
+    assert float(new["vec"][0]) == 1.0             # not decayed
+
+
+def test_cosine_schedule_shape():
+    sched = cosine_with_warmup(1.0, warmup_steps=10, total_steps=100)
+    assert float(sched(jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(sched(jnp.asarray(10))) == pytest.approx(1.0, abs=0.02)
+    assert float(sched(jnp.asarray(100))) == pytest.approx(0.1, abs=0.02)
+    mid = float(sched(jnp.asarray(55)))
+    assert 0.1 < mid < 1.0
+
+
+def test_ef_int8_roundtrip_small_error():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+    err = jnp.zeros_like(g)
+    q, scale, new_err = ef_int8_compress(g, err)
+    deq = ef_int8_decompress(q, scale)
+    rel = float(jnp.linalg.norm(deq - g) / jnp.linalg.norm(g))
+    assert rel < 0.02                              # int8 quantization error
+    np.testing.assert_allclose(np.asarray(deq + new_err), np.asarray(g),
+                               rtol=1e-5, atol=1e-6)  # error feedback exact
+
+
+def test_error_feedback_converges():
+    """Accumulated compressed sum approaches the true sum (unbiased-ish)."""
+    rng = np.random.default_rng(1)
+    true_acc = np.zeros(100)
+    comp_acc = np.zeros(100)
+    err = jnp.zeros(100, jnp.float32)
+    for _ in range(50):
+        g = rng.standard_normal(100).astype(np.float32)
+        true_acc += g
+        q, scale, err = ef_int8_compress(jnp.asarray(g), err)
+        comp_acc += np.asarray(ef_int8_decompress(q, scale))
+    # residual error is bounded by one step's quantization error
+    assert np.linalg.norm(true_acc - comp_acc) < np.linalg.norm(true_acc) * 0.05
+
+
+def test_topk_keeps_largest():
+    g = jnp.asarray(np.arange(100, dtype=np.float32) - 50)
+    kept, err = topk_compress(g, jnp.zeros_like(g), k_ratio=0.1)
+    nz = np.nonzero(np.asarray(kept))[0]
+    assert len(nz) <= 11
+    mags = np.abs(np.asarray(g)[nz])
+    assert mags.min() >= np.sort(np.abs(np.asarray(g)))[-11]
+    np.testing.assert_allclose(np.asarray(kept + err), np.asarray(g), rtol=1e-6)

@@ -1,0 +1,143 @@
+"""Property-based tests of the CoIC semantic cache invariants (hypothesis)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.policies import EvictionPolicy
+from repro.core.semantic_cache import SemanticCache
+
+
+def _unit_rows(seed, n, d):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def mk_cache(capacity=16, dim=8, threshold=0.9, policy="lru", ttl=0):
+    return SemanticCache(capacity=capacity, key_dim=dim, payload_dim=4,
+                         threshold=threshold,
+                         policy=EvictionPolicy(policy, ttl=ttl))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 16))
+def test_insert_then_lookup_hits(seed, n):
+    """Every inserted key must hit on an identical query (score ~= 1)."""
+    cache = mk_cache(capacity=32)
+    state = cache.init()
+    keys = _unit_rows(seed, n, 8)
+    vals = np.arange(n * 4, dtype=np.float32).reshape(n, 4)
+    state = cache.insert(state, jnp.asarray(keys), jnp.asarray(vals))
+    state, res = cache.lookup(state, jnp.asarray(keys))
+    assert bool(np.all(np.asarray(res.hit))), np.asarray(res.score)
+    got = np.asarray(res.value)
+    np.testing.assert_allclose(got, vals, rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), rounds=st.integers(1, 6))
+def test_occupancy_never_exceeds_capacity(seed, rounds):
+    cache = mk_cache(capacity=8)
+    state = cache.init()
+    for r in range(rounds):
+        keys = _unit_rows(seed + r, 5, 8)
+        state = cache.insert(state, jnp.asarray(keys),
+                             jnp.zeros((5, 4), jnp.float32))
+        assert int(np.asarray(state.valid).sum()) <= 8
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_threshold_monotonicity(seed):
+    """Lowering tau can only turn misses into hits, never the reverse."""
+    keys = _unit_rows(seed, 8, 8)
+    queries = _unit_rows(seed + 1, 6, 8)
+    hits = {}
+    for tau in (0.99, 0.8, 0.3, -1.0):
+        cache = mk_cache(capacity=16, threshold=tau)
+        state = cache.init()
+        state = cache.insert(state, jnp.asarray(keys),
+                             jnp.zeros((8, 4), jnp.float32))
+        _, res = cache.lookup(state, jnp.asarray(queries))
+        hits[tau] = np.asarray(res.hit)
+    assert np.all(hits[0.99] <= hits[0.8])
+    assert np.all(hits[0.8] <= hits[0.3])
+    assert np.all(hits[0.3] <= hits[-1.0])
+    assert np.all(hits[-1.0])                      # tau=-1 always hits
+
+
+def test_lru_evicts_least_recently_used():
+    cache = mk_cache(capacity=4, policy="lru", threshold=0.99)
+    state = cache.init()
+    keys = _unit_rows(0, 4, 8)
+    vals = np.arange(16, dtype=np.float32).reshape(4, 4)
+    for i in range(4):
+        state = cache.insert(state, jnp.asarray(keys[i:i+1]),
+                             jnp.asarray(vals[i:i+1]))
+    # touch keys 0..2 (key 3 becomes LRU)
+    for i in range(3):
+        state, res = cache.lookup(state, jnp.asarray(keys[i:i+1]))
+        assert bool(res.hit[0])
+    newkey = _unit_rows(99, 1, 8)
+    state = cache.insert(state, jnp.asarray(newkey),
+                         jnp.full((1, 4), 7.0, jnp.float32))
+    _, res3 = cache.lookup(state, jnp.asarray(keys[3:4]))
+    assert not bool(res3.hit[0])                   # victim was key 3
+    for i in range(3):
+        _, r = cache.lookup(state, jnp.asarray(keys[i:i+1]))
+        assert bool(r.hit[0]), i                   # survivors intact
+
+
+def test_lfu_keeps_frequent():
+    cache = mk_cache(capacity=2, policy="lfu", threshold=0.99)
+    state = cache.init()
+    keys = _unit_rows(1, 3, 8)
+    state = cache.insert(state, jnp.asarray(keys[:2]),
+                         jnp.zeros((2, 4), jnp.float32))
+    for _ in range(5):                             # key0 becomes hot
+        state, _ = cache.lookup(state, jnp.asarray(keys[0:1]))
+    state = cache.insert(state, jnp.asarray(keys[2:3]),
+                         jnp.ones((1, 4), jnp.float32))
+    _, r0 = cache.lookup(state, jnp.asarray(keys[0:1]))
+    _, r1 = cache.lookup(state, jnp.asarray(keys[1:2]))
+    assert bool(r0.hit[0])                         # hot key survives
+    assert not bool(r1.hit[0])                     # cold key evicted
+
+
+def test_ttl_expiry():
+    cache = mk_cache(capacity=8, policy="lru_ttl", ttl=3, threshold=0.9)
+    state = cache.init()
+    keys = _unit_rows(2, 1, 8)
+    state = cache.insert(state, jnp.asarray(keys), jnp.zeros((1, 4), jnp.float32))
+    state, res = cache.lookup(state, jnp.asarray(keys))
+    assert bool(res.hit[0])
+    for _ in range(4):                             # advance the logical clock
+        state, _ = cache.lookup(state, jnp.asarray(_unit_rows(3, 1, 8)))
+    state, res = cache.lookup(state, jnp.asarray(keys))
+    assert not bool(res.hit[0])                    # expired
+
+
+def test_batch_insert_distinct_victims():
+    """A batch insert must occupy distinct slots (no self-overwrite)."""
+    cache = mk_cache(capacity=16, threshold=0.95)
+    state = cache.init()
+    keys = _unit_rows(5, 10, 8)
+    vals = np.arange(40, dtype=np.float32).reshape(10, 4)
+    state = cache.insert(state, jnp.asarray(keys), jnp.asarray(vals))
+    assert int(np.asarray(state.valid).sum()) == 10
+    state, res = cache.lookup(state, jnp.asarray(keys))
+    np.testing.assert_allclose(np.asarray(res.value), vals, rtol=1e-5)
+
+
+def test_stats_hit_rate():
+    cache = mk_cache(capacity=8, threshold=0.9)
+    state = cache.init()
+    keys = _unit_rows(7, 4, 8)
+    state = cache.insert(state, jnp.asarray(keys), jnp.zeros((4, 4), jnp.float32))
+    state, _ = cache.lookup(state, jnp.asarray(keys))            # 4 hits
+    state, _ = cache.lookup(state, jnp.asarray(_unit_rows(8, 4, 8)))  # ~4 misses
+    s = cache.stats(state)
+    assert s["hits"] >= 4 and s["hits"] + s["misses"] == 8

@@ -1,0 +1,97 @@
+"""Serving engine: continuous batching correctness + CoIC integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.coic import CoICConfig
+from repro.models import build_model
+from repro.serving.engine import ServingConfig, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    import dataclasses
+
+    # fp32: bf16 near-ties can flip argmax between batched and single-row
+    # decode (different reduction order), which is numerics, not scheduling
+    cfg = dataclasses.replace(get_config("coic-paper"), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _greedy_reference(model, params, prompt, max_new):
+    logits, cache, ln = model.prefill(params, jnp.asarray(prompt[None, :]),
+                                      max_len=len(prompt) + max_new + 8)
+    out = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out.append(int(tok[0]))
+    for _ in range(max_new - 1):
+        logits, cache, ln = model.decode_step(params, cache, tok, ln)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(int(tok[0]))
+    return np.asarray(out, np.int32)
+
+
+def test_batched_generation_matches_single(served_model, nprng):
+    """Requests served through continuous batching must produce exactly the
+    single-request greedy generations."""
+    cfg, model, params = served_model
+    eng = ServingEngine(model, params, ServingConfig(
+        max_batch=4, max_len=96, max_new_tokens=8))
+    prompts = [nprng.integers(0, cfg.vocab_size, size=(24,)).astype(np.int32)
+               for _ in range(6)]
+    rids = [eng.submit(p) for p in prompts]
+    eng.run_until_drained()
+    assert len(eng.results) == 6
+    by_id = {r.req_id: r for r in eng.results}
+    for rid, prompt in zip(rids, prompts):
+        ref = _greedy_reference(model, params, prompt, 8)
+        got = by_id[rid].tokens
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_coic_front_serves_repeats_from_edge(served_model, nprng):
+    cfg, model, params = served_model
+    eng = ServingEngine(model, params, ServingConfig(
+        max_batch=4, max_len=96, max_new_tokens=8,
+        coic=CoICConfig(capacity=64, threshold=0.995, descriptor="prefix",
+                        k_layers=2)))
+    prompt = nprng.integers(0, cfg.vocab_size, size=(24,)).astype(np.int32)
+    eng.submit(prompt)
+    eng.run_until_drained()
+    assert eng.results[0].source == "cloud"
+    cloud_tokens = eng.results[0].tokens
+
+    eng.submit(prompt.copy())                      # identical request
+    eng.run_until_drained()
+    assert eng.results[1].source == "edge"
+    np.testing.assert_array_equal(eng.results[1].tokens[:8], cloud_tokens)
+    assert eng.results[1].decode_steps == 0        # zero model steps — the win
+
+
+def test_edge_hit_vs_threshold(served_model, nprng):
+    """tau=1.01 (unreachable) => every request goes to the cloud."""
+    cfg, model, params = served_model
+    eng = ServingEngine(model, params, ServingConfig(
+        max_batch=2, max_len=96, max_new_tokens=4,
+        coic=CoICConfig(capacity=16, threshold=1.01, descriptor="prefix")))
+    prompt = nprng.integers(0, cfg.vocab_size, size=(16,)).astype(np.int32)
+    eng.submit(prompt)
+    eng.run_until_drained()
+    eng.submit(prompt.copy())
+    eng.run_until_drained()
+    assert [r.source for r in eng.results] == ["cloud", "cloud"]
+
+
+def test_slots_recycled(served_model, nprng):
+    cfg, model, params = served_model
+    eng = ServingEngine(model, params, ServingConfig(
+        max_batch=2, max_len=64, max_new_tokens=4))
+    for _ in range(5):
+        eng.submit(nprng.integers(0, cfg.vocab_size, size=(16,)).astype(np.int32))
+    eng.run_until_drained()
+    assert len(eng.results) == 5
+    assert sorted(eng.free_slots) == [0, 1]

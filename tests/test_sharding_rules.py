@@ -1,0 +1,83 @@
+"""Sharding-rule resolution: divisibility, axis conflicts, fallbacks."""
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import RULES_SERVE, RULES_SERVE_LONG, RULES_TRAIN
+
+
+@pytest.fixture(scope="module")
+def mesh22():
+    if len(jax.devices()) < 1:
+        pytest.skip("no devices")
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def _spec(rules, axes, shape, mesh):
+    return rules.spec_for(axes, shape, mesh)
+
+
+class FakeMesh:
+    """Shape-only stand-in so rule logic tests don't need real devices."""
+
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+def test_divisible_dims_shard():
+    mesh = FakeMesh(data=16, model=16)
+    spec = RULES_TRAIN.spec_for(("vocab", "embed"), (32000, 4096), mesh)
+    assert spec == P("model", "data")
+
+
+def test_indivisible_dim_replicates():
+    mesh = FakeMesh(data=16, model=16)
+    # 40 experts % 16 != 0 -> replicated; mlp dim still sharded
+    spec = RULES_TRAIN.spec_for(("experts", "embed", "mlp"), (40, 1536, 512), mesh)
+    assert spec == P(None, "data", "model")
+
+
+def test_axis_conflict_first_dim_wins():
+    mesh = FakeMesh(data=16, model=16)
+    # both want 'model': heads gets it, mlp falls back to replicated
+    # (trailing Nones are trimmed)
+    spec = RULES_TRAIN.spec_for(("heads", "mlp"), (64, 29568), mesh)
+    assert spec == P("model")
+
+
+def test_kv_cache_seq_sharding_when_heads_indivisible():
+    mesh = FakeMesh(data=16, model=16)
+    # kv=8 % 16 != 0 -> cache_seq takes 'model' (GSPMD flash-decode layout)
+    spec = RULES_SERVE.spec_for(("layers", "batch", "cache_seq", "kv_heads", "qk_dim"),
+                                (80, 128, 32768, 8, 128), mesh)
+    assert spec == P(None, "data", "model")
+
+
+def test_long_context_rules_spread_cache():
+    mesh = FakeMesh(pod=2, data=16, model=16)
+    spec = RULES_SERVE_LONG.spec_for(
+        ("layers", "batch", "cache_seq", "kv_heads", "qk_dim"),
+        (4, 1, 524288, 8, 128), mesh)
+    assert spec == P(None, None, ("pod", "data", "model"))
+
+
+def test_batch_prefers_pod_data():
+    mesh = FakeMesh(pod=2, data=16, model=16)
+    spec = RULES_TRAIN.spec_for(("batch", None, None), (256, 4096, 1), mesh)
+    assert spec == P(("pod", "data"))
+
+
+def test_batch_falls_back_without_pod():
+    mesh = FakeMesh(data=16, model=16)
+    spec = RULES_TRAIN.spec_for(("batch", None), (256, 4096), mesh)
+    assert spec == P("data")
+
+
+def test_trailing_nones_trimmed():
+    mesh = FakeMesh(data=16, model=16)
+    spec = RULES_TRAIN.spec_for((None, None), (8, 8), mesh)
+    assert spec == P()
