@@ -12,14 +12,16 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (block_reuse, cache_lookup, hit_rate, load_latency,
-                            recognition_latency, roofline)
+    from benchmarks import (block_reuse, cache_lookup, cooperative_hit_rate,
+                            hit_rate, load_latency, recognition_latency,
+                            roofline)
 
     suites = [
         ("fig2a", recognition_latency.run),
         ("fig2b", load_latency.run),
         ("cache_lookup", cache_lookup.run),
         ("hit_rate", hit_rate.run),
+        ("cooperative_hit_rate", cooperative_hit_rate.run),
         ("block_reuse", block_reuse.run),
         ("roofline", roofline.run),
     ]

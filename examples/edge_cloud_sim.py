@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python examples/edge_cloud_sim.py
 """
-from benchmarks import load_latency, recognition_latency
+from benchmarks import cooperative_hit_rate, load_latency, recognition_latency
 
 print("=== Fig 2a: recognition latency reduction (CoIC vs origin) ===")
 for name, us, derived in recognition_latency.run():
@@ -10,4 +10,8 @@ for name, us, derived in recognition_latency.run():
 
 print("\n=== Fig 2b: 3D-model load latency reduction ===")
 for name, us, derived in load_latency.run():
+    print(f"  {name:36s} {derived}")
+
+print("\n=== Cooperative edge cluster: isolated vs shared vs pooled ===")
+for name, us, derived in cooperative_hit_rate.run():
     print(f"  {name:36s} {derived}")

@@ -1,4 +1,6 @@
 # The paper's primary contribution: the CoIC cooperative edge cache.
+from repro.core.cluster import (ClusterConfig, ClusterLookupResult,
+                                CooperativeEdgeCluster)
 from repro.core.coic import CoICConfig, CoICEngine, RequestResult
 from repro.core.descriptor import NgramSketchDescriptor, PrefixDescriptor, l2_normalize
 from repro.core.hash_cache import HashCache

@@ -1,0 +1,207 @@
+"""Cooperative multi-node edge cache tier — the paper's actual thesis.
+
+The paper argues for "caching and sharing computation-intensive IC results on
+the edge" *across* applications and users; a single isolated ``SemanticCache``
+per engine never shares anything.  ``CooperativeEdgeCluster`` runs N edge
+nodes, each owning one ``SemanticCache`` shard, with a three-rung lookup
+ladder per request batch:
+
+  1. local  — the serving node's own shard (cheap, same box)
+  2. peer   — on a local miss the descriptor is broadcast to the other
+              shards over the edge<->edge link; the whole cluster probe is
+              ONE collective (``cluster_topk_lookup`` over the stacked
+              shards, or ``sharded_topk_lookup`` on a real ``cache``-axis
+              mesh) instead of N host round-trips
+  3. cloud  — the caller forwards the remaining misses and inserts results
+              back into the serving node's shard
+
+Peer hits refresh the owning shard's LRU/LFU state (``SemanticCache.touch``)
+and are optionally re-admitted into the serving node's shard
+(``admission="always"``), so hot items replicate toward their consumers —
+eCAR/CloudAR-style cooperative sharing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policies import EvictionPolicy
+from repro.core.semantic_cache import SemanticCache, SemanticCacheState
+from repro.parallel.sharding import cluster_topk_lookup, sharded_topk_lookup
+
+TIER_LOCAL, TIER_PEER, TIER_MISS = 0, 1, 2
+TIER_NAMES = ("local", "peer", "miss")
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    num_nodes: int = 4
+    node_capacity: int = 1024
+    key_dim: int = 256
+    payload_dim: int = 64
+    threshold: float = 0.85
+    payload_dtype: str = "float32"
+    policy: EvictionPolicy = EvictionPolicy("lru")
+    lookup_impl: str = "auto"
+    admission: str = "always"        # always | never — re-insert peer hits
+    share: bool = True               # False: isolated nodes (no peer tier)
+
+    def __post_init__(self):
+        assert self.admission in ("always", "never"), self.admission
+        assert self.num_nodes >= 1, self.num_nodes
+
+
+class ClusterLookupResult(NamedTuple):
+    hit: np.ndarray          # (Q,) bool — local or peer
+    tier: np.ndarray         # (Q,) int8 — TIER_LOCAL | TIER_PEER | TIER_MISS
+    owner: np.ndarray        # (Q,) int32 — serving node, -1 on miss
+    score: np.ndarray        # (Q,) f32 — best score at the serving tier
+    value: np.ndarray        # (Q, P) payload (zeros on miss)
+
+
+class CooperativeEdgeCluster:
+    """N cooperating edge nodes, one ``SemanticCache`` shard each.
+
+    ``mesh`` (optional): a Mesh with a ``cache`` axis of size ``num_nodes``;
+    when given, the peer probe runs as a shard_map collective with one
+    all-gather of (idx, score) per shard.  Without it the probe is a single
+    vmapped device call over the stacked shards — same results, same math.
+    """
+
+    def __init__(self, cfg: ClusterConfig, mesh=None, cache_axis: str = "cache"):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.cache_axis = cache_axis
+        if mesh is not None:
+            assert dict(mesh.shape)[cache_axis] == cfg.num_nodes, (
+                dict(mesh.shape), cfg.num_nodes)
+        self.cache = SemanticCache(
+            capacity=cfg.node_capacity, key_dim=cfg.key_dim,
+            payload_dim=cfg.payload_dim, threshold=cfg.threshold,
+            payload_dtype=cfg.payload_dtype, policy=cfg.policy,
+            lookup_impl=cfg.lookup_impl)
+        self.states: List[SemanticCacheState] = [
+            self.cache.init() for _ in range(cfg.num_nodes)]
+        self.peer_hits = np.zeros((cfg.num_nodes,), np.int64)   # served-for-others
+        self.peer_fills = np.zeros((cfg.num_nodes,), np.int64)  # admitted-from-peer
+        self._keys_stack = None      # cached (N, C, D) stack; None = dirty
+
+    # ------------------------------------------------------------------
+    def _peer_probe(self, queries: jax.Array):
+        """One collective top-1 probe over all shards.  Returns (global_idx,
+        score) — global index in [0, N*C).
+
+        The (N, C, D) key stack is cached across probes and invalidated on
+        insert (keys only change there); the (N, C) valid stack is cheap and
+        rebuilt each time so TTL expiry stays correct.  Queries are zero-
+        padded to the next power of two so the jitted lookup doesn't retrace
+        on every distinct miss count.
+        """
+        if self._keys_stack is None:
+            self._keys_stack = jnp.stack([s.keys for s in self.states])
+        valid = jnp.stack([
+            self.cache.policy.expire(s, s.clock) for s in self.states])
+        n = queries.shape[0]
+        n_pad = 1 << (n - 1).bit_length()
+        if n_pad > n:
+            queries = jnp.pad(queries, ((0, n_pad - n), (0, 0)))
+        if self.mesh is not None:
+            idx, score = sharded_topk_lookup(
+                queries, self._keys_stack, valid, 1, self.mesh,
+                self.cache_axis, impl=self.cfg.lookup_impl)
+        else:
+            idx, score = cluster_topk_lookup(
+                queries, self._keys_stack, valid, 1, impl=self.cfg.lookup_impl)
+        return idx[:n, 0], score[:n, 0]
+
+    # ------------------------------------------------------------------
+    def lookup(self, node: int, queries: jax.Array) -> ClusterLookupResult:
+        """queries: (Q, D) unit descriptors arriving at ``node``."""
+        cfg = self.cfg
+        Q = queries.shape[0]
+        queries = jnp.asarray(queries)
+
+        self.states[node], res = self.cache.lookup(self.states[node], queries)
+        hit = np.array(res.hit)
+        score = np.array(res.score)
+        value = np.array(res.value)
+        tier = np.where(hit, TIER_LOCAL, TIER_MISS).astype(np.int8)
+        owner = np.where(hit, node, -1).astype(np.int32)
+
+        miss_rows = np.nonzero(~hit)[0]
+        if miss_rows.size and cfg.share and cfg.num_nodes > 1:
+            q_miss = queries[jnp.asarray(miss_rows)]
+            g_idx, g_score = self._peer_probe(q_miss)
+            g_idx = np.asarray(g_idx)
+            g_score = np.asarray(g_score)
+            peer_hit = g_score >= cfg.threshold
+            owners = (g_idx // cfg.node_capacity).astype(np.int32)
+            slots = (g_idx % cfg.node_capacity).astype(np.int32)
+            # the local shard already reported a sub-threshold best, so a
+            # cluster-wide top-1 above threshold always lives on a peer
+            n_peer_served = 0
+            for p in range(cfg.num_nodes):
+                sel = peer_hit & (owners == p)
+                if not sel.any() or p == node:
+                    continue
+                rows = miss_rows[sel]
+                vals = np.asarray(self.states[p].values)[slots[sel]]
+                value[rows] = vals
+                score[rows] = g_score[sel]
+                tier[rows] = TIER_PEER
+                owner[rows] = p
+                hit[rows] = True
+                n_peer_served += int(sel.sum())
+                self.peer_hits[p] += int(sel.sum())
+                self.states[p] = self.cache.touch(
+                    self.states[p], jnp.asarray(slots[sel]),
+                    jnp.ones((int(sel.sum()),), bool))
+                if cfg.admission == "always":
+                    self.states[node] = self.cache.insert(
+                        self.states[node], queries[jnp.asarray(rows)],
+                        jnp.asarray(vals))
+                    self.peer_fills[node] += int(sel.sum())
+                    self._keys_stack = None
+            if n_peer_served:
+                # the local shard counted these as misses, but the owner
+                # shard counted the served hit — undo the local miss so
+                # hits + misses == requests and hit_rate means "served at
+                # any edge tier"
+                self.states[node] = dataclasses.replace(
+                    self.states[node],
+                    misses=self.states[node].misses - n_peer_served)
+
+        return ClusterLookupResult(hit=hit, tier=tier, owner=owner,
+                                   score=score, value=value)
+
+    # ------------------------------------------------------------------
+    def insert(self, node: int, keys: jax.Array, values: jax.Array) -> None:
+        """Insert cloud results into the serving node's shard."""
+        self.states[node] = self.cache.insert(
+            self.states[node], jnp.asarray(keys), jnp.asarray(values))
+        self._keys_stack = None
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        per_node = [self.cache.stats(s) for s in self.states]
+        for p, s in enumerate(per_node):
+            s["peer_hits_served"] = int(self.peer_hits[p])
+            s["peer_fills"] = int(self.peer_fills[p])
+        # per-node misses exclude peer-served requests (lookup() rebates
+        # them), so hits + misses == requests and hit_rate is "served at
+        # any edge tier"
+        total_hits = sum(s["hits"] for s in per_node)
+        total_misses = sum(s["misses"] for s in per_node)
+        tot = total_hits + total_misses
+        return {
+            "nodes": per_node,
+            "capacity": self.cfg.num_nodes * self.cfg.node_capacity,
+            "occupancy": sum(s["occupancy"] for s in per_node),
+            "hits": total_hits,
+            "misses": total_misses,
+            "hit_rate": (total_hits / tot) if tot else 0.0,
+        }

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cluster import (TIER_LOCAL, TIER_MISS, TIER_PEER,
+                                ClusterConfig, CooperativeEdgeCluster)
 from repro.core.descriptor import NgramSketchDescriptor, PrefixDescriptor
 from repro.core.hash_cache import HashCache, content_hash
 from repro.core.network import NetworkModel
@@ -33,7 +35,7 @@ from repro.core.semantic_cache import SemanticCache
 
 @dataclasses.dataclass(frozen=True)
 class CoICConfig:
-    capacity: int = 4096
+    capacity: int = 4096             # per-node when num_nodes > 1
     threshold: float = 0.85
     payload_dim: int = 64
     payload_dtype: str = "float32"
@@ -43,12 +45,16 @@ class CoICConfig:
     policy: EvictionPolicy = EvictionPolicy("lru")
     lookup_impl: str = "auto"
     insert_on_miss: bool = True
+    # cooperative cluster tier (core/cluster.py); 1 == single isolated cache
+    num_nodes: int = 1
+    share: bool = True               # peer tier on local miss
+    admission: str = "always"        # re-insert peer hits locally
 
 
 @dataclasses.dataclass
 class RequestResult:
     payload: np.ndarray
-    source: str                      # "edge" | "cloud"
+    source: str                      # "edge" | "peer" | "cloud"
     score: float
     coic: LatencyBreakdown
     origin: LatencyBreakdown
@@ -82,12 +88,23 @@ class CoICEngine:
             result_bytes=cfg.payload_dim * 4)
         self.router = TwoTierRouter(self.network, self.sizes)
 
-        self.cache = SemanticCache(
-            capacity=cfg.capacity, key_dim=key_dim,
-            payload_dim=cfg.payload_dim, threshold=cfg.threshold,
-            payload_dtype=cfg.payload_dtype, policy=cfg.policy,
-            lookup_impl=cfg.lookup_impl)
-        self.state = self.cache.init()
+        self.cluster: Optional[CooperativeEdgeCluster] = None
+        if cfg.num_nodes > 1:
+            self.cluster = CooperativeEdgeCluster(ClusterConfig(
+                num_nodes=cfg.num_nodes, node_capacity=cfg.capacity,
+                key_dim=key_dim, payload_dim=cfg.payload_dim,
+                threshold=cfg.threshold, payload_dtype=cfg.payload_dtype,
+                policy=cfg.policy, lookup_impl=cfg.lookup_impl,
+                admission=cfg.admission, share=cfg.share))
+            self.cache = self.cluster.cache
+            self.state = None
+        else:
+            self.cache = SemanticCache(
+                capacity=cfg.capacity, key_dim=key_dim,
+                payload_dim=cfg.payload_dim, threshold=cfg.threshold,
+                payload_dtype=cfg.payload_dtype, policy=cfg.policy,
+                lookup_impl=cfg.lookup_impl)
+            self.state = self.cache.init()
         self.asset_cache = HashCache()
         self._timings = {"descriptor_ms": [], "lookup_ms": [], "cloud_ms": []}
 
@@ -101,22 +118,28 @@ class CoICEngine:
         return d
 
     # ------------------------------------------------------------------
-    def process_batch(self, tokens: np.ndarray) -> List[RequestResult]:
-        """tokens: (B, S) int32 request batch.  Returns per-request results
-        with CoIC and origin-baseline latency breakdowns."""
+    def process_batch(self, tokens: np.ndarray,
+                      node_id: int = 0) -> List[RequestResult]:
+        """tokens: (B, S) int32 request batch arriving at edge ``node_id``
+        (ignored without a cluster).  Returns per-request results with CoIC
+        and origin-baseline latency breakdowns."""
         B = tokens.shape[0]
         desc = self._descriptors(tokens)
         per_req_desc_ms = self._timings["descriptor_ms"][-1] / B
 
         t0 = time.perf_counter()
-        self.state, res = self.cache.lookup(self.state, desc)
-        jax.block_until_ready(res.value)
+        if self.cluster is not None:
+            cres = self.cluster.lookup(node_id, desc)
+            hit, tier, score, values = cres.hit, cres.tier, cres.score, cres.value
+        else:
+            self.state, res = self.cache.lookup(self.state, desc)
+            jax.block_until_ready(res.value)
+            hit = np.asarray(res.hit)
+            score = np.asarray(res.score)
+            values = np.asarray(res.value)
+            tier = np.where(hit, TIER_LOCAL, TIER_MISS).astype(np.int8)
         lookup_ms = (time.perf_counter() - t0) * 1e3 / B
         self._timings["lookup_ms"].append(lookup_ms * B)
-
-        hit = np.asarray(res.hit)
-        score = np.asarray(res.score)
-        values = np.asarray(res.value)
 
         payloads = np.zeros((B, self.cfg.payload_dim),
                             np.dtype(self.cfg.payload_dtype))
@@ -134,18 +157,33 @@ class CoICEngine:
             payloads[miss_rows] = cloud_out
             if self.cfg.insert_on_miss:
                 miss_desc = np.asarray(desc)[miss_rows]
-                self.state = self.cache.insert(
-                    self.state, jnp.asarray(miss_desc),
-                    jnp.asarray(cloud_out.astype(self.cfg.payload_dtype)))
+                cloud_vals = jnp.asarray(
+                    cloud_out.astype(self.cfg.payload_dtype))
+                if self.cluster is not None:
+                    self.cluster.insert(node_id, jnp.asarray(miss_desc),
+                                        cloud_vals)
+                else:
+                    self.state = self.cache.insert(
+                        self.state, jnp.asarray(miss_desc), cloud_vals)
+
+        # a cooperative miss pays the fruitless peer descriptor broadcast
+        peer_waste_ms = 0.0
+        if self.cluster is not None and self.cfg.share and self.cfg.num_nodes > 1:
+            peer_waste_ms = self.network.edge_to_edge_ms(
+                self.sizes.descriptor_bytes)
 
         results = []
         for b in range(B):
-            if hit[b]:
+            if tier[b] == TIER_LOCAL:
                 lat = self.router.hit_latency(per_req_desc_ms, lookup_ms)
                 src = "edge"
+            elif tier[b] == TIER_PEER:
+                lat = self.router.peer_hit_latency(per_req_desc_ms, lookup_ms)
+                src = "peer"
             else:
                 lat = self.router.miss_latency(per_req_desc_ms, lookup_ms,
-                                               float(cloud_ms[b]))
+                                               float(cloud_ms[b]),
+                                               peer_net_ms=peer_waste_ms)
                 src = "cloud"
             origin = self.router.origin_latency(float(cloud_ms[b]) if not hit[b]
                                                 else self._mean_cloud_ms())
@@ -177,7 +215,10 @@ class CoICEngine:
         return value, load_ms, "cloud"
 
     def stats(self) -> dict:
-        s = self.cache.stats(self.state)
+        if self.cluster is not None:
+            s = self.cluster.stats()
+        else:
+            s = self.cache.stats(self.state)
         s["asset_cache"] = self.asset_cache.stats()
         return s
 

@@ -21,9 +21,15 @@ class Link:
 
 @dataclasses.dataclass(frozen=True)
 class NetworkModel:
-    """mobile<->edge and edge<->cloud links."""
+    """mobile<->edge, edge<->edge (peer), and edge<->cloud links.
+
+    The peer link models the metro/LAN interconnect between cooperating edge
+    nodes: far faster than the WAN to the cloud, slower than staying local —
+    the middle rung of the local -> peer -> cloud lookup ladder.
+    """
 
     m_e: Link = Link(bandwidth_mbps=400.0, rtt_ms=2.0)      # 802.11ac
+    e_e: Link = Link(bandwidth_mbps=1000.0, rtt_ms=1.0)     # edge LAN/metro
     e_c: Link = Link(bandwidth_mbps=100.0, rtt_ms=20.0)     # WAN
 
     def client_to_edge_ms(self, payload_bytes: float) -> float:
@@ -31,6 +37,9 @@ class NetworkModel:
 
     def edge_to_client_ms(self, payload_bytes: float) -> float:
         return self.m_e.transfer_ms(payload_bytes)
+
+    def edge_to_edge_ms(self, payload_bytes: float) -> float:
+        return self.e_e.transfer_ms(payload_bytes)
 
     def edge_to_cloud_ms(self, payload_bytes: float) -> float:
         return self.e_c.transfer_ms(payload_bytes)

@@ -29,6 +29,7 @@ class LatencyBreakdown:
     descriptor_ms: float = 0.0
     uplink_ms: float = 0.0
     lookup_ms: float = 0.0
+    peer_net_ms: float = 0.0         # peer tier: descriptor out + result back
     cloud_net_ms: float = 0.0
     cloud_compute_ms: float = 0.0
     downlink_ms: float = 0.0
@@ -36,7 +37,8 @@ class LatencyBreakdown:
     @property
     def total_ms(self) -> float:
         return (self.descriptor_ms + self.uplink_ms + self.lookup_ms
-                + self.cloud_net_ms + self.cloud_compute_ms + self.downlink_ms)
+                + self.peer_net_ms + self.cloud_net_ms
+                + self.cloud_compute_ms + self.downlink_ms)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,14 +65,33 @@ class TwoTierRouter:
             downlink_ms=self.net.edge_to_client_ms(self.sizes.result_bytes),
         )
 
+    def peer_hit_latency(self, descriptor_ms: float, lookup_ms: float,
+                         peer_lookup_ms: float = 0.0) -> LatencyBreakdown:
+        """Local miss, peer hit: the descriptor is broadcast to the peer
+        shards over the edge<->edge link and the winning peer ships the
+        result back — no WAN round-trip, no cloud compute."""
+        s = self.sizes
+        return LatencyBreakdown(
+            descriptor_ms=descriptor_ms,
+            uplink_ms=self.net.client_to_edge_ms(s.descriptor_bytes),
+            lookup_ms=lookup_ms + peer_lookup_ms,
+            peer_net_ms=(self.net.edge_to_edge_ms(s.descriptor_bytes)
+                         + self.net.edge_to_edge_ms(s.result_bytes)),
+            downlink_ms=self.net.edge_to_client_ms(s.result_bytes),
+        )
+
     def miss_latency(self, descriptor_ms: float, lookup_ms: float,
-                     cloud_compute_ms: float) -> LatencyBreakdown:
+                     cloud_compute_ms: float,
+                     peer_net_ms: float = 0.0) -> LatencyBreakdown:
+        """``peer_net_ms``: cost of the (fruitless) peer broadcast a
+        cooperative cluster pays before falling through to the cloud."""
         s = self.sizes
         return LatencyBreakdown(
             descriptor_ms=descriptor_ms,
             uplink_ms=(self.net.client_to_edge_ms(s.descriptor_bytes)
                        + self.net.client_to_edge_ms(s.input_bytes)),
             lookup_ms=lookup_ms,
+            peer_net_ms=peer_net_ms,
             cloud_net_ms=(self.net.edge_to_cloud_ms(s.input_bytes)
                           + self.net.cloud_to_edge_ms(s.result_bytes)),
             cloud_compute_ms=cloud_compute_ms,

@@ -100,6 +100,21 @@ class SemanticCache:
 
     # ------------------------------------------------------------------
     @partial(jax.jit, static_argnames=("self",))
+    def touch(self, state: SemanticCacheState, idx: jax.Array,
+              mask: jax.Array) -> SemanticCacheState:
+        """Record remote (peer-served) hits on this shard: refresh LRU/LFU
+        state and the hit counter for ``idx`` rows where ``mask`` is True.
+        The clock advances like a lookup so recency stays comparable."""
+        touched = jnp.where(mask, idx, self.capacity)    # out-of-range = drop
+        return dataclasses.replace(
+            state,
+            last_used=state.last_used.at[touched].max(state.clock, mode="drop"),
+            freq=state.freq.at[touched].add(1, mode="drop"),
+            clock=state.clock + 1,
+            hits=state.hits + mask.sum(dtype=jnp.int32))
+
+    # ------------------------------------------------------------------
+    @partial(jax.jit, static_argnames=("self",))
     def insert(self, state: SemanticCacheState, keys: jax.Array,
                values: jax.Array, mask: Optional[jax.Array] = None
                ) -> SemanticCacheState:

@@ -1,2 +1,3 @@
-from repro.kernels.similarity.ops import similarity_lookup
-from repro.kernels.similarity.ref import similarity_lookup_ref
+from repro.kernels.similarity.ops import similarity_lookup, similarity_topk
+from repro.kernels.similarity.ref import (similarity_lookup_ref,
+                                          similarity_topk_ref)

@@ -50,6 +50,92 @@ def _lookup_kernel(q_ref, k_ref, valid_ref, idx_ref, score_ref, *, block_c: int)
     idx_ref[...] = jnp.where(take_new, local_arg, prev_arg)
 
 
+def _topk_kernel(q_ref, k_ref, valid_ref, idx_ref, score_ref, *,
+                 block_c: int, k: int):
+    """One (q-block, c-block) grid step of the tiled top-k lookup.
+
+    The running (scores, indices) top-k for a query tile lives in the output
+    blocks (persist across the inner grid dim).  Each step concatenates the
+    carried top-k with the new block's scores and re-selects k by iterated
+    masked argmax — k is small and static, so this is k VPU reductions per
+    tile, no sort.  Candidate order is [carried | new block]; argmax breaks
+    ties toward the first occurrence, so equal scores resolve to the lowest
+    global cache index — exactly ``lax.top_k`` semantics on the full row.
+    """
+    j = pl.program_id(1)
+
+    q = q_ref[...].astype(jnp.float32)                  # (BQ, D)
+    kk = k_ref[...].astype(jnp.float32)                 # (BC, D)
+    valid = valid_ref[...]                              # (BC,) int8
+
+    scores = jax.lax.dot_general(
+        q, kk, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)             # (BQ, BC)
+    scores = jnp.where(valid[None, :] != 0, scores, NEG_INF)
+    bq = scores.shape[0]
+    local_idx = (jax.lax.broadcasted_iota(jnp.int32, (bq, block_c), 1)
+                 + j * block_c)
+
+    @pl.when(j == 0)
+    def _init():
+        score_ref[...] = jnp.full_like(score_ref, NEG_INF)
+        # iota init: an all-invalid cache yields indices 0..k-1, matching
+        # the oracle's tie-break over a constant row
+        idx_ref[...] = jax.lax.broadcasted_iota(jnp.int32, idx_ref.shape, 1)
+
+    cand_scores = jnp.concatenate([score_ref[...], scores], axis=1)
+    cand_idx = jnp.concatenate([idx_ref[...], local_idx], axis=1)
+    n_cand = cand_scores.shape[1]
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (bq, n_cand), 1)
+    out_s, out_i = [], []
+    for _ in range(k):
+        arg = jnp.argmax(cand_scores, axis=1).astype(jnp.int32)
+        onehot = lanes == arg[:, None]
+        out_s.append(jnp.max(cand_scores, axis=1))
+        out_i.append(jnp.sum(jnp.where(onehot, cand_idx, 0), axis=1))
+        cand_scores = jnp.where(onehot, -jnp.inf, cand_scores)
+    score_ref[...] = jnp.stack(out_s, axis=1)
+    idx_ref[...] = jnp.stack(out_i, axis=1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_q", "block_c", "interpret"))
+def similarity_topk_kernel(queries: jax.Array, keys: jax.Array,
+                           valid: jax.Array, *, k: int, block_q: int = 128,
+                           block_c: int = 512, interpret: bool = False):
+    """queries: (Q, D); keys: (C, D); valid: (C,) bool/int8.
+
+    Returns (idx (Q, k) int32, score (Q, k) f32), scores descending.  Q and C
+    must be multiples of the block sizes (ops.py pads); k <= block_c.
+    """
+    Q, D = queries.shape
+    C = keys.shape[0]
+    assert Q % block_q == 0 and C % block_c == 0, (Q, C, block_q, block_c)
+    assert k <= block_c, (k, block_c)
+    grid = (Q // block_q, C // block_c)
+
+    kernel = functools.partial(_topk_kernel, block_c=block_c, k=k)
+    idx, score = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_c, D), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_c,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+            jax.ShapeDtypeStruct((Q, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(queries, keys, valid.astype(jnp.int8))
+    return idx, score
+
+
 @functools.partial(jax.jit, static_argnames=("block_q", "block_c", "interpret"))
 def similarity_lookup_kernel(queries: jax.Array, keys: jax.Array,
                              valid: jax.Array, *, block_q: int = 128,

@@ -11,8 +11,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.similarity.kernel import NEG_INF, similarity_lookup_kernel
-from repro.kernels.similarity.ref import similarity_lookup_ref
+from repro.kernels.similarity.kernel import (NEG_INF, similarity_lookup_kernel,
+                                             similarity_topk_kernel)
+from repro.kernels.similarity.ref import (similarity_lookup_ref,
+                                          similarity_topk_ref)
 
 
 def _backend_is_tpu() -> bool:
@@ -46,5 +48,39 @@ def similarity_lookup(queries: jax.Array, keys: jax.Array, valid: jax.Array,
     vp = jnp.pad(valid.astype(jnp.int8), (0, pad_c))
     idx, score = similarity_lookup_kernel(
         qp, kp, vp, block_q=bq, block_c=bc,
+        interpret=(impl == "pallas_interpret"))
+    return idx[:Q], score[:Q]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "impl", "block_q", "block_c"))
+def similarity_topk(queries: jax.Array, keys: jax.Array, valid: jax.Array,
+                    k: int, *, impl: str = "auto", block_q: int = 128,
+                    block_c: int = 512):
+    """Batched top-k cache lookup (the sharded-cluster merge primitive).
+
+    queries: (Q, D) unit-norm descriptors; keys: (C, D); valid: (C,) bool.
+    Returns (idx (Q, k) int32, score (Q, k) f32), scores descending, ties
+    toward the lower cache index.  k must be <= C.
+
+    impl: auto | pallas | pallas_interpret | ref
+    """
+    C = keys.shape[0]
+    assert k <= C, (k, C)
+    if impl == "auto":
+        impl = "pallas" if _backend_is_tpu() else "ref"
+    if impl == "ref":
+        return similarity_topk_ref(queries, keys, valid, k)
+
+    Q, D = queries.shape
+    bq = min(block_q, max(8, Q))
+    bc = max(min(block_c, max(8, C)), k)     # kernel needs k <= block_c
+    pad_q = (-Q) % bq
+    pad_c = (-C) % bc
+    qp = jnp.pad(queries, ((0, pad_q), (0, 0)))
+    kp = jnp.pad(keys, ((0, pad_c), (0, 0)))
+    vp = jnp.pad(valid.astype(jnp.int8), (0, pad_c))
+    idx, score = similarity_topk_kernel(
+        qp, kp, vp, k=k, block_q=bq, block_c=bc,
         interpret=(impl == "pallas_interpret"))
     return idx[:Q], score[:Q]

@@ -25,3 +25,22 @@ def similarity_lookup_ref(queries: jax.Array, keys: jax.Array,
     best_idx = jnp.argmax(scores, axis=1).astype(jnp.int32)
     best_score = jnp.max(scores, axis=1)
     return best_idx, best_score
+
+
+from repro.kernels.similarity.kernel import NEG_INF
+
+
+def similarity_topk_ref(queries: jax.Array, keys: jax.Array,
+                        valid: jax.Array, k: int):
+    """Top-k oracle.  queries: (Q, D); keys: (C, D); valid: (C,) bool.
+
+    Returns (idx (Q, k) int32, score (Q, k) f32), scores descending, ties
+    broken toward the lower cache index (``lax.top_k`` semantics).  Invalid
+    slots score ``NEG_INF`` (finite, so the tiled kernel and the sharded
+    merge reproduce the exact same bits).
+    """
+    scores = jnp.einsum("qd,cd->qc", queries.astype(jnp.float32),
+                        keys.astype(jnp.float32))
+    scores = jnp.where(valid[None, :], scores, NEG_INF)
+    top_scores, top_idx = jax.lax.top_k(scores, k)
+    return top_idx.astype(jnp.int32), top_scores

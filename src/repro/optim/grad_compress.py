@@ -63,19 +63,26 @@ def compressed_cross_pod_mean(grads: dict, state: CompressionState,
     """int8 error-feedback mean over ``axis_name``.  Must run inside
     shard_map with that axis unreduced.  The int8 payload is what crosses
     the inter-pod links; the psum itself runs in int32 to avoid overflow
-    (worst case pods * 127 << 2^31)."""
+    (worst case pods * 127 << 2^31).
+
+    All pods quantize with a *shared* scale (pmax of the per-pod absmax —
+    one extra scalar all-reduce) so the summed int8 payload dequantizes
+    exactly and the error-feedback residual equals the true wire error
+    ``g - q*scale``.  Quantizing with per-pod scales but dequantizing with
+    a shared one would bias every pod whose scale is below the max, and EF
+    would never see (or correct) that bias."""
     flat, treedef = jax.tree.flatten(grads)
     errs = jax.tree.leaves(state.error)
     outs, new_errs = [], []
     n = jax.lax.psum(1.0, axis_name)
     for g, e in zip(flat, errs):
-        q, scale, new_e = ef_int8_compress(g, e)
+        g = g.astype(jnp.float32) + e
+        absmax = jax.lax.pmax(jnp.max(jnp.abs(g)), axis_name)
+        scale = jnp.maximum(absmax / 127.0, 1e-12)
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
         q_sum = jax.lax.psum(q.astype(jnp.int32), axis_name)
-        scale_max = jax.lax.pmax(scale, axis_name)
-        # conservative shared scale: dequantize with each pod's own scale
-        # would need per-pod scales; psum of scaled int8 with max-scale bound
-        mean = q_sum.astype(jnp.float32) * scale_max / n
+        mean = q_sum.astype(jnp.float32) * scale / n
         outs.append(mean)
-        new_errs.append(new_e)
+        new_errs.append(g - q.astype(jnp.float32) * scale)
     return (jax.tree.unflatten(treedef, outs),
             CompressionState(error=jax.tree.unflatten(treedef, new_errs)))

@@ -21,9 +21,11 @@ Rule sets:
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -191,3 +193,82 @@ def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
 
 def current_sharder() -> Optional[ActivationSharder]:
     return _ACTIVE_SHARDER
+
+
+# ---------------------------------------------------------------------------
+# Cache-axis sharded cluster lookup (CoIC cooperative edge tier)
+# ---------------------------------------------------------------------------
+
+
+def _merge_shard_topk(shard_idx: jax.Array, shard_scores: jax.Array,
+                      out_k: int):
+    """Merge per-shard top-k' candidates: (N, Q, k') -> (Q, out_k).
+
+    Candidates are laid out shard-major, which is global-index order for
+    contiguous shards, and each shard's list is score-descending with
+    index-ordered ties — so ``lax.top_k``'s position tie-break reproduces a
+    single ``top_k`` over the full concatenated cache row bit-for-bit.
+    """
+    n, q, k_local = shard_scores.shape
+    cand_s = jnp.moveaxis(shard_scores, 0, 1).reshape(q, n * k_local)
+    cand_i = jnp.moveaxis(shard_idx, 0, 1).reshape(q, n * k_local)
+    top_s, pos = jax.lax.top_k(cand_s, out_k)
+    top_i = jnp.take_along_axis(cand_i, pos, axis=1)
+    return top_i.astype(jnp.int32), top_s
+
+
+@partial(jax.jit, static_argnames=("k", "impl"))
+def cluster_topk_lookup(queries: jax.Array, keys: jax.Array,
+                        valid: jax.Array, k: int, *, impl: str = "auto"):
+    """Cluster-wide lookup over stacked per-node cache shards, one jitted
+    call instead of N host round-trips.
+
+    queries: (Q, D) replicated; keys: (N, C, D); valid: (N, C).
+    Returns (idx (Q, k) int32 global indices in [0, N*C), score (Q, k) f32)
+    — equal to ``similarity_topk`` over the pooled ``keys.reshape(N*C, D)``.
+    """
+    from repro.kernels.similarity import similarity_topk
+
+    n, c, _ = keys.shape
+    local_idx, local_score = jax.vmap(
+        lambda kk, vv: similarity_topk(queries, kk, vv, min(k, c), impl=impl)
+    )(keys, valid)                                       # (N, Q, k'), k'<=k
+    offsets = (jnp.arange(n, dtype=jnp.int32) * c)[:, None, None]
+    return _merge_shard_topk(local_idx + offsets, local_score, min(k, n * c))
+
+
+def sharded_topk_lookup(queries: jax.Array, keys: jax.Array,
+                        valid: jax.Array, k: int, mesh: Mesh,
+                        axis_name: str = "cache", *, impl: str = "auto"):
+    """shard_map version of ``cluster_topk_lookup``: each device owns one
+    cache shard, computes its local top-k, and one all-gather of (k idx,
+    k score) per shard replaces shipping whole shards around.
+
+    queries: (Q, D) replicated; keys: (N, C, D) sharded over ``axis_name``
+    on dim 0; valid: (N, C) likewise.  N must equal the mesh axis size.
+    Returns replicated (idx (Q, k), score (Q, k)), identical to the
+    single-device ``cluster_topk_lookup`` result.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels.similarity import similarity_topk
+
+    n, c, _ = keys.shape
+    assert n == mesh.shape[axis_name], (n, dict(mesh.shape))
+    k_local = min(k, c)
+
+    def body(q, k_shard, v_shard):
+        kk, vv = k_shard[0], v_shard[0]                  # (1,C,D) -> (C,D)
+        idx, score = similarity_topk(q, kk, vv, k_local, impl=impl)
+        idx = idx + jax.lax.axis_index(axis_name).astype(jnp.int32) * c
+        g_idx = jax.lax.all_gather(idx, axis_name)       # (N, Q, k')
+        g_score = jax.lax.all_gather(score, axis_name)
+        return _merge_shard_topk(g_idx, g_score, min(k, n * c))
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(axis_name), P(axis_name)),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )(queries, keys, valid)

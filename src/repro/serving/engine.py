@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cluster import (TIER_PEER, ClusterConfig,
+                                CooperativeEdgeCluster)
 from repro.core.coic import CoICConfig
 from repro.core.descriptor import NgramSketchDescriptor, PrefixDescriptor
 from repro.core.semantic_cache import SemanticCache
@@ -50,7 +52,7 @@ class _Active:
 class ServedResult:
     req_id: int
     tokens: np.ndarray
-    source: str                      # edge | cloud
+    source: str                      # edge | peer | cloud
     latency_s: float
     decode_steps: int
 
@@ -77,9 +79,12 @@ class ServingEngine:
         self._prefill = jax.jit(
             lambda p, t: model.prefill(p, t, max_len=cfg.max_len))
 
-        # CoIC front
+        # CoIC front (single semantic cache, or a cooperative cluster when
+        # coic.num_nodes > 1 — each serving replica fronts one edge node)
         self.coic_cfg = cfg.coic
         self.semantic = None
+        self.sem_cluster = None
+        self._req_node: Dict[int, int] = {}
         if cfg.coic is not None:
             c = cfg.coic
             if c.descriptor == "prefix":
@@ -90,19 +95,40 @@ class ServingEngine:
                 sk = NgramSketchDescriptor(dim=c.descriptor_dim)
                 key_dim = c.descriptor_dim
                 self._desc_fn = jax.jit(lambda p, t: sk(t))
-            self.semantic = SemanticCache(
-                capacity=c.capacity, key_dim=key_dim,
-                payload_dim=cfg.max_new_tokens, threshold=c.threshold,
-                payload_dtype="int32", policy=c.policy, lookup_impl=c.lookup_impl)
-            self.sem_state = self.semantic.init()
+            if c.num_nodes > 1:
+                self.sem_cluster = CooperativeEdgeCluster(ClusterConfig(
+                    num_nodes=c.num_nodes, node_capacity=c.capacity,
+                    key_dim=key_dim, payload_dim=cfg.max_new_tokens,
+                    threshold=c.threshold, payload_dtype="int32",
+                    policy=c.policy, lookup_impl=c.lookup_impl,
+                    admission=c.admission, share=c.share))
+                self.semantic = self.sem_cluster.cache
+            else:
+                self.semantic = SemanticCache(
+                    capacity=c.capacity, key_dim=key_dim,
+                    payload_dim=cfg.max_new_tokens, threshold=c.threshold,
+                    payload_dtype="int32", policy=c.policy,
+                    lookup_impl=c.lookup_impl)
+                self.sem_state = self.semantic.init()
 
     # ------------------------------------------------------------------
-    def submit(self, prompt: np.ndarray) -> int:
-        """prompt: (S,) int32.  Returns request id (result arrives via
-        ``step()`` -> self.results)."""
+    def submit(self, prompt: np.ndarray, node_id: int = 0) -> int:
+        """prompt: (S,) int32 arriving at edge ``node_id`` (ignored without a
+        cluster).  Returns request id (result arrives via ``step()`` ->
+        self.results)."""
         rid = self._req_counter
         self._req_counter += 1
-        if self.semantic is not None:
+        if self.sem_cluster is not None:
+            desc = self._desc_fn(self.params, jnp.asarray(prompt[None, :]))
+            cres = self.sem_cluster.lookup(node_id, desc)
+            if bool(cres.hit[0]):
+                toks = np.asarray(cres.value[0], np.int32)
+                src = "peer" if cres.tier[0] == TIER_PEER else "edge"
+                self.results.append(ServedResult(
+                    req_id=rid, tokens=toks, source=src, latency_s=0.0,
+                    decode_steps=0))
+                return rid
+        elif self.semantic is not None:
             desc = self._desc_fn(self.params, jnp.asarray(prompt[None, :]))
             self.sem_state, res = self.semantic.lookup(self.sem_state, desc)
             if bool(res.hit[0]):
@@ -111,6 +137,7 @@ class ServingEngine:
                     req_id=rid, tokens=toks, source="edge", latency_s=0.0,
                     decode_steps=0))
                 return rid
+        self._req_node[rid] = node_id
         self.queue.append((rid, np.asarray(prompt, np.int32)))
         return rid
 
@@ -140,13 +167,17 @@ class ServingEngine:
             decode_steps=len(a.generated)))
         self.row_active[slot] = False
         self.free_slots.append(slot)
+        node = self._req_node.pop(a.req_id, 0)
         if self.semantic is not None:
             prompt = self._prompts.pop(a.req_id)
             desc = self._desc_fn(self.params, jnp.asarray(prompt[None, :]))
             pad = np.zeros((self.cfg.max_new_tokens,), np.int32)
             pad[:len(toks)] = toks
-            self.sem_state = self.semantic.insert(
-                self.sem_state, desc, jnp.asarray(pad[None, :]))
+            if self.sem_cluster is not None:
+                self.sem_cluster.insert(node, desc, jnp.asarray(pad[None, :]))
+            else:
+                self.sem_state = self.semantic.insert(
+                    self.sem_state, desc, jnp.asarray(pad[None, :]))
         else:
             self._prompts.pop(a.req_id, None)
 
@@ -181,8 +212,11 @@ class ServingEngine:
         out = {
             "completed": len(self.results),
             "edge_hits": sum(r.source == "edge" for r in self.results),
+            "peer_hits": sum(r.source == "peer" for r in self.results),
             "cloud": sum(r.source == "cloud" for r in self.results),
         }
-        if self.semantic is not None:
+        if self.sem_cluster is not None:
+            out["semantic"] = self.sem_cluster.stats()
+        elif self.semantic is not None:
             out["semantic"] = self.semantic.stats(self.sem_state)
         return out

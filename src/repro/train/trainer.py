@@ -121,6 +121,7 @@ def make_train_step_compressed(model, tcfg: TrainerConfig, mesh,
     Returns (train_step(state, err_state, batch) -> (state, err_state,
     metrics)).  Requires a mesh with a ``pod`` axis.
     """
+    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     from repro.optim.grad_compress import (CompressionState,
@@ -152,17 +153,17 @@ def make_train_step_compressed(model, tcfg: TrainerConfig, mesh,
             return grads, new_err, loss
 
         # params replicated across pods; batch sharded over pod; error local.
-        # jax.shard_map with axis_names={"pod"} leaves the other mesh axes to
+        # Only the pod axis is manual; ``auto`` leaves the other mesh axes to
         # GSPMD inside the body (intra-pod FSDP/TP unchanged).
         p_spec = jax.tree.map(lambda _: P(), state.params)
         b_spec = jax.tree.map(lambda _: P("pod"), batch)
         e_spec = jax.tree.map(lambda _: P("pod"), err)
-        grads, new_err, loss = jax.shard_map(
+        grads, new_err, loss = shard_map(
             pod_local, mesh=mesh,
             in_specs=(p_spec, b_spec, e_spec),
             out_specs=(p_spec, e_spec, P()),
-            axis_names=frozenset({"pod"}),
-            check_vma=False,
+            auto=auto_axes,
+            check_rep=False,
         )(state.params, batch, err)
 
         new_params, new_opt, opt_metrics = optimizer.update(

@@ -1,6 +1,8 @@
 """Hash cache (the paper's 3D-model/panorama path) properties."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.hash_cache import HashCache, content_hash
