@@ -22,6 +22,7 @@ def main() -> None:
         ("cache_lookup", cache_lookup.run),
         ("hit_rate", hit_rate.run),
         ("cooperative_hit_rate", cooperative_hit_rate.run),
+        ("cooperative_batched", cooperative_hit_rate.run_batched),
         ("block_reuse", block_reuse.run),
         ("roofline", roofline.run),
     ]

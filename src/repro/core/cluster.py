@@ -17,13 +17,24 @@ ladder per request batch:
 
 Peer hits refresh the owning shard's LRU/LFU state (``SemanticCache.touch``)
 and are optionally re-admitted into the serving node's shard
-(``admission="always"``), so hot items replicate toward their consumers —
+(``admission="always"``, or on the second peer hit with
+``admission="second_hit"``), so hot items replicate toward their consumers —
 eCAR/CloudAR-style cooperative sharing.
+
+Two request paths:
+
+* ``lookup(node, queries)`` — one node's batch, the per-request ladder.
+* ``lookup_grouped(queries, mask)`` — requests from ALL nodes at once as a
+  ``(num_nodes, B, D)`` grouped-query batch.  Rung 1 is ONE
+  ``similarity_topk_batched`` dispatch (every node's local shard probed for
+  that node's rows); rung 2 is ONE ``grouped_cluster_topk_lookup`` dispatch
+  spanning every shard.  This is the batched engine step's amortized ladder:
+  two device dispatches per step regardless of node count or batch size.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, NamedTuple, Optional
+from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +42,10 @@ import numpy as np
 
 from repro.core.policies import EvictionPolicy
 from repro.core.semantic_cache import SemanticCache, SemanticCacheState
-from repro.parallel.sharding import cluster_topk_lookup, sharded_topk_lookup
+from repro.kernels.similarity import similarity_topk_batched
+from repro.parallel.sharding import (cluster_topk_lookup,
+                                     grouped_cluster_topk_lookup,
+                                     sharded_topk_lookup)
 
 TIER_LOCAL, TIER_PEER, TIER_MISS = 0, 1, 2
 TIER_NAMES = ("local", "peer", "miss")
@@ -47,20 +61,26 @@ class ClusterConfig:
     payload_dtype: str = "float32"
     policy: EvictionPolicy = EvictionPolicy("lru")
     lookup_impl: str = "auto"
-    admission: str = "always"        # always | never — re-insert peer hits
+    # peer-hit re-admission into the serving node's shard:
+    #   always     — every peer hit is copied locally
+    #   never      — peer hits are served remotely, never copied
+    #   second_hit — copy on the 2nd peer hit of the same cached entry at
+    #                the same node (one-hit wonders never replicate)
+    admission: str = "always"
     share: bool = True               # False: isolated nodes (no peer tier)
 
     def __post_init__(self):
-        assert self.admission in ("always", "never"), self.admission
+        assert self.admission in ("always", "never", "second_hit"), \
+            self.admission
         assert self.num_nodes >= 1, self.num_nodes
 
 
 class ClusterLookupResult(NamedTuple):
-    hit: np.ndarray          # (Q,) bool — local or peer
-    tier: np.ndarray         # (Q,) int8 — TIER_LOCAL | TIER_PEER | TIER_MISS
-    owner: np.ndarray        # (Q,) int32 — serving node, -1 on miss
-    score: np.ndarray        # (Q,) f32 — best score at the serving tier
-    value: np.ndarray        # (Q, P) payload (zeros on miss)
+    hit: np.ndarray          # (...,) bool — local or peer
+    tier: np.ndarray         # (...,) int8 — TIER_LOCAL | TIER_PEER | TIER_MISS
+    owner: np.ndarray        # (...,) int32 — serving node, -1 on miss
+    score: np.ndarray        # (...,) f32 — best score at the serving tier
+    value: np.ndarray        # (..., P) payload (zeros on miss)
 
 
 class CooperativeEdgeCluster:
@@ -89,42 +109,144 @@ class CooperativeEdgeCluster:
         self.peer_hits = np.zeros((cfg.num_nodes,), np.int64)   # served-for-others
         self.peer_fills = np.zeros((cfg.num_nodes,), np.int64)  # admitted-from-peer
         self._keys_stack = None      # cached (N, C, D) stack; None = dirty
+        # second-hit admission: per-node count of peer hits per cached entry
+        # incarnation (owner, slot, inserted_at)
+        self._peer_seen: List[Dict[Tuple[int, int, int], int]] = [
+            {} for _ in range(cfg.num_nodes)]
+        self.probe_dispatches = 0    # similarity probes sent to the device
+
+    # ------------------------------------------------------------------
+    def _stacks(self):
+        """(keys (N, C, D), valid (N, C)) device stacks.  Keys are cached
+        across probes and invalidated on insert (keys only change there);
+        the valid stack is cheap and rebuilt each time so TTL expiry stays
+        correct.  Also returns the per-node alive masks for bookkeeping."""
+        if self._keys_stack is None:
+            self._keys_stack = jnp.stack([s.keys for s in self.states])
+        alive = [self.cache.policy.expire(s, s.clock) for s in self.states]
+        return self._keys_stack, jnp.stack(alive), alive
 
     # ------------------------------------------------------------------
     def _peer_probe(self, queries: jax.Array):
         """One collective top-1 probe over all shards.  Returns (global_idx,
         score) — global index in [0, N*C).
 
-        The (N, C, D) key stack is cached across probes and invalidated on
-        insert (keys only change there); the (N, C) valid stack is cheap and
-        rebuilt each time so TTL expiry stays correct.  Queries are zero-
-        padded to the next power of two so the jitted lookup doesn't retrace
-        on every distinct miss count.
+        Queries are zero-padded to the next power of two so the jitted
+        lookup doesn't retrace on every distinct miss count.
         """
-        if self._keys_stack is None:
-            self._keys_stack = jnp.stack([s.keys for s in self.states])
-        valid = jnp.stack([
-            self.cache.policy.expire(s, s.clock) for s in self.states])
+        keys, valid, _ = self._stacks()
         n = queries.shape[0]
         n_pad = 1 << (n - 1).bit_length()
         if n_pad > n:
             queries = jnp.pad(queries, ((0, n_pad - n), (0, 0)))
+        self.probe_dispatches += 1
         if self.mesh is not None:
             idx, score = sharded_topk_lookup(
-                queries, self._keys_stack, valid, 1, self.mesh,
+                queries, keys, valid, 1, self.mesh,
                 self.cache_axis, impl=self.cfg.lookup_impl)
         else:
             idx, score = cluster_topk_lookup(
-                queries, self._keys_stack, valid, 1, impl=self.cfg.lookup_impl)
+                queries, keys, valid, 1, impl=self.cfg.lookup_impl)
         return idx[:n, 0], score[:n, 0]
+
+    # ------------------------------------------------------------------
+    def _admission_filter(self, node: int, owner: int, slots: np.ndarray,
+                          owner_state: SemanticCacheState) -> np.ndarray:
+        """Which of ``slots`` (peer hits served by ``owner`` for ``node``)
+        get re-admitted into ``node``'s shard, per ``cfg.admission``.
+        ``owner_state`` is the owner shard as of the probe (pre-step
+        snapshot in the grouped path)."""
+        if self.cfg.admission == "never":
+            return np.zeros((len(slots),), bool)
+        if self.cfg.admission == "always":
+            return np.ones((len(slots),), bool)
+        # second_hit: count peer hits per entry incarnation; admit at >= 2.
+        # inserted_at disambiguates slot reuse after eviction.
+        ins = np.asarray(owner_state.inserted_at)
+        seen = self._peer_seen[node]
+        admit = np.zeros((len(slots),), bool)
+        for i, slot in enumerate(np.asarray(slots)):
+            key = (owner, int(slot), int(ins[slot]))
+            seen[key] = seen.get(key, 0) + 1
+            admit[i] = seen[key] >= 2
+        if len(seen) > 4 * self.cfg.num_nodes * self.cfg.node_capacity:
+            self._prune_peer_seen(node)
+        return admit
+
+    def _prune_peer_seen(self, node: int) -> None:
+        """Drop counters whose entry incarnation was evicted (its slot's
+        inserted_at no longer matches) — bounds host memory under churn."""
+        ins = {p: np.asarray(s.inserted_at) for p, s in enumerate(self.states)}
+        self._peer_seen[node] = {
+            k: v for k, v in self._peer_seen[node].items()
+            if int(ins[k[0]][k[1]]) == k[2]}
+
+    # ------------------------------------------------------------------
+    def _serve_peer_hits(self, node: int, queries: jax.Array,
+                         miss_rows: np.ndarray, g_idx: np.ndarray,
+                         g_score: np.ndarray, hit, tier, owner, score, value,
+                         snapshot: Optional[List[SemanticCacheState]] = None
+                         ) -> int:
+        """Fold a cluster-wide probe of ``node``'s local misses into the
+        result arrays: serve rows whose best global match is an
+        above-threshold peer entry, touch the owners, apply admission.
+        Returns the number of peer-served rows (for the local-miss rebate).
+
+        ``miss_rows`` indexes the result arrays; ``g_idx``/``g_score`` are
+        the global top-1 per miss row.  The local shard already reported a
+        sub-threshold best for these rows, so a cluster-wide top-1 above
+        threshold always lives on a peer.
+
+        ``snapshot``: the shard states the probe ran against.  The grouped
+        path MUST pass its pre-step snapshot — intra-step admissions can
+        evict/overwrite an owner slot a later group's probe result points
+        into, and payloads must come from the probed state, not the
+        mutated one.  Touches/admissions still apply to the live states.
+        """
+        cfg = self.cfg
+        probed = self.states if snapshot is None else snapshot
+        peer_hit = g_score >= cfg.threshold
+        owners = (g_idx // cfg.node_capacity).astype(np.int32)
+        slots = (g_idx % cfg.node_capacity).astype(np.int32)
+        n_peer_served = 0
+        for p in range(cfg.num_nodes):
+            sel = peer_hit & (owners == p)
+            if not sel.any() or p == node:
+                continue
+            rows = miss_rows[sel]
+            vals = np.asarray(probed[p].values)[slots[sel]]
+            value[rows] = vals
+            score[rows] = g_score[sel]
+            tier[rows] = TIER_PEER
+            owner[rows] = p
+            hit[rows] = True
+            n_peer_served += int(sel.sum())
+            self.peer_hits[p] += int(sel.sum())
+            self.states[p] = self.cache.touch(
+                self.states[p], jnp.asarray(slots[sel]),
+                jnp.ones((int(sel.sum()),), bool))
+            admit = self._admission_filter(node, p, slots[sel], probed[p])
+            if admit.any():
+                # de-duplicate entries within the batch: one admission per
+                # distinct cached entry (a sequential stream would hit the
+                # fresh local copy on the repeat instead of re-admitting)
+                _, first = np.unique(slots[sel][admit], return_index=True)
+                arows = rows[admit][np.sort(first)]
+                avals = vals[admit][np.sort(first)]
+                self.states[node] = self.cache.insert(
+                    self.states[node], queries[jnp.asarray(arows)],
+                    jnp.asarray(avals))
+                self.peer_fills[node] += len(arows)
+                self._keys_stack = None
+        return n_peer_served
 
     # ------------------------------------------------------------------
     def lookup(self, node: int, queries: jax.Array) -> ClusterLookupResult:
         """queries: (Q, D) unit descriptors arriving at ``node``."""
         cfg = self.cfg
-        Q = queries.shape[0]
         queries = jnp.asarray(queries)
 
+        self.probe_dispatches += 1
         self.states[node], res = self.cache.lookup(self.states[node], queries)
         hit = np.array(res.hit)
         score = np.array(res.score)
@@ -136,36 +258,9 @@ class CooperativeEdgeCluster:
         if miss_rows.size and cfg.share and cfg.num_nodes > 1:
             q_miss = queries[jnp.asarray(miss_rows)]
             g_idx, g_score = self._peer_probe(q_miss)
-            g_idx = np.asarray(g_idx)
-            g_score = np.asarray(g_score)
-            peer_hit = g_score >= cfg.threshold
-            owners = (g_idx // cfg.node_capacity).astype(np.int32)
-            slots = (g_idx % cfg.node_capacity).astype(np.int32)
-            # the local shard already reported a sub-threshold best, so a
-            # cluster-wide top-1 above threshold always lives on a peer
-            n_peer_served = 0
-            for p in range(cfg.num_nodes):
-                sel = peer_hit & (owners == p)
-                if not sel.any() or p == node:
-                    continue
-                rows = miss_rows[sel]
-                vals = np.asarray(self.states[p].values)[slots[sel]]
-                value[rows] = vals
-                score[rows] = g_score[sel]
-                tier[rows] = TIER_PEER
-                owner[rows] = p
-                hit[rows] = True
-                n_peer_served += int(sel.sum())
-                self.peer_hits[p] += int(sel.sum())
-                self.states[p] = self.cache.touch(
-                    self.states[p], jnp.asarray(slots[sel]),
-                    jnp.ones((int(sel.sum()),), bool))
-                if cfg.admission == "always":
-                    self.states[node] = self.cache.insert(
-                        self.states[node], queries[jnp.asarray(rows)],
-                        jnp.asarray(vals))
-                    self.peer_fills[node] += int(sel.sum())
-                    self._keys_stack = None
+            n_peer_served = self._serve_peer_hits(
+                node, queries, miss_rows, np.asarray(g_idx),
+                np.asarray(g_score), hit, tier, owner, score, value)
             if n_peer_served:
                 # the local shard counted these as misses, but the owner
                 # shard counted the served hit — undo the local miss so
@@ -174,6 +269,81 @@ class CooperativeEdgeCluster:
                 self.states[node] = dataclasses.replace(
                     self.states[node],
                     misses=self.states[node].misses - n_peer_served)
+
+        return ClusterLookupResult(hit=hit, tier=tier, owner=owner,
+                                   score=score, value=value)
+
+    # ------------------------------------------------------------------
+    def lookup_grouped(self, queries: jax.Array,
+                       mask: Optional[np.ndarray] = None
+                       ) -> ClusterLookupResult:
+        """The batched engine step's ladder: queries (num_nodes, B, D) —
+        group g holds the request batch that arrived at edge node g; mask
+        (num_nodes, B) bool selects real rows (groups are padded to a common
+        width).  Returns a ClusterLookupResult with (num_nodes, B) leading
+        dims; padding rows report miss/zero and leave no state trace.
+
+        Rung 1 (local) is ONE ``similarity_topk_batched`` dispatch over the
+        stacked shards; rung 2 (peer) is ONE ``grouped_cluster_topk_lookup``
+        dispatch spanning every shard — per-request semantics identical to
+        ``lookup`` called per node (modulo clock granularity: one tick per
+        step instead of one per call).
+        """
+        cfg = self.cfg
+        queries = jnp.asarray(queries)
+        G, B, _ = queries.shape
+        assert G == cfg.num_nodes, (G, cfg.num_nodes)
+        mask_np = (np.ones((G, B), bool) if mask is None
+                   else np.asarray(mask, bool))
+
+        # ---- rung 1: every node's own shard, one batched-kernel dispatch
+        keys, valid, alive = self._stacks()
+        self.probe_dispatches += 1
+        l_idx, l_score = similarity_topk_batched(
+            queries, keys, valid, 1, impl=cfg.lookup_impl)
+        l_idx, l_score = l_idx[..., 0], l_score[..., 0]
+
+        hit = np.zeros((G, B), bool)
+        score = np.zeros((G, B), np.float32)
+        tier = np.full((G, B), TIER_MISS, np.int8)
+        owner = np.full((G, B), -1, np.int32)
+        value = np.zeros((G, B, cfg.payload_dim),
+                         np.dtype(cfg.payload_dtype))
+        for g in range(G):
+            self.states[g], res = self.cache.apply_probe(
+                self.states[g], l_idx[g], l_score[g],
+                mask=jnp.asarray(mask_np[g]), alive=alive[g])
+            hit[g] = np.asarray(res.hit)
+            score[g] = np.asarray(res.score)
+            value[g] = np.asarray(res.value)
+        tier[hit] = TIER_LOCAL
+        owner[hit] = np.nonzero(hit)[0].astype(np.int32)
+
+        # ---- rung 2: one grouped probe spanning every shard
+        any_miss = (~hit & mask_np)
+        if any_miss.any() and cfg.share and cfg.num_nodes > 1:
+            g_idx, g_score = grouped_cluster_topk_lookup(
+                queries, keys, valid, 1, impl=cfg.lookup_impl)
+            self.probe_dispatches += 1
+            g_idx = np.asarray(g_idx[..., 0])
+            g_score = np.asarray(g_score[..., 0])
+            # states are functional, so holding the pre-serve list is a free
+            # snapshot: every group's payload reads resolve against the
+            # state the probe scanned, however earlier groups' admissions
+            # mutate the live shards
+            probed = list(self.states)
+            for g in range(G):
+                miss_rows = np.nonzero(any_miss[g])[0]
+                if not miss_rows.size:
+                    continue
+                n_served = self._serve_peer_hits(
+                    g, queries[g], miss_rows, g_idx[g][miss_rows],
+                    g_score[g][miss_rows], hit[g], tier[g], owner[g],
+                    score[g], value[g], snapshot=probed)
+                if n_served:
+                    self.states[g] = dataclasses.replace(
+                        self.states[g],
+                        misses=self.states[g].misses - n_served)
 
         return ClusterLookupResult(hit=hit, tier=tier, owner=owner,
                                    score=score, value=value)
@@ -204,4 +374,5 @@ class CooperativeEdgeCluster:
             "hits": total_hits,
             "misses": total_misses,
             "hit_rate": (total_hits / tot) if tot else 0.0,
+            "probe_dispatches": self.probe_dispatches,
         }

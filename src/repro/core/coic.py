@@ -48,7 +48,8 @@ class CoICConfig:
     # cooperative cluster tier (core/cluster.py); 1 == single isolated cache
     num_nodes: int = 1
     share: bool = True               # peer tier on local miss
-    admission: str = "always"        # re-insert peer hits locally
+    admission: str = "always"        # always | never | second_hit (peer-hit
+                                     # re-admission, see ClusterConfig)
 
 
 @dataclasses.dataclass
@@ -166,24 +167,30 @@ class CoICEngine:
                     self.state = self.cache.insert(
                         self.state, jnp.asarray(miss_desc), cloud_vals)
 
-        # a cooperative miss pays the fruitless peer descriptor broadcast
-        peer_waste_ms = 0.0
+        # Per-tier amortization: the whole batch shares one descriptor
+        # extraction and one cluster-probe dispatch; all local misses share
+        # ONE peer descriptor broadcast (fruitful for peer hits, fruitless
+        # for cloud misses) — each request's breakdown carries its share.
+        n_local_miss = int((np.asarray(tier) != TIER_LOCAL).sum())
+        peer_share_ms = 0.0
         if self.cluster is not None and self.cfg.share and self.cfg.num_nodes > 1:
-            peer_waste_ms = self.network.edge_to_edge_ms(
-                self.sizes.descriptor_bytes)
+            peer_share_ms = self.router.peer_broadcast_ms(n_local_miss)
 
         results = []
         for b in range(B):
             if tier[b] == TIER_LOCAL:
-                lat = self.router.hit_latency(per_req_desc_ms, lookup_ms)
+                lat = self.router.hit_latency(per_req_desc_ms, lookup_ms,
+                                              batch=B)
                 src = "edge"
             elif tier[b] == TIER_PEER:
-                lat = self.router.peer_hit_latency(per_req_desc_ms, lookup_ms)
+                lat = self.router.peer_hit_latency(per_req_desc_ms, lookup_ms,
+                                                   batch=n_local_miss)
                 src = "peer"
             else:
                 lat = self.router.miss_latency(per_req_desc_ms, lookup_ms,
                                                float(cloud_ms[b]),
-                                               peer_net_ms=peer_waste_ms)
+                                               peer_net_ms=peer_share_ms,
+                                               batch=B)
                 src = "cloud"
             origin = self.router.origin_latency(float(cloud_ms[b]) if not hit[b]
                                                 else self._mean_cloud_ms())

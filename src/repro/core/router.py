@@ -26,6 +26,15 @@ from repro.core.network import NetworkModel
 
 @dataclasses.dataclass
 class LatencyBreakdown:
+    """Per-request latency terms, in ms.
+
+    All components are *per-request amortized*: when a batched engine step
+    shares one descriptor extraction, one cluster probe, or one peer
+    broadcast across many requests, each request's breakdown carries its
+    share of the dispatch and ``amortized_over`` records how many requests
+    split it (1 == unbatched, the sequential path).
+    """
+
     descriptor_ms: float = 0.0
     uplink_ms: float = 0.0
     lookup_ms: float = 0.0
@@ -33,6 +42,7 @@ class LatencyBreakdown:
     cloud_net_ms: float = 0.0
     cloud_compute_ms: float = 0.0
     downlink_ms: float = 0.0
+    amortized_over: int = 1          # requests sharing the batched dispatch
 
     @property
     def total_ms(self) -> float:
@@ -57,34 +67,53 @@ class TwoTierRouter:
         self.net = network
         self.sizes = sizes
 
-    def hit_latency(self, descriptor_ms: float, lookup_ms: float) -> LatencyBreakdown:
+    def peer_broadcast_ms(self, n_requests: int) -> float:
+        """Per-request share of ONE peer descriptor broadcast carrying
+        ``n_requests`` descriptors: the RTT is paid once for the batched
+        message, the bytes scale — the batching win on the wire."""
+        n = max(1, n_requests)
+        return self.net.edge_to_edge_ms(self.sizes.descriptor_bytes * n) / n
+
+    def hit_latency(self, descriptor_ms: float, lookup_ms: float,
+                    batch: int = 1) -> LatencyBreakdown:
+        """``batch``: requests sharing the descriptor-extraction + lookup
+        dispatch (``descriptor_ms``/``lookup_ms`` are already per-request
+        amortized by the caller)."""
         return LatencyBreakdown(
             descriptor_ms=descriptor_ms,
             uplink_ms=self.net.client_to_edge_ms(self.sizes.descriptor_bytes),
             lookup_ms=lookup_ms,
             downlink_ms=self.net.edge_to_client_ms(self.sizes.result_bytes),
+            amortized_over=batch,
         )
 
     def peer_hit_latency(self, descriptor_ms: float, lookup_ms: float,
-                         peer_lookup_ms: float = 0.0) -> LatencyBreakdown:
+                         peer_lookup_ms: float = 0.0,
+                         batch: int = 1) -> LatencyBreakdown:
         """Local miss, peer hit: the descriptor is broadcast to the peer
         shards over the edge<->edge link and the winning peer ships the
-        result back — no WAN round-trip, no cloud compute."""
+        result back — no WAN round-trip, no cloud compute.  With ``batch``
+        > 1 the broadcast carries the whole miss batch's descriptors and
+        each request pays its share (one LAN RTT split ``batch`` ways)."""
         s = self.sizes
+        n = max(1, batch)
         return LatencyBreakdown(
             descriptor_ms=descriptor_ms,
             uplink_ms=self.net.client_to_edge_ms(s.descriptor_bytes),
             lookup_ms=lookup_ms + peer_lookup_ms,
-            peer_net_ms=(self.net.edge_to_edge_ms(s.descriptor_bytes)
-                         + self.net.edge_to_edge_ms(s.result_bytes)),
+            peer_net_ms=(self.net.edge_to_edge_ms(s.descriptor_bytes * n) / n
+                         + self.net.edge_to_edge_ms(s.result_bytes * n) / n),
             downlink_ms=self.net.edge_to_client_ms(s.result_bytes),
+            amortized_over=n,
         )
 
     def miss_latency(self, descriptor_ms: float, lookup_ms: float,
                      cloud_compute_ms: float,
-                     peer_net_ms: float = 0.0) -> LatencyBreakdown:
-        """``peer_net_ms``: cost of the (fruitless) peer broadcast a
-        cooperative cluster pays before falling through to the cloud."""
+                     peer_net_ms: float = 0.0,
+                     batch: int = 1) -> LatencyBreakdown:
+        """``peer_net_ms``: per-request share of the (fruitless) peer
+        broadcast a cooperative cluster pays before falling through to the
+        cloud (compute it with ``peer_broadcast_ms`` when batching)."""
         s = self.sizes
         return LatencyBreakdown(
             descriptor_ms=descriptor_ms,
@@ -96,6 +125,7 @@ class TwoTierRouter:
                           + self.net.cloud_to_edge_ms(s.result_bytes)),
             cloud_compute_ms=cloud_compute_ms,
             downlink_ms=self.net.edge_to_client_ms(s.result_bytes),
+            amortized_over=batch,
         )
 
     def origin_latency(self, cloud_compute_ms: float) -> LatencyBreakdown:

@@ -76,13 +76,39 @@ class SemanticCache:
 
     # ------------------------------------------------------------------
     @partial(jax.jit, static_argnames=("self",))
-    def lookup(self, state: SemanticCacheState, queries: jax.Array
+    def lookup(self, state: SemanticCacheState, queries: jax.Array,
+               mask: Optional[jax.Array] = None
                ) -> Tuple[SemanticCacheState, LookupResult]:
-        """queries: (Q, D) unit descriptors.  Updates LRU/LFU/stat fields."""
+        """queries: (Q, D) unit descriptors.  Updates LRU/LFU/stat fields.
+        ``mask`` (Q,) bool selects real rows — padding rows (batched engine
+        steps pad to fixed widths) never hit, touch, or count in stats."""
         alive = self.policy.expire(state, state.clock)
         idx, score = similarity_lookup(queries, state.keys, alive,
                                        impl=self.lookup_impl)
-        hit = (score >= self.threshold) & jnp.take(alive, idx)
+        return self.apply_probe(state, idx, score, mask=mask, alive=alive)
+
+    # ------------------------------------------------------------------
+    @partial(jax.jit, static_argnames=("self",))
+    def apply_probe(self, state: SemanticCacheState, idx: jax.Array,
+                    score: jax.Array, mask: Optional[jax.Array] = None,
+                    alive: Optional[jax.Array] = None
+                    ) -> Tuple[SemanticCacheState, LookupResult]:
+        """Batched-lookup contract: fold externally-computed probe results
+        into this shard exactly as ``lookup`` would.
+
+        ``(idx, score)`` is a best-match probe per query — typically one row
+        of the grouped ``similarity_topk_batched`` dispatch that scanned all
+        shards at once.  Applies hit thresholding, LRU/LFU touches, hit/miss
+        counters, and one clock tick.  ``mask`` rows that are False are
+        padding: no hit, no touch, no stats.  ``alive`` is the TTL-expiry
+        mask the probe was computed against (recomputed when omitted).
+        """
+        Q = idx.shape[0]
+        if mask is None:
+            mask = jnp.ones((Q,), bool)
+        if alive is None:
+            alive = self.policy.expire(state, state.clock)
+        hit = (score >= self.threshold) & jnp.take(alive, idx) & mask
         value = jnp.where(hit[:, None], state.values[idx], 0)
 
         # touch hit slots (scatter-max the clock, scatter-add freq)
@@ -91,11 +117,12 @@ class SemanticCache:
                                                     mode="drop")
         freq = state.freq.at[touched].add(1, mode="drop")
         nhit = hit.sum(dtype=jnp.int32)
+        nreal = mask.sum(dtype=jnp.int32)
         new_state = dataclasses.replace(
             state, valid=alive, last_used=last_used, freq=freq,
             clock=state.clock + 1,
             hits=state.hits + nhit,
-            misses=state.misses + (hit.shape[0] - nhit))
+            misses=state.misses + (nreal - nhit))
         return new_state, LookupResult(hit, idx, score, value)
 
     # ------------------------------------------------------------------

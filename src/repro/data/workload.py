@@ -64,3 +64,27 @@ class ZipfWorkload:
         for _ in range(steps):
             yield [(n, *self.sample(rng, n, batch))
                    for n in range(self.num_nodes)]
+
+    # ------------------------------------------------------------------
+    def token_prompts(self, vocab_size: int, prompt_len: int) -> np.ndarray:
+        """(pool_size, prompt_len) int32 — one deterministic token prompt
+        per scene, for driving the serving engine with this workload (the
+        scene id is the request content; the engine's descriptor replaces
+        ``self.scenes``)."""
+        rng = np.random.default_rng(self.seed + 0x9E3779B9)
+        return rng.integers(0, vocab_size, size=(self.pool_size, prompt_len)
+                            ).astype(np.int32)
+
+    def stream_ids(self, steps: int, batch: int, seed: int = 1
+                   ) -> Iterator[List[Tuple[int, np.ndarray]]]:
+        """Like ``stream`` but scene ids only (no descriptors) — for
+        engine-level benchmarks that derive their own descriptors from
+        token prompts.  Same node/id sequence as ``stream`` under the same
+        seed."""
+        rng = np.random.default_rng(seed)
+        for _ in range(steps):
+            round_ = []
+            for n in range(self.num_nodes):
+                ids, _ = self.sample(rng, n, batch)
+                round_.append((n, ids))
+            yield round_

@@ -1,3 +1,5 @@
-from repro.kernels.similarity.ops import similarity_lookup, similarity_topk
+from repro.kernels.similarity.ops import (similarity_lookup, similarity_topk,
+                                          similarity_topk_batched)
 from repro.kernels.similarity.ref import (similarity_lookup_ref,
+                                          similarity_topk_batched_ref,
                                           similarity_topk_ref)

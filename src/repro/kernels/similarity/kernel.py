@@ -50,41 +50,27 @@ def _lookup_kernel(q_ref, k_ref, valid_ref, idx_ref, score_ref, *, block_c: int)
     idx_ref[...] = jnp.where(take_new, local_arg, prev_arg)
 
 
-def _topk_kernel(q_ref, k_ref, valid_ref, idx_ref, score_ref, *,
-                 block_c: int, k: int):
-    """One (q-block, c-block) grid step of the tiled top-k lookup.
+def _topk_tile(q, kk, valid, carry_s, carry_i, *, block_c: int, k: int,
+               c_block_index):
+    """Merge one (BQ, D) x (BC, D) score tile into the carried top-k.
 
-    The running (scores, indices) top-k for a query tile lives in the output
-    blocks (persist across the inner grid dim).  Each step concatenates the
-    carried top-k with the new block's scores and re-selects k by iterated
-    masked argmax — k is small and static, so this is k VPU reductions per
-    tile, no sort.  Candidate order is [carried | new block]; argmax breaks
-    ties toward the first occurrence, so equal scores resolve to the lowest
-    global cache index — exactly ``lax.top_k`` semantics on the full row.
+    Concatenates the carried top-k with the new block's scores and re-selects
+    k by iterated masked argmax — k is small and static, so this is k VPU
+    reductions per tile, no sort.  Candidate order is [carried | new block];
+    argmax breaks ties toward the first occurrence, so equal scores resolve
+    to the lowest global cache index — exactly ``lax.top_k`` semantics on the
+    full row.  Returns (scores (BQ, k), idx (BQ, k)).
     """
-    j = pl.program_id(1)
-
-    q = q_ref[...].astype(jnp.float32)                  # (BQ, D)
-    kk = k_ref[...].astype(jnp.float32)                 # (BC, D)
-    valid = valid_ref[...]                              # (BC,) int8
-
     scores = jax.lax.dot_general(
         q, kk, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)             # (BQ, BC)
     scores = jnp.where(valid[None, :] != 0, scores, NEG_INF)
     bq = scores.shape[0]
     local_idx = (jax.lax.broadcasted_iota(jnp.int32, (bq, block_c), 1)
-                 + j * block_c)
+                 + c_block_index * block_c)
 
-    @pl.when(j == 0)
-    def _init():
-        score_ref[...] = jnp.full_like(score_ref, NEG_INF)
-        # iota init: an all-invalid cache yields indices 0..k-1, matching
-        # the oracle's tie-break over a constant row
-        idx_ref[...] = jax.lax.broadcasted_iota(jnp.int32, idx_ref.shape, 1)
-
-    cand_scores = jnp.concatenate([score_ref[...], scores], axis=1)
-    cand_idx = jnp.concatenate([idx_ref[...], local_idx], axis=1)
+    cand_scores = jnp.concatenate([carry_s, scores], axis=1)
+    cand_idx = jnp.concatenate([carry_i, local_idx], axis=1)
     n_cand = cand_scores.shape[1]
     lanes = jax.lax.broadcasted_iota(jnp.int32, (bq, n_cand), 1)
     out_s, out_i = [], []
@@ -94,8 +80,57 @@ def _topk_kernel(q_ref, k_ref, valid_ref, idx_ref, score_ref, *,
         out_s.append(jnp.max(cand_scores, axis=1))
         out_i.append(jnp.sum(jnp.where(onehot, cand_idx, 0), axis=1))
         cand_scores = jnp.where(onehot, -jnp.inf, cand_scores)
-    score_ref[...] = jnp.stack(out_s, axis=1)
-    idx_ref[...] = jnp.stack(out_i, axis=1)
+    return jnp.stack(out_s, axis=1), jnp.stack(out_i, axis=1)
+
+
+def _topk_kernel(q_ref, k_ref, valid_ref, idx_ref, score_ref, *,
+                 block_c: int, k: int):
+    """One (q-block, c-block) grid step of the tiled top-k lookup.
+
+    The running (scores, indices) top-k for a query tile lives in the output
+    blocks (persist across the inner grid dim).
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        score_ref[...] = jnp.full_like(score_ref, NEG_INF)
+        # iota init: an all-invalid cache yields indices 0..k-1, matching
+        # the oracle's tie-break over a constant row
+        idx_ref[...] = jax.lax.broadcasted_iota(jnp.int32, idx_ref.shape, 1)
+
+    s, i = _topk_tile(q_ref[...].astype(jnp.float32),
+                      k_ref[...].astype(jnp.float32),
+                      valid_ref[...], score_ref[...], idx_ref[...],
+                      block_c=block_c, k=k, c_block_index=j)
+    score_ref[...] = s
+    idx_ref[...] = i
+
+
+def _topk_batched_kernel(q_ref, k_ref, valid_ref, idx_ref, score_ref, *,
+                         block_c: int, k: int):
+    """One (batch, q-block, c-block) grid step: identical math to
+    ``_topk_kernel``, but every batch entry probes its *own* key matrix —
+    the grouped-query path (each edge node's local shard probed for that
+    node's request batch in a single dispatch).
+
+    Refs carry a leading singleton batch dim; the c-block index moves to
+    grid dim 2 (innermost, so the per-(batch, q-block) output blocks persist
+    across it exactly as in the unbatched kernel).
+    """
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        score_ref[...] = jnp.full_like(score_ref, NEG_INF)
+        idx_ref[...] = jax.lax.broadcasted_iota(jnp.int32, idx_ref.shape, 2)
+
+    s, i = _topk_tile(q_ref[0].astype(jnp.float32),
+                      k_ref[0].astype(jnp.float32),
+                      valid_ref[0], score_ref[0], idx_ref[0],
+                      block_c=block_c, k=k, c_block_index=j)
+    score_ref[0] = s
+    idx_ref[0] = i
 
 
 @functools.partial(jax.jit,
@@ -130,6 +165,50 @@ def similarity_topk_kernel(queries: jax.Array, keys: jax.Array,
         out_shape=[
             jax.ShapeDtypeStruct((Q, k), jnp.int32),
             jax.ShapeDtypeStruct((Q, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(queries, keys, valid.astype(jnp.int8))
+    return idx, score
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_q", "block_c", "interpret"))
+def similarity_topk_batched_kernel(queries: jax.Array, keys: jax.Array,
+                                   valid: jax.Array, *, k: int,
+                                   block_q: int = 128, block_c: int = 512,
+                                   interpret: bool = False):
+    """queries: (N, Q, D); keys: (N, C, D); valid: (N, C) bool/int8.
+
+    Batched variant of ``similarity_topk_kernel``: batch entry ``n``'s
+    queries are scored against key matrix ``n`` only (grid over batch).
+    Returns (idx (N, Q, k) int32, score (N, Q, k) f32), scores descending,
+    bit-exact vs a vmapped ``similarity_topk_ref``.  Q and C must be
+    multiples of the block sizes (ops.py pads); k <= block_c.
+    """
+    N, Q, D = queries.shape
+    C = keys.shape[1]
+    assert keys.shape[0] == N and valid.shape == (N, C), (
+        queries.shape, keys.shape, valid.shape)
+    assert Q % block_q == 0 and C % block_c == 0, (Q, C, block_q, block_c)
+    assert k <= block_c, (k, block_c)
+    grid = (N, Q // block_q, C // block_c)
+
+    kernel = functools.partial(_topk_batched_kernel, block_c=block_c, k=k)
+    idx, score = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda n, i, j: (n, i, 0)),
+            pl.BlockSpec((1, block_c, D), lambda n, i, j: (n, j, 0)),
+            pl.BlockSpec((1, block_c), lambda n, i, j: (n, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, k), lambda n, i, j: (n, i, 0)),
+            pl.BlockSpec((1, block_q, k), lambda n, i, j: (n, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, Q, k), jnp.int32),
+            jax.ShapeDtypeStruct((N, Q, k), jnp.float32),
         ],
         interpret=interpret,
     )(queries, keys, valid.astype(jnp.int8))

@@ -12,8 +12,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.similarity.kernel import (NEG_INF, similarity_lookup_kernel,
+                                             similarity_topk_batched_kernel,
                                              similarity_topk_kernel)
 from repro.kernels.similarity.ref import (similarity_lookup_ref,
+                                          similarity_topk_batched_ref,
                                           similarity_topk_ref)
 
 
@@ -84,3 +86,40 @@ def similarity_topk(queries: jax.Array, keys: jax.Array, valid: jax.Array,
         qp, kp, vp, k=k, block_q=bq, block_c=bc,
         interpret=(impl == "pallas_interpret"))
     return idx[:Q], score[:Q]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "impl", "block_q", "block_c"))
+def similarity_topk_batched(queries: jax.Array, keys: jax.Array,
+                            valid: jax.Array, k: int, *, impl: str = "auto",
+                            block_q: int = 128, block_c: int = 512):
+    """Grouped-query top-k lookup: batch entry ``n`` probes key matrix ``n``
+    only — one dispatch for N per-node local-shard lookups (the batched
+    engine step's local rung).
+
+    queries: (N, Q, D) unit-norm descriptors; keys: (N, C, D); valid: (N, C)
+    bool.  Returns (idx (N, Q, k) int32, score (N, Q, k) f32), scores
+    descending, ties toward the lower cache index — bit-exact vs a vmapped
+    ``similarity_topk_ref``.  k must be <= C.
+
+    impl: auto | pallas | pallas_interpret | ref
+    """
+    N, Q, D = queries.shape
+    C = keys.shape[1]
+    assert k <= C, (k, C)
+    if impl == "auto":
+        impl = "pallas" if _backend_is_tpu() else "ref"
+    if impl == "ref":
+        return similarity_topk_batched_ref(queries, keys, valid, k)
+
+    bq = min(block_q, max(8, Q))
+    bc = max(min(block_c, max(8, C)), k)     # kernel needs k <= block_c
+    pad_q = (-Q) % bq
+    pad_c = (-C) % bc
+    qp = jnp.pad(queries, ((0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(keys, ((0, 0), (0, pad_c), (0, 0)))
+    vp = jnp.pad(valid.astype(jnp.int8), ((0, 0), (0, pad_c)))
+    idx, score = similarity_topk_batched_kernel(
+        qp, kp, vp, k=k, block_q=bq, block_c=bc,
+        interpret=(impl == "pallas_interpret"))
+    return idx[:, :Q], score[:, :Q]

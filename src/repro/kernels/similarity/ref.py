@@ -44,3 +44,15 @@ def similarity_topk_ref(queries: jax.Array, keys: jax.Array,
     scores = jnp.where(valid[None, :], scores, NEG_INF)
     top_scores, top_idx = jax.lax.top_k(scores, k)
     return top_idx.astype(jnp.int32), top_scores
+
+
+def similarity_topk_batched_ref(queries: jax.Array, keys: jax.Array,
+                                valid: jax.Array, k: int):
+    """Vmapped top-k oracle for the grouped-query path.
+
+    queries: (N, Q, D); keys: (N, C, D); valid: (N, C) — batch entry ``n``
+    is scored against key matrix ``n`` only.  Returns (idx (N, Q, k) int32,
+    score (N, Q, k) f32) with ``similarity_topk_ref`` semantics per entry.
+    """
+    return jax.vmap(similarity_topk_ref, in_axes=(0, 0, 0, None))(
+        queries, keys, valid, k)

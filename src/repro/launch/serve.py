@@ -29,6 +29,10 @@ def main():
     ap.add_argument("--threshold", type=float, default=0.98)
     ap.add_argument("--capacity", type=int, default=512)
     ap.add_argument("--policy", default="lru", choices=["lru", "lfu", "fifo"])
+    ap.add_argument("--scheduling", default="batched",
+                    choices=["batched", "sequential"],
+                    help="batched: one lookup ladder per engine step; "
+                         "sequential: one per request (baseline)")
     ap.add_argument("--no-coic", action="store_true")
     args = ap.parse_args()
 
@@ -44,7 +48,8 @@ def main():
         policy=EvictionPolicy(args.policy))
     eng = ServingEngine(model, params, ServingConfig(
         max_batch=8, max_len=args.prompt_len + args.max_new + 8,
-        max_new_tokens=args.max_new, coic=coic))
+        max_new_tokens=args.max_new, coic=coic,
+        scheduling=args.scheduling))
 
     rng = np.random.default_rng(0)
     pool = rng.integers(0, cfg.vocab_size,
@@ -66,7 +71,9 @@ def main():
     stats = eng.stats()
     print(f"served {stats['completed']} requests in {wall:.2f}s "
           f"({stats['completed']/wall:.1f} req/s)")
-    print(f"edge hits: {stats['edge_hits']}  cloud: {stats['cloud']}")
+    print(f"edge hits: {stats['edge_hits']}  peer hits: {stats['peer_hits']}  "
+          f"cloud: {stats['cloud']}")
+    print(f"device dispatches: {stats['dispatches']}")
     if "semantic" in stats:
         print(f"semantic cache: {stats['semantic']}")
     if lat:

@@ -480,9 +480,21 @@ class DecoderLM:
 
     def prefill(self, params: dict, tokens: jax.Array, *,
                 image_embeds: Optional[jax.Array] = None,
-                max_len: Optional[int] = None):
+                max_len: Optional[int] = None,
+                lengths: Optional[jax.Array] = None):
         """Run the full prompt, build the cache.  Returns (last-position
-        logits (B, V), cache, lengths (B,))."""
+        logits (B, V), cache, lengths (B,)).
+
+        ``lengths`` (B,) int32: true per-row prompt lengths for a
+        right-padded batch (the bucketed batched-admission path).  Logits
+        are taken at each row's true last token and the returned lengths
+        echo the input, so decode overwrites the pad positions; causal
+        attention keeps every valid position's hidden state independent of
+        the trailing pads.  Only full (linear) attention caches support
+        this — a recurrent (SSM) prefill state absorbs the pad tokens and
+        a sliding-window ring cache rotates by the padded length; the
+        serving engine admits those models at exact lengths only.
+        """
         cfg = self.cfg
         x = self.embed(params, tokens, image_embeds)
         Bsz, Stot = x.shape[0], x.shape[1]
@@ -529,8 +541,14 @@ class DecoderLM:
                         outs[k].append(v)
                 cache.update({k: jnp.stack(v) for k, v in outs.items()})
 
-        logits = self.unembed(params, x[:, -1:])[:, 0]             # (B, V)
-        lengths = jnp.full((Bsz,), Stot, jnp.int32)
+        if lengths is None:
+            logits = self.unembed(params, x[:, -1:])[:, 0]         # (B, V)
+            lengths = jnp.full((Bsz,), Stot, jnp.int32)
+        else:
+            lengths = lengths.astype(jnp.int32)
+            rows = jnp.arange(Bsz)
+            x_last = x[rows, jnp.maximum(lengths - 1, 0)][:, None, :]
+            logits = self.unembed(params, x_last)[:, 0]            # (B, V)
         return logits, cache, lengths
 
     # ------------------------------------------------------------------

@@ -237,6 +237,27 @@ def cluster_topk_lookup(queries: jax.Array, keys: jax.Array,
     return _merge_shard_topk(local_idx + offsets, local_score, min(k, n * c))
 
 
+@partial(jax.jit, static_argnames=("k", "impl"))
+def grouped_cluster_topk_lookup(queries: jax.Array, keys: jax.Array,
+                                valid: jax.Array, k: int, *,
+                                impl: str = "auto"):
+    """Cluster-wide lookup for *grouped* queries: requests from all N_nodes
+    edge nodes probe every shard in ONE dispatch — the batched engine step's
+    peer rung.
+
+    queries: (G, B, D) — group g holds node g's request batch (pad rows are
+    fine: they just return garbage candidates the caller masks).  keys:
+    (N, C, D) stacked shards; valid: (N, C).
+    Returns (idx (G, B, k) int32 global indices in [0, N*C), score
+    (G, B, k) f32) — each (g, b) row equal to ``similarity_topk`` over the
+    pooled ``keys.reshape(N*C, D)``.
+    """
+    g, b, d = queries.shape
+    idx, score = cluster_topk_lookup(queries.reshape(g * b, d), keys, valid,
+                                     k, impl=impl)
+    return idx.reshape(g, b, -1), score.reshape(g, b, -1)
+
+
 def sharded_topk_lookup(queries: jax.Array, keys: jax.Array,
                         valid: jax.Array, k: int, mesh: Mesh,
                         axis_name: str = "cache", *, impl: str = "auto"):

@@ -1,16 +1,30 @@
 """Batched serving engine with continuous batching and the CoIC edge cache
 in front of the model — the deployment shape of the paper's Figure 1.
 
-Request lifecycle:
+Request lifecycle (one lookup ladder per engine STEP, not per request):
 
-  submit -> [CoIC semantic lookup]  hit  -> result immediately ("edge")
-                                    miss -> admission queue
-  admission: free slot? prefill(prompt) -> scatter into slot
-  every engine step: one decode_step over the whole active batch
-  retirement: EOS or max_new_tokens -> result + CoIC insert ("cloud")
+  submit  -> enqueue only (no device work)
+  step:
+    schedule — drain pending requests into ONE jitted descriptor extraction
+               over length-bucketed prompt pads and ONE grouped cluster
+               lookup spanning requests from all nodes
+               (hit -> result immediately, charged the modeled network +
+                probe latency; miss -> admission queue)
+    admit    — bucketed batched prefill: all queued requests with free slots
+               prefill in ONE dispatch per step, padded to (pow2 batch,
+               pow2 length) buckets so admission compiles once per bucket
+               instead of once per prompt length
+    decode   — one decode_step over the whole active batch
+    retire   — EOS or max_new_tokens -> result + batched CoIC insert
+               (descriptors are cached from schedule time: zero extra
+               extraction dispatches)
 
-All device work has static shapes (B slots, max_len cache); scheduling is
-host-side, as in vLLM-class systems.
+``scheduling="sequential"`` drains ONE request per step through the same
+bucketed machinery — the per-request-ladder baseline the batched mode is
+measured against (benchmarks/cooperative_hit_rate.py --batched).
+
+All device work has static shapes (B slots, max_len cache, pow2 buckets);
+scheduling is host-side, as in vLLM-class systems.
 """
 from __future__ import annotations
 
@@ -23,12 +37,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cluster import (TIER_PEER, ClusterConfig,
-                                CooperativeEdgeCluster)
+from repro.core.cluster import (TIER_LOCAL, TIER_MISS, TIER_PEER,
+                                ClusterConfig, CooperativeEdgeCluster)
 from repro.core.coic import CoICConfig
 from repro.core.descriptor import NgramSketchDescriptor, PrefixDescriptor
+from repro.core.network import NetworkModel
+from repro.core.router import LatencyBreakdown, PayloadSizes, TwoTierRouter
 from repro.core.semantic_cache import SemanticCache
-from repro.serving.kv_cache import batch_cache_insert, init_batch_cache
+from repro.serving.kv_cache import batch_cache_scatter, init_batch_cache
+
+
+def _pow2(n: int, lo: int = 1) -> int:
+    """Next power of two >= max(n, lo) — bucket sizes bound retracing."""
+    n = max(n, lo)
+    return 1 << (n - 1).bit_length()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,6 +60,11 @@ class ServingConfig:
     max_new_tokens: int = 32
     eos_id: int = -1                 # -1: no EOS, always run to max_new
     coic: Optional[CoICConfig] = None
+    scheduling: str = "batched"      # batched | sequential (one req/step)
+    min_bucket: int = 8              # smallest length/width pad bucket
+
+    def __post_init__(self):
+        assert self.scheduling in ("batched", "sequential"), self.scheduling
 
 
 @dataclasses.dataclass
@@ -53,31 +80,49 @@ class ServedResult:
     req_id: int
     tokens: np.ndarray
     source: str                      # edge | peer | cloud
-    latency_s: float
+    latency_s: float                 # hits: modeled; cloud: submit->retire
     decode_steps: int
+    breakdown: Optional[LatencyBreakdown] = None   # modeled terms (hits)
 
 
 class ServingEngine:
-    def __init__(self, model, params, cfg: ServingConfig):
+    def __init__(self, model, params, cfg: ServingConfig,
+                 network: Optional[NetworkModel] = None):
         self.model = model
         self.params = params
         self.cfg = cfg
-        self.queue: deque = deque()
+        self.pending: deque = deque()    # (rid, prompt, node) — pre-lookup
+        self.queue: deque = deque()      # (rid, prompt) — lookup missed
         self.active: Dict[int, _Active] = {}
         self.free_slots = list(range(cfg.max_batch))
         self.results: List[ServedResult] = []
         self._req_counter = 0
         self._prompts: Dict[int, np.ndarray] = {}
+        self._desc_of: Dict[int, np.ndarray] = {}     # schedule-time reuse
+        self._t_submit: Dict[int, float] = {}
+        # device dispatches by kind — the batching win is visible here:
+        # one descriptor + one lookup per step regardless of batch size
+        self.dispatches = {"descriptor": 0, "lookup": 0, "prefill": 0,
+                           "decode": 0}
 
         B = cfg.max_batch
         self.cache = init_batch_cache(model, B, cfg.max_len)
+        # recurrent (SSM/conv) prefill states absorb right-pad tokens, and
+        # sliding-window ring caches rotate by the PADDED length, so those
+        # models only batch admissions of identical prompt length with no
+        # length padding (full attention caches take the full buckets)
+        self._exact_prefill = (
+            getattr(getattr(model, "cfg", None), "sliding_window", 0) > 0
+            or any(k.endswith("/conv") or k.endswith("/state")
+                   for k in self.cache))
         self.lengths = jnp.zeros((B,), jnp.int32)
         self.tokens = jnp.zeros((B,), jnp.int32)
         self.row_active = np.zeros((B,), bool)
 
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
         self._prefill = jax.jit(
-            lambda p, t: model.prefill(p, t, max_len=cfg.max_len))
+            lambda p, t, ln: model.prefill(p, t, max_len=cfg.max_len,
+                                           lengths=ln))
 
         # CoIC front (single semantic cache, or a cooperative cluster when
         # coic.num_nodes > 1 — each serving replica fronts one edge node)
@@ -95,6 +140,7 @@ class ServingEngine:
                 sk = NgramSketchDescriptor(dim=c.descriptor_dim)
                 key_dim = c.descriptor_dim
                 self._desc_fn = jax.jit(lambda p, t: sk(t))
+            self.key_dim = key_dim
             if c.num_nodes > 1:
                 self.sem_cluster = CooperativeEdgeCluster(ClusterConfig(
                     num_nodes=c.num_nodes, node_capacity=c.capacity,
@@ -110,85 +156,219 @@ class ServingEngine:
                     payload_dtype="int32", policy=c.policy,
                     lookup_impl=c.lookup_impl)
                 self.sem_state = self.semantic.init()
+            # satellite: cache-served requests are charged the modeled
+            # network + probe latency instead of the old latency_s=0.0
+            self.network = network or NetworkModel()
+            self.router = TwoTierRouter(self.network, PayloadSizes(
+                input_bytes=cfg.max_len * 4,
+                descriptor_bytes=key_dim * 4,
+                result_bytes=cfg.max_new_tokens * 4))
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, node_id: int = 0) -> int:
-        """prompt: (S,) int32 arriving at edge ``node_id`` (ignored without a
-        cluster).  Returns request id (result arrives via ``step()`` ->
-        self.results)."""
+        """prompt: (S,) int32 arriving at edge ``node_id`` (ignored without
+        a cluster).  Enqueue-only: the lookup ladder runs at the next
+        ``step()`` for the whole pending batch at once.  Returns request id
+        (result arrives via ``step()`` -> self.results)."""
         rid = self._req_counter
         self._req_counter += 1
-        if self.sem_cluster is not None:
-            desc = self._desc_fn(self.params, jnp.asarray(prompt[None, :]))
-            cres = self.sem_cluster.lookup(node_id, desc)
-            if bool(cres.hit[0]):
-                toks = np.asarray(cres.value[0], np.int32)
-                src = "peer" if cres.tier[0] == TIER_PEER else "edge"
-                self.results.append(ServedResult(
-                    req_id=rid, tokens=toks, source=src, latency_s=0.0,
-                    decode_steps=0))
-                return rid
-        elif self.semantic is not None:
-            desc = self._desc_fn(self.params, jnp.asarray(prompt[None, :]))
-            self.sem_state, res = self.semantic.lookup(self.sem_state, desc)
-            if bool(res.hit[0]):
-                toks = np.asarray(res.value[0], np.int32)
-                self.results.append(ServedResult(
-                    req_id=rid, tokens=toks, source="edge", latency_s=0.0,
-                    decode_steps=0))
-                return rid
-        self._req_node[rid] = node_id
-        self.queue.append((rid, np.asarray(prompt, np.int32)))
+        self._t_submit[rid] = time.perf_counter()
+        self.pending.append((rid, np.asarray(prompt, np.int32), node_id))
         return rid
 
     # ------------------------------------------------------------------
+    def _pad_prompts(self, prompts: List[np.ndarray], fill: int,
+                     exact: bool = False):
+        """Right-pad ``prompts`` with ``fill`` into a (pow2-B, pow2-S)
+        bucket (``exact``: no length padding — recurrent-state prefill).
+        Returns (tokens (Bb, Sb) int32, lengths (n,) int32)."""
+        n = len(prompts)
+        lens = np.array([len(p) for p in prompts], np.int32)
+        Sb = (int(lens.max()) if exact else
+              min(_pow2(int(lens.max()), self.cfg.min_bucket),
+                  self.cfg.max_len))
+        Bb = _pow2(n)
+        toks = np.full((Bb, Sb), fill, np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, :len(p)] = p[:Sb]
+        return toks, np.minimum(lens, Sb)
+
+    def _extract_descriptors(self, prompts: List[np.ndarray]) -> np.ndarray:
+        """ONE jitted descriptor extraction over the length-bucketed pad.
+        Returns (n, D) np descriptors and the wall ms of the dispatch."""
+        toks, _ = self._pad_prompts(prompts, fill=-1)
+        t0 = time.perf_counter()
+        desc = self._desc_fn(self.params, jnp.asarray(toks))
+        desc.block_until_ready()
+        self.dispatches["descriptor"] += 1
+        return np.asarray(desc)[:len(prompts)], (time.perf_counter() - t0) * 1e3
+
+    # ------------------------------------------------------------------
+    def _schedule(self) -> None:
+        """Drain pending requests through the batched lookup ladder: one
+        descriptor dispatch + one grouped cluster lookup for ALL pending
+        requests (or one request in sequential mode)."""
+        if not self.pending:
+            return
+        n_drain = 1 if self.cfg.scheduling == "sequential" else len(self.pending)
+        batch = [self.pending.popleft() for _ in range(n_drain)]
+        prompts = [b[1] for b in batch]
+        nodes = [b[2] for b in batch]
+
+        if self.semantic is None:                 # no CoIC front
+            for rid, prompt, node in batch:
+                self._req_node[rid] = node
+                self.queue.append((rid, prompt))
+            return
+
+        desc, desc_ms = self._extract_descriptors(prompts)
+        n = len(batch)
+
+        t0 = time.perf_counter()
+        if self.sem_cluster is not None:
+            G = self.sem_cluster.cfg.num_nodes
+            rows_of = [[] for _ in range(G)]
+            for i, node in enumerate(nodes):
+                rows_of[node].append(i)
+            Bmax = _pow2(max(len(r) for r in rows_of))
+            queries = np.zeros((G, Bmax, self.key_dim), np.float32)
+            mask = np.zeros((G, Bmax), bool)
+            for g, rows in enumerate(rows_of):
+                queries[g, :len(rows)] = desc[rows]
+                mask[g, :len(rows)] = True
+            cres = self.sem_cluster.lookup_grouped(jnp.asarray(queries), mask)
+            self.dispatches["lookup"] += 1
+            hit = np.concatenate([cres.hit[g][:len(r)]
+                                  for g, r in enumerate(rows_of)])
+            tier = np.concatenate([cres.tier[g][:len(r)]
+                                   for g, r in enumerate(rows_of)])
+            value = np.concatenate([cres.value[g][:len(r)]
+                                    for g, r in enumerate(rows_of)])
+            order = np.concatenate([np.array(r, np.int64)
+                                    for r in rows_of]).astype(np.int64)
+            inv = np.empty_like(order)
+            inv[order] = np.arange(n)
+            hit, tier, value = hit[inv], tier[inv], value[inv]
+        else:
+            Qb = _pow2(n)
+            qpad = np.zeros((Qb, self.key_dim), np.float32)
+            qpad[:n] = desc
+            qmask = np.zeros((Qb,), bool)
+            qmask[:n] = True
+            self.sem_state, res = self.semantic.lookup(
+                self.sem_state, jnp.asarray(qpad), jnp.asarray(qmask))
+            self.dispatches["lookup"] += 1
+            hit = np.asarray(res.hit)[:n]
+            value = np.asarray(res.value)[:n]
+            tier = np.where(hit, TIER_LOCAL, TIER_MISS).astype(np.int8)
+        lookup_ms = (time.perf_counter() - t0) * 1e3
+
+        # every local miss (peer hit or cloud miss) shares ONE peer
+        # descriptor broadcast; local hits share the step's single
+        # descriptor + lookup dispatch
+        n_local_miss = int((np.asarray(tier) != TIER_LOCAL).sum())
+        for i, (rid, prompt, node) in enumerate(batch):
+            if hit[i]:
+                toks = np.asarray(value[i], np.int32)
+                if tier[i] == TIER_PEER:
+                    lat = self.router.peer_hit_latency(
+                        desc_ms / n, lookup_ms / n,
+                        batch=max(1, n_local_miss))
+                    src = "peer"
+                else:
+                    lat = self.router.hit_latency(desc_ms / n, lookup_ms / n,
+                                                  batch=n)
+                    src = "edge"
+                self._t_submit.pop(rid, None)
+                self.results.append(ServedResult(
+                    req_id=rid, tokens=toks, source=src,
+                    latency_s=lat.total_ms / 1e3, decode_steps=0,
+                    breakdown=lat))
+            else:
+                self._req_node[rid] = node
+                self._desc_of[rid] = desc[i]
+                self.queue.append((rid, prompt))
+
+    # ------------------------------------------------------------------
     def _admit(self) -> None:
+        """Bucketed batched prefill: admit every queued request that has a
+        free slot in ONE prefill dispatch (sequential mode: one per step)."""
         while self.queue and self.free_slots:
-            rid, prompt = self.queue.popleft()
-            slot = self.free_slots.pop()
-            logits, one_cache, one_len = self._prefill(self.params,
-                                                       jnp.asarray(prompt[None, :]))
-            self.cache = batch_cache_insert(self.cache, one_cache, slot)
-            nxt = jnp.argmax(logits, -1).astype(jnp.int32)[0]
-            self.tokens = self.tokens.at[slot].set(nxt)
-            self.lengths = self.lengths.at[slot].set(int(one_len[0]))
-            self.row_active[slot] = True
-            self.active[slot] = _Active(req_id=rid, slot=slot,
-                                        generated=[int(nxt)],
-                                        t_admit=time.perf_counter())
-            self._prompts[rid] = prompt
+            m = min(len(self.queue), len(self.free_slots))
+            if self.cfg.scheduling == "sequential":
+                m = 1
+            elif self._exact_prefill:
+                # equal-length front run only: no right-pad for SSM states
+                # or SWA ring rotation
+                L0 = len(self.queue[0][1])
+                run = 1
+                while run < m and len(self.queue[run][1]) == L0:
+                    run += 1
+                m = run
+            taken = [self.queue.popleft() for _ in range(m)]
+            prompts = [p for _, p in taken]
+            toks, lens = self._pad_prompts(prompts, fill=0,
+                                           exact=self._exact_prefill)
+            Bb = toks.shape[0]
+            lens_pad = np.zeros((Bb,), np.int32)
+            lens_pad[:m] = lens
+            logits, many_cache, _ = self._prefill(
+                self.params, jnp.asarray(toks), jnp.asarray(lens_pad))
+            self.dispatches["prefill"] += 1
+            slots = [self.free_slots.pop() for _ in range(m)]
+            self.cache = batch_cache_scatter(
+                self.cache, {k: v[:, :m] for k, v in many_cache.items()},
+                jnp.asarray(slots, jnp.int32))
+            nxt = np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))[:m]
+            self.lengths = self.lengths.at[jnp.asarray(slots)].set(
+                jnp.asarray(lens))
+            self.tokens = self.tokens.at[jnp.asarray(slots)].set(
+                jnp.asarray(nxt))
+            now = time.perf_counter()
+            for i, ((rid, prompt), slot) in enumerate(zip(taken, slots)):
+                self.row_active[slot] = True
+                self.active[slot] = _Active(req_id=rid, slot=slot,
+                                            generated=[int(nxt[i])],
+                                            t_admit=now)
+                self._prompts[rid] = prompt
 
     def _retire(self, slot: int) -> None:
         a = self.active.pop(slot)
         toks = np.asarray(a.generated[:self.cfg.max_new_tokens], np.int32)
+        t_sub = self._t_submit.pop(a.req_id, a.t_admit)
         self.results.append(ServedResult(
             req_id=a.req_id, tokens=toks, source="cloud",
-            latency_s=time.perf_counter() - a.t_admit,
+            latency_s=time.perf_counter() - t_sub,
             decode_steps=len(a.generated)))
         self.row_active[slot] = False
         self.free_slots.append(slot)
         node = self._req_node.pop(a.req_id, 0)
-        if self.semantic is not None:
-            prompt = self._prompts.pop(a.req_id)
-            desc = self._desc_fn(self.params, jnp.asarray(prompt[None, :]))
+        prompt = self._prompts.pop(a.req_id, None)
+        if self.semantic is not None and prompt is not None:
+            # reuse the schedule-time descriptor (every miss cached one in
+            # _schedule): no extra extraction dispatch, ever
+            desc = self._desc_of.pop(a.req_id)
             pad = np.zeros((self.cfg.max_new_tokens,), np.int32)
             pad[:len(toks)] = toks
             if self.sem_cluster is not None:
-                self.sem_cluster.insert(node, desc, jnp.asarray(pad[None, :]))
+                self.sem_cluster.insert(node, jnp.asarray(desc[None, :]),
+                                        jnp.asarray(pad[None, :]))
             else:
                 self.sem_state = self.semantic.insert(
-                    self.sem_state, desc, jnp.asarray(pad[None, :]))
-        else:
-            self._prompts.pop(a.req_id, None)
+                    self.sem_state, jnp.asarray(desc[None, :]),
+                    jnp.asarray(pad[None, :]))
 
     # ------------------------------------------------------------------
     def step(self) -> None:
-        """One engine iteration: admit + one batched decode step."""
+        """One engine iteration: schedule (batched lookup ladder) + admit
+        (bucketed batched prefill) + one batched decode step."""
+        self._schedule()
         self._admit()
         if not self.active:
             return
         logits, self.cache, self.lengths = self._decode(
             self.params, self.cache, self.tokens, self.lengths)
+        self.dispatches["decode"] += 1
         nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
         for slot in list(self.active):
             a = self.active[slot]
@@ -202,7 +382,7 @@ class ServingEngine:
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[ServedResult]:
         steps = 0
-        while (self.queue or self.active) and steps < max_steps:
+        while (self.pending or self.queue or self.active) and steps < max_steps:
             self.step()
             steps += 1
         return self.results
@@ -214,6 +394,7 @@ class ServingEngine:
             "edge_hits": sum(r.source == "edge" for r in self.results),
             "peer_hits": sum(r.source == "peer" for r in self.results),
             "cloud": sum(r.source == "cloud" for r in self.results),
+            "dispatches": dict(self.dispatches),
         }
         if self.sem_cluster is not None:
             out["semantic"] = self.sem_cluster.stats()

@@ -39,3 +39,29 @@ def batch_cache_insert(batch_cache: Dict[str, jax.Array],
         out[k] = jax.lax.dynamic_update_slice_in_dim(dst, src.astype(dst.dtype),
                                                      slot, axis=1)
     return out
+
+
+def batch_cache_scatter(batch_cache: Dict[str, jax.Array],
+                        many_cache: Dict[str, jax.Array],
+                        slots: jax.Array) -> Dict[str, jax.Array]:
+    """Scatter rows of a B=R bucketed prefill cache into ``slots`` of the
+    batch cache — the batched-admission counterpart of
+    ``batch_cache_insert`` (one scatter for the whole admitted bucket
+    instead of R dynamic-update dispatches).
+
+    ``slots``: (R,) int32 target slots, one per prefill row; pass duplicate
+    slots for pad rows pointing at a real slot's value is NOT allowed — the
+    caller masks pad rows by scattering them to a recycled dummy slot or by
+    trimming ``many_cache`` first.  Seq dims shorter than the batch cache's
+    are zero-padded (masked out by per-row lengths).
+    """
+    slots = jnp.asarray(slots, jnp.int32)
+    out = {}
+    for k, dst in batch_cache.items():
+        src = many_cache[k]
+        if src.shape[2:] != dst.shape[2:]:
+            pads = [(0, dst.shape[i] - src.shape[i])
+                    for i in range(2, dst.ndim)]
+            src = jnp.pad(src, ((0, 0), (0, 0)) + tuple(pads))
+        out[k] = dst.at[:, slots].set(src.astype(dst.dtype))
+    return out

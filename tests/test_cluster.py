@@ -396,8 +396,13 @@ def test_serving_engine_cluster_peer_hits(tiny_model, nprng):
     eng.run_until_drained()
     assert eng.results[-1].source == "cloud"
     eng.submit(prompt, node_id=1)                      # peer shard holds it
+    eng.run_until_drained()
     assert eng.results[-1].source == "peer"
+    assert eng.results[-1].decode_steps == 0           # served from cache
+    assert eng.results[-1].latency_s > 0.0             # modeled LAN cost
+    assert eng.results[-1].breakdown.peer_net_ms > 0.0
     eng.submit(prompt, node_id=1)                      # admitted locally
+    eng.run_until_drained()
     assert eng.results[-1].source == "edge"
     np.testing.assert_array_equal(eng.results[0].tokens, eng.results[1].tokens)
     assert eng.stats()["peer_hits"] == 1
