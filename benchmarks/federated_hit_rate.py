@@ -1,0 +1,192 @@
+"""Cross-cluster federation vs isolated clusters on a roaming workload.
+
+The federation scenario (ROADMAP "metro -> region" tier): K cooperative
+edge clusters serve a multi-cluster Zipf workload where users migrate
+between clusters at a configurable ``mobility`` rate while keeping their
+home cluster's interest profile (``RoamingWorkload``).  Two organisations
+over the same stream:
+
+  isolated   — K ``CooperativeEdgeCluster``s sharing within each metro but
+               never across (the pre-federation behaviour: a roamer's
+               every request is a compulsory local miss)
+  federated  — ``FederatedEdgeTier``: local -> peer -> remote-cluster ->
+               cloud, with the remote rung driven by stale top-M digests
+               and ONE authoritative confirm per step
+
+Reported per (scenario, mobility): global hit rate (any edge tier),
+per-tier counts (local/peer/remote/miss), ``digest_false_hit``, and mean
+end-to-end latency under the analytic network model (remote hits pay the
+metro<->region hops, amortized over the step's miss batch; misses
+additionally pay the fruitless digest-probe share before the WAN).
+
+A final ``fed_ladder_dispatches`` row proves the dispatch bound: the
+federated step's ladder issues at most 4 device dispatches (2 for the
+within-cluster ladder + digest probe + authoritative confirm) regardless
+of cluster count.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.cluster import ClusterConfig, pow2 as _pow2
+from repro.core.federation import (TIER_NAMES, FederatedEdgeTier,
+                                   FederationConfig)
+from repro.core.network import NetworkModel
+from repro.core.policies import EvictionPolicy
+from repro.core.router import PayloadSizes, TwoTierRouter
+from repro.data.workload import RoamingWorkload
+
+CLOUD_MS = 25.0      # recognition inference on the cloud box
+DESC_MS = 1.0        # client-side descriptor extraction
+
+
+def _router(dim: int, payload_dim: int) -> TwoTierRouter:
+    sizes = PayloadSizes(input_bytes=256 * 1024, descriptor_bytes=dim * 4,
+                         result_bytes=payload_dim * 4)
+    return TwoTierRouter(NetworkModel(), sizes)
+
+
+def _mk_tier(clusters: int, nodes: int, capacity: int, dim: int,
+             payload_dim: int, threshold: float, digest_size: int,
+             digest_interval: int, federate: bool,
+             admission: str = "always") -> FederatedEdgeTier:
+    return FederatedEdgeTier(FederationConfig(
+        num_clusters=clusters, digest_size=digest_size,
+        digest_interval=digest_interval, share=federate,
+        cluster=ClusterConfig(
+            num_nodes=nodes, node_capacity=capacity, key_dim=dim,
+            payload_dim=payload_dim, threshold=threshold,
+            policy=EvictionPolicy("lru"), admission=admission)))
+
+
+def _drive(tier: FederatedEdgeTier, wl: RoamingWorkload, router,
+           steps: int, seed: int):
+    """Run the stream through one grouped federation lookup per round and
+    insert cloud results on miss.  Returns (hit_rate, tier_counts,
+    digest_false_hits, mean_latency_ms, wall_s, n_requests)."""
+    K = tier.cfg.num_clusters
+    N = tier.cfg.cluster.num_nodes
+    D = tier.cfg.cluster.key_dim
+    n_req = n_hit = 0
+    lat_ms = []
+    t0 = time.perf_counter()
+    for round_ in wl.stream(steps, seed=seed):
+        Bmax = _pow2(max(len(ids) for _, _, ids, _ in round_))
+        queries = np.zeros((K, N, Bmax, D), np.float32)
+        mask = np.zeros((K, N, Bmax), bool)
+        ids_of = {}
+        for k, n, ids, desc in round_:
+            queries[k, n, :len(ids)] = desc
+            mask[k, n, :len(ids)] = True
+            ids_of[(k, n)] = ids
+        res = tier.lookup_grouped(queries, mask)
+        # per-CLUSTER amortization: each metro's LAN broadcast carries only
+        # its own misses, and each home cluster sends ONE metro->region
+        # digest message for its escalated batch
+        lm = [int(((res.tier[k] != 0) & mask[k]).sum()) for k in range(K)]
+        esc = [int(((res.tier[k] >= 2) & mask[k]).sum()) for k in range(K)]
+        for k, n, ids, desc in round_:
+            t = res.tier[k, n, :len(ids)]
+            miss = t == 3
+            if miss.any():
+                tier.insert(k, n, desc[miss], wl.payloads[ids[miss]])
+            n_req += len(ids)
+            n_hit += int((t < 3).sum())
+            peer_share = router.peer_broadcast_ms(lm[k])
+            region_share = (router.region_broadcast_ms(esc[k])
+                            if tier.cfg.share and K > 1 else 0.0)
+            for tv in t:
+                if tv == 0:
+                    lat = router.hit_latency(DESC_MS, 0.1)
+                elif tv == 1:
+                    lat = router.peer_hit_latency(DESC_MS, 0.1, batch=lm[k])
+                elif tv == 2:
+                    lat = router.remote_hit_latency(
+                        DESC_MS, 0.1, peer_net_ms=peer_share,
+                        batch=max(1, esc[k]))
+                else:
+                    lat = router.miss_latency(DESC_MS, 0.1, CLOUD_MS,
+                                              peer_net_ms=peer_share,
+                                              remote_net_ms=region_share)
+                lat_ms.append(lat.total_ms)
+    wall = time.perf_counter() - t0
+    st = tier.stats()
+    return (n_hit / n_req, st["tier_counts"], st["digest_false_hits"],
+            float(np.mean(lat_ms)), wall, n_req)
+
+
+def run(seed: int = 0, clusters: int = 3, nodes: int = 2,
+        users_per_node: int = 8, pool: int = 96, node_capacity: int = 24,
+        dim: int = 128, payload_dim: int = 8, steps: int = 40,
+        digest_size: int = 64, digest_interval: int = 4,
+        threshold: float = 0.90, mobilities=(0.0, 0.1, 0.3),
+        smoke: bool = False):
+    """isolated vs federated hit rate / latency across mobility rates,
+    plus an admission-policy comparison row and the dispatch-bound proof.
+    ``smoke``: a fast configuration for the CI benchmark-CSV smoke."""
+    if smoke:
+        steps, users_per_node, mobilities = 12, 4, (0.0, 0.3)
+    router = _router(dim, payload_dim)
+    rows = []
+    for mobility in mobilities:
+        for scenario, federate in (("isolated", False), ("federated", True)):
+            wl = RoamingWorkload(
+                num_clusters=clusters, nodes_per_cluster=nodes,
+                users_per_node=users_per_node, pool_size=pool, dim=dim,
+                payload_dim=payload_dim, mobility=mobility, seed=seed)
+            tier = _mk_tier(clusters, nodes, node_capacity, dim, payload_dim,
+                            threshold, digest_size, digest_interval, federate)
+            rate, tiers, false_hits, mean_lat, wall, n_req = _drive(
+                tier, wl, router, steps, seed + 1)
+            rows.append((
+                f"fed_{scenario}_m{mobility:g}", wall / n_req * 1e6,
+                f"hit_rate={rate:.3f};mean_latency_ms={mean_lat:.2f};"
+                + ";".join(f"{t}={tiers[t]}" for t in TIER_NAMES)
+                + f";digest_false_hit={false_hits}"))
+
+    # admission-policy comparison at the highest mobility: always vs
+    # second_hit vs freq_weighted (ROADMAP "frequency-weighted admission")
+    mob = max(mobilities)
+    for admission in ("always", "second_hit", "freq_weighted"):
+        wl = RoamingWorkload(
+            num_clusters=clusters, nodes_per_cluster=nodes,
+            users_per_node=users_per_node, pool_size=pool, dim=dim,
+            payload_dim=payload_dim, mobility=mob, seed=seed)
+        tier = _mk_tier(clusters, nodes, node_capacity, dim, payload_dim,
+                        threshold, digest_size, digest_interval, True,
+                        admission=admission)
+        rate, _, _, mean_lat, wall, n_req = _drive(
+            tier, wl, router, steps, seed + 1)
+        rows.append((f"fed_admission_{admission}", wall / n_req * 1e6,
+                     f"hit_rate={rate:.3f};mean_latency_ms={mean_lat:.2f}"))
+
+    # dispatch-bound proof: the federated ladder stays at <= 4 device
+    # dispatches per step however many clusters federate
+    bounds = []
+    for k in (2, 4, 8) if not smoke else (2, 4):
+        wl = RoamingWorkload(
+            num_clusters=k, nodes_per_cluster=nodes, users_per_node=2,
+            pool_size=pool, dim=dim, payload_dim=payload_dim,
+            mobility=0.3, seed=seed)
+        tier = _mk_tier(k, nodes, node_capacity, dim, payload_dim,
+                        threshold, digest_size, 1, True)
+        _drive(tier, wl, router, max(4, steps // 4), seed + 1)
+        bounds.append((k, tier.stats()["max_ladder_dispatches"]))
+    worst = max(b for _, b in bounds)
+    rows.append(("fed_ladder_dispatches", 0.0,
+                 ";".join(f"K{k}={b}" for k, b in bounds)
+                 + f";max={worst};ok={worst <= 4}"))
+    return rows
+
+
+def run_smoke():
+    return run(smoke=True)
+
+
+if __name__ == "__main__":
+    import sys
+
+    for r in run(smoke="--smoke" in sys.argv):
+        print(",".join(str(x) for x in r))

@@ -3,6 +3,8 @@ from repro.core.cluster import (ClusterConfig, ClusterLookupResult,
                                 CooperativeEdgeCluster)
 from repro.core.coic import CoICConfig, CoICEngine, RequestResult
 from repro.core.descriptor import NgramSketchDescriptor, PrefixDescriptor, l2_normalize
+from repro.core.federation import (FederatedEdgeTier, FederatedLookupResult,
+                                   FederationConfig)
 from repro.core.hash_cache import HashCache
 from repro.core.layer_reuse import BlockReuseCache
 from repro.core.network import NetworkModel

@@ -51,6 +51,71 @@ TIER_LOCAL, TIER_PEER, TIER_MISS = 0, 1, 2
 TIER_NAMES = ("local", "peer", "miss")
 
 
+def pow2(n: int, lo: int = 1) -> int:
+    """Next power of two >= max(n, lo) — the shared pad-bucket policy that
+    keeps jitted probe/prefill shapes from retracing per distinct count."""
+    n = max(n, lo)
+    return 1 << (n - 1).bit_length()
+
+
+def admission_filter(kind: str, slots: np.ndarray, owner_state,
+                     node_state, policy, seen: Dict[tuple, int],
+                     key_prefix: tuple) -> np.ndarray:
+    """Which remotely-served cache ``slots`` (entries of ``owner_state`` just
+    served to another node or cluster) get re-admitted into the requester's
+    shard (``node_state``).  Shared by the peer tier and the federation
+    tier's remote rung:
+
+      never         — none
+      always        — all
+      second_hit    — on the 2nd remote hit of the same entry incarnation,
+                      tracked in ``seen`` under ``key_prefix + (slot,
+                      inserted_at)`` (one-hit wonders never replicate)
+      freq_weighted — only when the entry's observed hit count at its owner
+                      (as of the probe snapshot) strictly beats the
+                      requester shard's coldest victim's count (free slots
+                      count 0), so replication never displaces an entry
+                      hotter than the newcomer
+    """
+    n = len(slots)
+    if kind == "never":
+        return np.zeros((n,), bool)
+    if kind == "always":
+        return np.ones((n,), bool)
+    if kind == "second_hit":
+        ins = np.asarray(owner_state.inserted_at)
+        admit = np.zeros((n,), bool)
+        for i, slot in enumerate(np.asarray(slots)):
+            key = key_prefix + (int(slot), int(ins[slot]))
+            seen[key] = seen.get(key, 0) + 1
+            admit[i] = seen[key] >= 2
+        return admit
+    assert kind == "freq_weighted", kind
+    # argmin ties to the lower slot, matching insert()'s top_k(-pri) victim
+    pri = np.asarray(policy.priority(node_state))
+    victim = int(np.argmin(pri))
+    vfreq = (int(np.asarray(node_state.freq)[victim])
+             if bool(np.asarray(node_state.valid)[victim]) else 0)
+    owner_freq = np.asarray(owner_state.freq)[np.asarray(slots)]
+    return owner_freq > vfreq
+
+
+class GroupedProbes(NamedTuple):
+    """Externally-computed ladder probes for ``lookup_grouped``.
+
+    The federation tier fuses every cluster's rung-1/rung-2 dispatches into
+    two federation-wide batched kernels and injects each cluster's slice
+    here, so per-cluster application costs zero extra device dispatches.
+    ``alive`` holds the per-node TTL-expiry masks the probes ran against.
+    """
+
+    l_idx: np.ndarray        # (G, B) rung-1 best slot in each node's shard
+    l_score: np.ndarray      # (G, B)
+    g_idx: Optional[np.ndarray]   # (G, B) rung-2 best global idx in [0, N*C)
+    g_score: Optional[np.ndarray]
+    alive: List
+
+
 @dataclasses.dataclass(frozen=True)
 class ClusterConfig:
     num_nodes: int = 4
@@ -62,16 +127,18 @@ class ClusterConfig:
     policy: EvictionPolicy = EvictionPolicy("lru")
     lookup_impl: str = "auto"
     # peer-hit re-admission into the serving node's shard:
-    #   always     — every peer hit is copied locally
-    #   never      — peer hits are served remotely, never copied
-    #   second_hit — copy on the 2nd peer hit of the same cached entry at
-    #                the same node (one-hit wonders never replicate)
+    #   always        — every peer hit is copied locally
+    #   never         — peer hits are served remotely, never copied
+    #   second_hit    — copy on the 2nd peer hit of the same cached entry at
+    #                   the same node (one-hit wonders never replicate)
+    #   freq_weighted — copy only when the entry's hit count at its owner
+    #                   beats the local shard's coldest victim's count
     admission: str = "always"
     share: bool = True               # False: isolated nodes (no peer tier)
 
     def __post_init__(self):
-        assert self.admission in ("always", "never", "second_hit"), \
-            self.admission
+        assert self.admission in ("always", "never", "second_hit",
+                                  "freq_weighted"), self.admission
         assert self.num_nodes >= 1, self.num_nodes
 
 
@@ -156,20 +223,11 @@ class CooperativeEdgeCluster:
         get re-admitted into ``node``'s shard, per ``cfg.admission``.
         ``owner_state`` is the owner shard as of the probe (pre-step
         snapshot in the grouped path)."""
-        if self.cfg.admission == "never":
-            return np.zeros((len(slots),), bool)
-        if self.cfg.admission == "always":
-            return np.ones((len(slots),), bool)
-        # second_hit: count peer hits per entry incarnation; admit at >= 2.
-        # inserted_at disambiguates slot reuse after eviction.
-        ins = np.asarray(owner_state.inserted_at)
-        seen = self._peer_seen[node]
-        admit = np.zeros((len(slots),), bool)
-        for i, slot in enumerate(np.asarray(slots)):
-            key = (owner, int(slot), int(ins[slot]))
-            seen[key] = seen.get(key, 0) + 1
-            admit[i] = seen[key] >= 2
-        if len(seen) > 4 * self.cfg.num_nodes * self.cfg.node_capacity:
+        admit = admission_filter(
+            self.cfg.admission, slots, owner_state, self.states[node],
+            self.cache.policy, self._peer_seen[node], (owner,))
+        if (len(self._peer_seen[node])
+                > 4 * self.cfg.num_nodes * self.cfg.node_capacity):
             self._prune_peer_seen(node)
         return admit
 
@@ -275,7 +333,8 @@ class CooperativeEdgeCluster:
 
     # ------------------------------------------------------------------
     def lookup_grouped(self, queries: jax.Array,
-                       mask: Optional[np.ndarray] = None
+                       mask: Optional[np.ndarray] = None,
+                       probes: Optional[GroupedProbes] = None
                        ) -> ClusterLookupResult:
         """The batched engine step's ladder: queries (num_nodes, B, D) —
         group g holds the request batch that arrived at edge node g; mask
@@ -288,6 +347,11 @@ class CooperativeEdgeCluster:
         dispatch spanning every shard — per-request semantics identical to
         ``lookup`` called per node (modulo clock granularity: one tick per
         step instead of one per call).
+
+        ``probes``: externally-computed rung-1/rung-2 results (the
+        federation tier fuses all clusters' probes into two federation-wide
+        dispatches); when given, this call performs NO device probes of its
+        own — only the host-side application.
         """
         cfg = self.cfg
         queries = jnp.asarray(queries)
@@ -297,11 +361,16 @@ class CooperativeEdgeCluster:
                    else np.asarray(mask, bool))
 
         # ---- rung 1: every node's own shard, one batched-kernel dispatch
-        keys, valid, alive = self._stacks()
-        self.probe_dispatches += 1
-        l_idx, l_score = similarity_topk_batched(
-            queries, keys, valid, 1, impl=cfg.lookup_impl)
-        l_idx, l_score = l_idx[..., 0], l_score[..., 0]
+        if probes is None:
+            keys, valid, alive = self._stacks()
+            self.probe_dispatches += 1
+            l_idx, l_score = similarity_topk_batched(
+                queries, keys, valid, 1, impl=cfg.lookup_impl)
+            l_idx, l_score = l_idx[..., 0], l_score[..., 0]
+        else:
+            alive = probes.alive
+            l_idx = jnp.asarray(probes.l_idx)
+            l_score = jnp.asarray(probes.l_score)
 
         hit = np.zeros((G, B), bool)
         score = np.zeros((G, B), np.float32)
@@ -322,11 +391,16 @@ class CooperativeEdgeCluster:
         # ---- rung 2: one grouped probe spanning every shard
         any_miss = (~hit & mask_np)
         if any_miss.any() and cfg.share and cfg.num_nodes > 1:
-            g_idx, g_score = grouped_cluster_topk_lookup(
-                queries, keys, valid, 1, impl=cfg.lookup_impl)
-            self.probe_dispatches += 1
-            g_idx = np.asarray(g_idx[..., 0])
-            g_score = np.asarray(g_score[..., 0])
+            if probes is None:
+                g_idx, g_score = grouped_cluster_topk_lookup(
+                    queries, keys, valid, 1, impl=cfg.lookup_impl)
+                self.probe_dispatches += 1
+                g_idx = np.asarray(g_idx[..., 0])
+                g_score = np.asarray(g_score[..., 0])
+            else:
+                assert probes.g_idx is not None
+                g_idx = np.asarray(probes.g_idx)
+                g_score = np.asarray(probes.g_score)
             # states are functional, so holding the pre-serve list is a free
             # snapshot: every group's payload reads resolve against the
             # state the probe scanned, however earlier groups' admissions

@@ -25,6 +25,8 @@ import numpy as np
 from repro.core.cluster import (TIER_LOCAL, TIER_MISS, TIER_PEER,
                                 ClusterConfig, CooperativeEdgeCluster)
 from repro.core.descriptor import NgramSketchDescriptor, PrefixDescriptor
+from repro.core.federation import (FederatedEdgeTier, FederationConfig,
+                                   TIER_REMOTE as FED_REMOTE)
 from repro.core.hash_cache import HashCache, content_hash
 from repro.core.network import NetworkModel
 from repro.core.policies import EvictionPolicy
@@ -48,14 +50,20 @@ class CoICConfig:
     # cooperative cluster tier (core/cluster.py); 1 == single isolated cache
     num_nodes: int = 1
     share: bool = True               # peer tier on local miss
-    admission: str = "always"        # always | never | second_hit (peer-hit
+    admission: str = "always"        # always | never | second_hit |
+                                     # freq_weighted (peer/remote-hit
                                      # re-admission, see ClusterConfig)
+    # cross-cluster federation tier (core/federation.py); 1 == one cluster
+    num_clusters: int = 1
+    federate: bool = True            # remote rung on local+peer miss
+    digest_size: int = 128           # top-M hottest keys per cluster digest
+    digest_interval: int = 4         # steps between digest refreshes
 
 
 @dataclasses.dataclass
 class RequestResult:
     payload: np.ndarray
-    source: str                      # "edge" | "peer" | "cloud"
+    source: str                      # "edge" | "peer" | "remote" | "cloud"
     score: float
     coic: LatencyBreakdown
     origin: LatencyBreakdown
@@ -90,13 +98,22 @@ class CoICEngine:
         self.router = TwoTierRouter(self.network, self.sizes)
 
         self.cluster: Optional[CooperativeEdgeCluster] = None
-        if cfg.num_nodes > 1:
-            self.cluster = CooperativeEdgeCluster(ClusterConfig(
-                num_nodes=cfg.num_nodes, node_capacity=cfg.capacity,
-                key_dim=key_dim, payload_dim=cfg.payload_dim,
-                threshold=cfg.threshold, payload_dtype=cfg.payload_dtype,
-                policy=cfg.policy, lookup_impl=cfg.lookup_impl,
-                admission=cfg.admission, share=cfg.share))
+        self.federation: Optional[FederatedEdgeTier] = None
+        cluster_cfg = ClusterConfig(
+            num_nodes=cfg.num_nodes, node_capacity=cfg.capacity,
+            key_dim=key_dim, payload_dim=cfg.payload_dim,
+            threshold=cfg.threshold, payload_dtype=cfg.payload_dtype,
+            policy=cfg.policy, lookup_impl=cfg.lookup_impl,
+            admission=cfg.admission, share=cfg.share)
+        if cfg.num_clusters > 1:
+            self.federation = FederatedEdgeTier(FederationConfig(
+                num_clusters=cfg.num_clusters, cluster=cluster_cfg,
+                digest_size=cfg.digest_size,
+                digest_interval=cfg.digest_interval, share=cfg.federate))
+            self.cache = self.federation.clusters[0].cache
+            self.state = None
+        elif cfg.num_nodes > 1:
+            self.cluster = CooperativeEdgeCluster(cluster_cfg)
             self.cache = self.cluster.cache
             self.state = None
         else:
@@ -119,17 +136,23 @@ class CoICEngine:
         return d
 
     # ------------------------------------------------------------------
-    def process_batch(self, tokens: np.ndarray,
-                      node_id: int = 0) -> List[RequestResult]:
+    def process_batch(self, tokens: np.ndarray, node_id: int = 0,
+                      cluster_id: int = 0) -> List[RequestResult]:
         """tokens: (B, S) int32 request batch arriving at edge ``node_id``
-        (ignored without a cluster).  Returns per-request results with CoIC
-        and origin-baseline latency breakdowns."""
+        of cluster ``cluster_id`` (ignored without a cluster/federation).
+        Returns per-request results with CoIC and origin-baseline latency
+        breakdowns."""
         B = tokens.shape[0]
         desc = self._descriptors(tokens)
         per_req_desc_ms = self._timings["descriptor_ms"][-1] / B
 
         t0 = time.perf_counter()
-        if self.cluster is not None:
+        if self.federation is not None:
+            fres = self.federation.lookup(cluster_id, node_id,
+                                          np.asarray(desc))
+            hit, tier, score, values = (fres.hit, fres.tier, fres.score,
+                                        fres.value)
+        elif self.cluster is not None:
             cres = self.cluster.lookup(node_id, desc)
             hit, tier, score, values = cres.hit, cres.tier, cres.score, cres.value
         else:
@@ -160,7 +183,10 @@ class CoICEngine:
                 miss_desc = np.asarray(desc)[miss_rows]
                 cloud_vals = jnp.asarray(
                     cloud_out.astype(self.cfg.payload_dtype))
-                if self.cluster is not None:
+                if self.federation is not None:
+                    self.federation.insert(cluster_id, node_id,
+                                           jnp.asarray(miss_desc), cloud_vals)
+                elif self.cluster is not None:
                     self.cluster.insert(node_id, jnp.asarray(miss_desc),
                                         cloud_vals)
                 else:
@@ -170,14 +196,24 @@ class CoICEngine:
         # Per-tier amortization: the whole batch shares one descriptor
         # extraction and one cluster-probe dispatch; all local misses share
         # ONE peer descriptor broadcast (fruitful for peer hits, fruitless
-        # for cloud misses) — each request's breakdown carries its share.
+        # for cloud misses), and everything that escalates past the peer
+        # tier shares ONE metro->region digest probe — each request's
+        # breakdown carries its share.
         n_local_miss = int((np.asarray(tier) != TIER_LOCAL).sum())
         peer_share_ms = 0.0
-        if self.cluster is not None and self.cfg.share and self.cfg.num_nodes > 1:
+        if self.cfg.share and self.cfg.num_nodes > 1 and (
+                self.cluster is not None or self.federation is not None):
             peer_share_ms = self.router.peer_broadcast_ms(n_local_miss)
+        n_escalated = 0
+        region_share_ms = 0.0
+        if self.federation is not None and self.cfg.federate \
+                and self.cfg.num_clusters > 1:
+            n_escalated = int((np.asarray(tier) >= FED_REMOTE).sum())
+            region_share_ms = self.router.region_broadcast_ms(n_escalated)
 
         results = []
         for b in range(B):
+            is_remote = self.federation is not None and tier[b] == FED_REMOTE
             if tier[b] == TIER_LOCAL:
                 lat = self.router.hit_latency(per_req_desc_ms, lookup_ms,
                                               batch=B)
@@ -186,10 +222,16 @@ class CoICEngine:
                 lat = self.router.peer_hit_latency(per_req_desc_ms, lookup_ms,
                                                    batch=n_local_miss)
                 src = "peer"
+            elif is_remote:
+                lat = self.router.remote_hit_latency(
+                    per_req_desc_ms, lookup_ms, peer_net_ms=peer_share_ms,
+                    batch=n_escalated)
+                src = "remote"
             else:
                 lat = self.router.miss_latency(per_req_desc_ms, lookup_ms,
                                                float(cloud_ms[b]),
                                                peer_net_ms=peer_share_ms,
+                                               remote_net_ms=region_share_ms,
                                                batch=B)
                 src = "cloud"
             origin = self.router.origin_latency(float(cloud_ms[b]) if not hit[b]
@@ -222,7 +264,9 @@ class CoICEngine:
         return value, load_ms, "cloud"
 
     def stats(self) -> dict:
-        if self.cluster is not None:
+        if self.federation is not None:
+            s = self.federation.stats()
+        elif self.cluster is not None:
             s = self.cluster.stats()
         else:
             s = self.cache.stats(self.state)

@@ -17,10 +17,21 @@ NEG = -1e30
 
 @dataclasses.dataclass(frozen=True)
 class EvictionPolicy:
-    """kind: lru | lfu | fifo | lru_ttl.  ttl in engine time units (steps)."""
+    """kind: lru | lfu | fifo | lru_ttl.  ttl in engine time units (steps).
+
+    ``peer_aware``: bias eviction away from entries the rest of the cluster
+    relies on — among equal base priorities, an entry with a higher
+    ``peer_served`` count (hits this shard served for OTHER nodes/clusters
+    via ``SemanticCache.touch``) is kept longer, so a locally-cold but
+    cluster-hot entry outlives a locally-cold, cluster-cold one.  The bias
+    is a sub-integer fraction of the base priority, so it only ever breaks
+    ties (exact while the base priority stays below fp32's 2^23/1024
+    integer-resolution bound — far beyond any test/benchmark clock here).
+    """
 
     kind: str = "lru"
     ttl: int = 0
+    peer_aware: bool = False
 
     def priority(self, state) -> jax.Array:
         """(C,) fp32 — higher means keep longer.  Invalid slots get NEG so
@@ -34,6 +45,9 @@ class EvictionPolicy:
             pri = state.inserted_at.astype(jnp.float32)
         else:
             raise ValueError(f"unknown eviction policy {self.kind}")
+        if self.peer_aware:
+            pri = pri + jnp.clip(state.peer_served, 0, 1023).astype(
+                jnp.float32) / 1024.0
         return jnp.where(state.valid, pri, NEG)
 
     def expire(self, state, now: jax.Array) -> jax.Array:

@@ -39,6 +39,7 @@ class LatencyBreakdown:
     uplink_ms: float = 0.0
     lookup_ms: float = 0.0
     peer_net_ms: float = 0.0         # peer tier: descriptor out + result back
+    remote_net_ms: float = 0.0       # federation tier: metro<->region hops
     cloud_net_ms: float = 0.0
     cloud_compute_ms: float = 0.0
     downlink_ms: float = 0.0
@@ -47,7 +48,7 @@ class LatencyBreakdown:
     @property
     def total_ms(self) -> float:
         return (self.descriptor_ms + self.uplink_ms + self.lookup_ms
-                + self.peer_net_ms + self.cloud_net_ms
+                + self.peer_net_ms + self.remote_net_ms + self.cloud_net_ms
                 + self.cloud_compute_ms + self.downlink_ms)
 
 
@@ -73,6 +74,14 @@ class TwoTierRouter:
         message, the bytes scale — the batching win on the wire."""
         n = max(1, n_requests)
         return self.net.edge_to_edge_ms(self.sizes.descriptor_bytes * n) / n
+
+    def region_broadcast_ms(self, n_requests: int) -> float:
+        """Per-request share of ONE metro->region digest probe carrying
+        ``n_requests`` descriptors — the federation tier amortizes the
+        region hop over the whole engine step's miss batch the same way the
+        peer tier amortizes the LAN broadcast."""
+        n = max(1, n_requests)
+        return self.net.edge_to_region_ms(self.sizes.descriptor_bytes * n) / n
 
     def hit_latency(self, descriptor_ms: float, lookup_ms: float,
                     batch: int = 1) -> LatencyBreakdown:
@@ -107,13 +116,39 @@ class TwoTierRouter:
             amortized_over=n,
         )
 
+    def remote_hit_latency(self, descriptor_ms: float, lookup_ms: float,
+                           peer_net_ms: float = 0.0,
+                           batch: int = 1) -> LatencyBreakdown:
+        """Local + peer miss, remote-cluster hit: the descriptor travels
+        metro -> region in the step's ONE batched digest probe and the
+        winning cluster ships the payload back region -> metro — still no
+        WAN round-trip, no cloud compute.  ``peer_net_ms`` carries the
+        (fruitless) within-cluster peer broadcast share the request paid
+        before escalating; with ``batch`` > 1 the region hops carry the
+        whole miss batch and each request pays its share."""
+        s = self.sizes
+        n = max(1, batch)
+        return LatencyBreakdown(
+            descriptor_ms=descriptor_ms,
+            uplink_ms=self.net.client_to_edge_ms(s.descriptor_bytes),
+            lookup_ms=lookup_ms,
+            peer_net_ms=peer_net_ms,
+            remote_net_ms=(self.net.edge_to_region_ms(s.descriptor_bytes * n) / n
+                           + self.net.region_to_edge_ms(s.result_bytes * n) / n),
+            downlink_ms=self.net.edge_to_client_ms(s.result_bytes),
+            amortized_over=n,
+        )
+
     def miss_latency(self, descriptor_ms: float, lookup_ms: float,
                      cloud_compute_ms: float,
                      peer_net_ms: float = 0.0,
+                     remote_net_ms: float = 0.0,
                      batch: int = 1) -> LatencyBreakdown:
         """``peer_net_ms``: per-request share of the (fruitless) peer
         broadcast a cooperative cluster pays before falling through to the
-        cloud (compute it with ``peer_broadcast_ms`` when batching)."""
+        cloud (compute it with ``peer_broadcast_ms`` when batching).
+        ``remote_net_ms``: likewise for the federation tier's (fruitless)
+        metro->region digest probe (``region_broadcast_ms``)."""
         s = self.sizes
         return LatencyBreakdown(
             descriptor_ms=descriptor_ms,
@@ -121,6 +156,7 @@ class TwoTierRouter:
                        + self.net.client_to_edge_ms(s.input_bytes)),
             lookup_ms=lookup_ms,
             peer_net_ms=peer_net_ms,
+            remote_net_ms=remote_net_ms,
             cloud_net_ms=(self.net.edge_to_cloud_ms(s.input_bytes)
                           + self.net.cloud_to_edge_ms(s.result_bytes)),
             cloud_compute_ms=cloud_compute_ms,

@@ -36,6 +36,7 @@ class SemanticCacheState:
     last_used: jax.Array     # (C,) int32 — logical clock of last hit/insert
     inserted_at: jax.Array   # (C,) int32
     freq: jax.Array          # (C,) int32 — hit count (LFU)
+    peer_served: jax.Array   # (C,) int32 — hits served for OTHER nodes/clusters
     clock: jax.Array         # () int32 — logical time
     hits: jax.Array          # () int32 — stats
     misses: jax.Array        # () int32
@@ -69,6 +70,7 @@ class SemanticCache:
             last_used=z((C,), jnp.int32),
             inserted_at=z((C,), jnp.int32),
             freq=z((C,), jnp.int32),
+            peer_served=z((C,), jnp.int32),
             clock=jnp.zeros((), jnp.int32),
             hits=jnp.zeros((), jnp.int32),
             misses=jnp.zeros((), jnp.int32),
@@ -129,14 +131,17 @@ class SemanticCache:
     @partial(jax.jit, static_argnames=("self",))
     def touch(self, state: SemanticCacheState, idx: jax.Array,
               mask: jax.Array) -> SemanticCacheState:
-        """Record remote (peer-served) hits on this shard: refresh LRU/LFU
-        state and the hit counter for ``idx`` rows where ``mask`` is True.
-        The clock advances like a lookup so recency stays comparable."""
+        """Record remote (peer/cluster-served) hits on this shard: refresh
+        LRU/LFU state, the hit counter, and the per-slot ``peer_served``
+        demand counter (peer-aware eviction reads it) for ``idx`` rows where
+        ``mask`` is True.  The clock advances like a lookup so recency stays
+        comparable."""
         touched = jnp.where(mask, idx, self.capacity)    # out-of-range = drop
         return dataclasses.replace(
             state,
             last_used=state.last_used.at[touched].max(state.clock, mode="drop"),
             freq=state.freq.at[touched].add(1, mode="drop"),
+            peer_served=state.peer_served.at[touched].add(1, mode="drop"),
             clock=state.clock + 1,
             hits=state.hits + mask.sum(dtype=jnp.int32))
 
@@ -168,6 +173,7 @@ class SemanticCache:
             last_used=state.last_used.at[victims].set(state.clock, mode="drop"),
             inserted_at=state.inserted_at.at[victims].set(state.clock, mode="drop"),
             freq=state.freq.at[victims].set(1, mode="drop"),
+            peer_served=state.peer_served.at[victims].set(0, mode="drop"),
             clock=state.clock + 1,
         )
         return new

@@ -88,3 +88,103 @@ class ZipfWorkload:
                 ids, _ = self.sample(rng, n, batch)
                 round_.append((n, ids))
             yield round_
+
+
+@dataclasses.dataclass
+class RoamingWorkload:
+    """Roaming multi-cluster Zipf workload — the traffic shape the
+    cross-cluster federation tier is built for.
+
+    Each user belongs to a *home* metro cluster whose rotated-Zipf head
+    defines their interests (the scenes of the world they inhabit).  Every
+    step, each user migrates to a uniformly-random OTHER cluster with
+    probability ``mobility`` — but keeps requesting from their home-cluster
+    distribution, so a migrated user shifts the visited cluster's effective
+    popularity toward a head that is cached back home.  At ``mobility=0``
+    clusters are self-contained (within-cluster sharing suffices); at
+    ``mobility>0`` an increasing share of each cluster's traffic is
+    compulsory-miss locally but warm in a remote cluster — exactly the
+    redundancy the digest-probe remote rung converts into region-hop hits.
+    """
+
+    num_clusters: int = 3
+    nodes_per_cluster: int = 2
+    users_per_node: int = 8
+    pool_size: int = 96
+    dim: int = 128
+    payload_dim: int = 8
+    zipf_s: float = 1.1
+    noise: float = 0.02
+    mobility: float = 0.1            # per-step cluster-migration probability
+    seed: int = 0
+
+    def __post_init__(self):
+        assert 0.0 <= self.mobility <= 1.0, self.mobility
+        rng = np.random.default_rng(self.seed)
+        scenes = rng.standard_normal(
+            (self.pool_size, self.dim)).astype(np.float32)
+        self.scenes = scenes / np.linalg.norm(scenes, axis=1, keepdims=True)
+        self.payloads = rng.standard_normal(
+            (self.pool_size, self.payload_dim)).astype(np.float32)
+        ranks = np.arange(1, self.pool_size + 1, dtype=np.float64)
+        base = ranks ** (-self.zipf_s)
+        # per-HOME-cluster rotated heads: cluster A's tail is cluster B's
+        # head, so roamers carry demand for remotely-cached scenes
+        self._probs = np.stack([
+            np.roll(base, (k * self.pool_size) // self.num_clusters)
+            for k in range(self.num_clusters)])
+        self._probs /= self._probs.sum(axis=1, keepdims=True)
+        n_users = (self.num_clusters * self.nodes_per_cluster
+                   * self.users_per_node)
+        self.home = np.repeat(np.arange(self.num_clusters),
+                              self.nodes_per_cluster * self.users_per_node)
+        self.current = self.home.copy()                  # everyone starts home
+        self._n_users = n_users
+
+    # ------------------------------------------------------------------
+    def migrate(self, rng: np.random.Generator) -> int:
+        """One mobility tick: each user moves to a random other cluster
+        with probability ``mobility``.  Returns the number of movers."""
+        if self.num_clusters < 2 or self.mobility <= 0.0:
+            return 0
+        movers = rng.random(self._n_users) < self.mobility
+        if not movers.any():
+            return 0
+        hops = rng.integers(1, self.num_clusters, size=int(movers.sum()))
+        self.current[movers] = (self.current[movers] + hops) % self.num_clusters
+        return int(movers.sum())
+
+    # ------------------------------------------------------------------
+    def step_requests(self, rng: np.random.Generator
+                      ) -> List[Tuple[int, int, np.ndarray, np.ndarray]]:
+        """One request round AFTER migration: every user issues one request
+        from their HOME distribution at their CURRENT cluster.  Users at a
+        cluster are spread over its nodes round-robin.  Returns a list of
+        (cluster, node, scene_ids (B,), descriptors (B, dim)) batches."""
+        batches = []
+        for k in range(self.num_clusters):
+            users = np.nonzero(self.current == k)[0]
+            if not users.size:
+                continue
+            ids = np.concatenate([
+                rng.choice(self.pool_size, size=1, p=self._probs[self.home[u]])
+                for u in users])
+            desc = (self.scenes[ids]
+                    + self.noise * rng.standard_normal(
+                        (len(ids), self.dim)).astype(np.float32))
+            desc /= np.linalg.norm(desc, axis=1, keepdims=True)
+            for node in range(self.nodes_per_cluster):
+                sel = np.arange(len(users)) % self.nodes_per_cluster == node
+                if sel.any():
+                    batches.append((k, node, ids[sel],
+                                    desc[sel].astype(np.float32)))
+        return batches
+
+    def stream(self, steps: int, seed: int = 1
+               ) -> Iterator[List[Tuple[int, int, np.ndarray, np.ndarray]]]:
+        """Yields ``steps`` rounds of (cluster, node, ids, descriptors)
+        batches, with one migration tick before each round."""
+        rng = np.random.default_rng(seed)
+        for _ in range(steps):
+            self.migrate(rng)
+            yield self.step_requests(rng)

@@ -258,6 +258,44 @@ def grouped_cluster_topk_lookup(queries: jax.Array, keys: jax.Array,
     return idx.reshape(g, b, -1), score.reshape(g, b, -1)
 
 
+@partial(jax.jit, static_argnames=("k", "impl"))
+def federated_digest_lookup(queries: jax.Array, digests: jax.Array,
+                            valid: jax.Array, k: int = 1, *,
+                            impl: str = "auto"):
+    """Cross-cluster digest probe — the federation tier's remote rung,
+    ONE dispatch regardless of cluster count.
+
+    queries: (K, B, D) — group k holds home-cluster k's miss batch (pad
+    rows are fine: the caller masks them).  digests: (K, M, D) per-cluster
+    digest matrices (top-M hottest entry keys, possibly stale); valid:
+    (K, M).  Each group probes EVERY cluster's digest EXCEPT its own — a
+    home miss already scanned the home cluster's full shards, so a home
+    digest row can only be redundant or stale.
+
+    Returns (idx (K, B, k) int32 global digest indices in [0, K*M), score
+    (K, B, k) f32): row (h, b) equals ``similarity_topk_batched`` over the
+    pooled digest matrix with cluster h's rows masked out — candidate
+    cluster = idx // M.  A digest hit is a *hint*: the caller must confirm
+    against the candidate cluster's authoritative shards and treat a
+    confirm-miss as a digest false hit (stale digest), falling through to
+    the cloud.
+
+    Implemented as one ``similarity_topk_batched`` call over the
+    home-broadcast pooled digests — the same kernel as the ladder's other
+    rungs (Pallas on TPU), so digests add no new kernel surface.  The K^2*M
+    broadcast is digest-sized, not cache-sized: that is the point of
+    probing digests instead of shards.
+    """
+    from repro.kernels.similarity import similarity_topk_batched
+
+    K, M, D = digests.shape
+    pooled = jnp.broadcast_to(digests.reshape(1, K * M, D), (K, K * M, D))
+    # per-home validity: mask out the home cluster's digest rows
+    not_home = ~jnp.eye(K, dtype=bool)                   # (K_home, K)
+    valid_h = (valid[None, :, :] & not_home[:, :, None]).reshape(K, K * M)
+    return similarity_topk_batched(queries, pooled, valid_h, k, impl=impl)
+
+
 def sharded_topk_lookup(queries: jax.Array, keys: jax.Array,
                         valid: jax.Array, k: int, mesh: Mesh,
                         axis_name: str = "cache", *, impl: str = "auto"):

@@ -41,16 +41,15 @@ from repro.core.cluster import (TIER_LOCAL, TIER_MISS, TIER_PEER,
                                 ClusterConfig, CooperativeEdgeCluster)
 from repro.core.coic import CoICConfig
 from repro.core.descriptor import NgramSketchDescriptor, PrefixDescriptor
+from repro.core.federation import (FederatedEdgeTier, FederationConfig,
+                                   TIER_REMOTE as FED_REMOTE)
 from repro.core.network import NetworkModel
 from repro.core.router import LatencyBreakdown, PayloadSizes, TwoTierRouter
 from repro.core.semantic_cache import SemanticCache
 from repro.serving.kv_cache import batch_cache_scatter, init_batch_cache
 
 
-def _pow2(n: int, lo: int = 1) -> int:
-    """Next power of two >= max(n, lo) — bucket sizes bound retracing."""
-    n = max(n, lo)
-    return 1 << (n - 1).bit_length()
+from repro.core.cluster import pow2 as _pow2  # pad buckets bound retracing
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,7 +78,7 @@ class _Active:
 class ServedResult:
     req_id: int
     tokens: np.ndarray
-    source: str                      # edge | peer | cloud
+    source: str                      # edge | peer | remote | cloud
     latency_s: float                 # hits: modeled; cloud: submit->retire
     decode_steps: int
     breakdown: Optional[LatencyBreakdown] = None   # modeled terms (hits)
@@ -124,12 +123,15 @@ class ServingEngine:
             lambda p, t, ln: model.prefill(p, t, max_len=cfg.max_len,
                                            lengths=ln))
 
-        # CoIC front (single semantic cache, or a cooperative cluster when
-        # coic.num_nodes > 1 — each serving replica fronts one edge node)
+        # CoIC front (single semantic cache, a cooperative cluster when
+        # coic.num_nodes > 1, or a cross-cluster federation when
+        # coic.num_clusters > 1 — each serving replica fronts one edge node)
         self.coic_cfg = cfg.coic
         self.semantic = None
         self.sem_cluster = None
+        self.sem_fed = None
         self._req_node: Dict[int, int] = {}
+        self._req_cluster: Dict[int, int] = {}
         if cfg.coic is not None:
             c = cfg.coic
             if c.descriptor == "prefix":
@@ -141,13 +143,20 @@ class ServingEngine:
                 key_dim = c.descriptor_dim
                 self._desc_fn = jax.jit(lambda p, t: sk(t))
             self.key_dim = key_dim
-            if c.num_nodes > 1:
-                self.sem_cluster = CooperativeEdgeCluster(ClusterConfig(
-                    num_nodes=c.num_nodes, node_capacity=c.capacity,
-                    key_dim=key_dim, payload_dim=cfg.max_new_tokens,
-                    threshold=c.threshold, payload_dtype="int32",
-                    policy=c.policy, lookup_impl=c.lookup_impl,
-                    admission=c.admission, share=c.share))
+            cluster_cfg = ClusterConfig(
+                num_nodes=c.num_nodes, node_capacity=c.capacity,
+                key_dim=key_dim, payload_dim=cfg.max_new_tokens,
+                threshold=c.threshold, payload_dtype="int32",
+                policy=c.policy, lookup_impl=c.lookup_impl,
+                admission=c.admission, share=c.share)
+            if c.num_clusters > 1:
+                self.sem_fed = FederatedEdgeTier(FederationConfig(
+                    num_clusters=c.num_clusters, cluster=cluster_cfg,
+                    digest_size=c.digest_size,
+                    digest_interval=c.digest_interval, share=c.federate))
+                self.semantic = self.sem_fed.clusters[0].cache
+            elif c.num_nodes > 1:
+                self.sem_cluster = CooperativeEdgeCluster(cluster_cfg)
                 self.semantic = self.sem_cluster.cache
             else:
                 self.semantic = SemanticCache(
@@ -165,15 +174,18 @@ class ServingEngine:
                 result_bytes=cfg.max_new_tokens * 4))
 
     # ------------------------------------------------------------------
-    def submit(self, prompt: np.ndarray, node_id: int = 0) -> int:
-        """prompt: (S,) int32 arriving at edge ``node_id`` (ignored without
-        a cluster).  Enqueue-only: the lookup ladder runs at the next
-        ``step()`` for the whole pending batch at once.  Returns request id
-        (result arrives via ``step()`` -> self.results)."""
+    def submit(self, prompt: np.ndarray, node_id: int = 0,
+               cluster_id: int = 0) -> int:
+        """prompt: (S,) int32 arriving at edge ``node_id`` of cluster
+        ``cluster_id`` (ignored without a cluster/federation).  Enqueue-only:
+        the lookup ladder runs at the next ``step()`` for the whole pending
+        batch at once.  Returns request id (result arrives via ``step()``
+        -> self.results)."""
         rid = self._req_counter
         self._req_counter += 1
         self._t_submit[rid] = time.perf_counter()
-        self.pending.append((rid, np.asarray(prompt, np.int32), node_id))
+        self.pending.append((rid, np.asarray(prompt, np.int32), node_id,
+                             cluster_id))
         return rid
 
     # ------------------------------------------------------------------
@@ -214,10 +226,12 @@ class ServingEngine:
         batch = [self.pending.popleft() for _ in range(n_drain)]
         prompts = [b[1] for b in batch]
         nodes = [b[2] for b in batch]
+        clusters = [b[3] for b in batch]
 
         if self.semantic is None:                 # no CoIC front
-            for rid, prompt, node in batch:
+            for rid, prompt, node, clu in batch:
                 self._req_node[rid] = node
+                self._req_cluster[rid] = clu
                 self.queue.append((rid, prompt))
             return
 
@@ -225,7 +239,34 @@ class ServingEngine:
         n = len(batch)
 
         t0 = time.perf_counter()
-        if self.sem_cluster is not None:
+        if self.sem_fed is not None:
+            K = self.sem_fed.cfg.num_clusters
+            N = self.sem_fed.cfg.cluster.num_nodes
+            rows_of = [[[] for _ in range(N)] for _ in range(K)]
+            for i, (node, clu) in enumerate(zip(nodes, clusters)):
+                rows_of[clu][node].append(i)
+            Bmax = _pow2(max(len(r) for kr in rows_of for r in kr))
+            queries = np.zeros((K, N, Bmax, self.key_dim), np.float32)
+            qmask = np.zeros((K, N, Bmax), bool)
+            for k in range(K):
+                for g in range(N):
+                    rows = rows_of[k][g]
+                    queries[k, g, :len(rows)] = desc[rows]
+                    qmask[k, g, :len(rows)] = True
+            fres = self.sem_fed.lookup_grouped(queries, qmask)
+            self.dispatches["lookup"] += 1
+            hit = np.zeros((n,), bool)
+            tier = np.full((n,), TIER_MISS, np.int8)
+            value = np.zeros((n, self.cfg.max_new_tokens), np.int32)
+            for k in range(K):
+                for g in range(N):
+                    rows = rows_of[k][g]
+                    if not rows:
+                        continue
+                    hit[rows] = fres.hit[k, g, :len(rows)]
+                    tier[rows] = fres.tier[k, g, :len(rows)]
+                    value[rows] = fres.value[k, g, :len(rows)]
+        elif self.sem_cluster is not None:
             G = self.sem_cluster.cfg.num_nodes
             rows_of = [[] for _ in range(G)]
             for i, node in enumerate(nodes):
@@ -264,17 +305,38 @@ class ServingEngine:
         lookup_ms = (time.perf_counter() - t0) * 1e3
 
         # every local miss (peer hit or cloud miss) shares ONE peer
-        # descriptor broadcast; local hits share the step's single
-        # descriptor + lookup dispatch
-        n_local_miss = int((np.asarray(tier) != TIER_LOCAL).sum())
-        for i, (rid, prompt, node) in enumerate(batch):
+        # descriptor broadcast — per CLUSTER: each metro's LAN broadcast
+        # carries only its own misses; everything escalating past the peer
+        # tier shares that home cluster's ONE metro->region digest message;
+        # local hits share the step's single descriptor + lookup dispatch
+        tier_np = np.asarray(tier)
+        clus_np = np.asarray(clusters)
+        n_local_miss = int((tier_np != TIER_LOCAL).sum())
+        lm = {0: n_local_miss}
+        esc = {}
+        fed_peer_on = False
+        if self.sem_fed is not None:
+            lm = {k: int(((tier_np != TIER_LOCAL) & (clus_np == k)).sum())
+                  for k in set(clusters)}
+            esc = {k: int(((tier_np >= FED_REMOTE) & (clus_np == k)).sum())
+                   for k in set(clusters)}
+            fed_peer_on = (self.sem_fed.cfg.cluster.share
+                           and self.sem_fed.cfg.cluster.num_nodes > 1)
+        for i, (rid, prompt, node, clu) in enumerate(batch):
             if hit[i]:
                 toks = np.asarray(value[i], np.int32)
                 if tier[i] == TIER_PEER:
                     lat = self.router.peer_hit_latency(
                         desc_ms / n, lookup_ms / n,
-                        batch=max(1, n_local_miss))
+                        batch=max(1, lm.get(clu, n_local_miss)))
                     src = "peer"
+                elif self.sem_fed is not None and tier[i] == FED_REMOTE:
+                    lat = self.router.remote_hit_latency(
+                        desc_ms / n, lookup_ms / n,
+                        peer_net_ms=(self.router.peer_broadcast_ms(lm[clu])
+                                     if fed_peer_on else 0.0),
+                        batch=max(1, esc[clu]))
+                    src = "remote"
                 else:
                     lat = self.router.hit_latency(desc_ms / n, lookup_ms / n,
                                                   batch=n)
@@ -286,6 +348,7 @@ class ServingEngine:
                     breakdown=lat))
             else:
                 self._req_node[rid] = node
+                self._req_cluster[rid] = clu
                 self._desc_of[rid] = desc[i]
                 self.queue.append((rid, prompt))
 
@@ -343,6 +406,7 @@ class ServingEngine:
         self.row_active[slot] = False
         self.free_slots.append(slot)
         node = self._req_node.pop(a.req_id, 0)
+        clu = self._req_cluster.pop(a.req_id, 0)
         prompt = self._prompts.pop(a.req_id, None)
         if self.semantic is not None and prompt is not None:
             # reuse the schedule-time descriptor (every miss cached one in
@@ -350,7 +414,10 @@ class ServingEngine:
             desc = self._desc_of.pop(a.req_id)
             pad = np.zeros((self.cfg.max_new_tokens,), np.int32)
             pad[:len(toks)] = toks
-            if self.sem_cluster is not None:
+            if self.sem_fed is not None:
+                self.sem_fed.insert(clu, node, jnp.asarray(desc[None, :]),
+                                    jnp.asarray(pad[None, :]))
+            elif self.sem_cluster is not None:
                 self.sem_cluster.insert(node, jnp.asarray(desc[None, :]),
                                         jnp.asarray(pad[None, :]))
             else:
@@ -393,10 +460,13 @@ class ServingEngine:
             "completed": len(self.results),
             "edge_hits": sum(r.source == "edge" for r in self.results),
             "peer_hits": sum(r.source == "peer" for r in self.results),
+            "remote_hits": sum(r.source == "remote" for r in self.results),
             "cloud": sum(r.source == "cloud" for r in self.results),
             "dispatches": dict(self.dispatches),
         }
-        if self.sem_cluster is not None:
+        if self.sem_fed is not None:
+            out["semantic"] = self.sem_fed.stats()
+        elif self.sem_cluster is not None:
             out["semantic"] = self.sem_cluster.stats()
         elif self.semantic is not None:
             out["semantic"] = self.semantic.stats(self.sem_state)

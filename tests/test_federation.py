@@ -1,0 +1,464 @@
+"""Cross-cluster federation tier: digest-probe exactness, remote-rung
+serving, digest staleness (false hits fall through, never phantom
+payloads), fresh-digest brute-force equivalence, freq-weighted admission,
+peer-aware eviction, and engine-level dispatch bounds.
+
+Seeded-random sequences run directly (no ``hypothesis`` dependency — the
+container may not ship it); ``test_federation_properties.py`` holds the
+hypothesis variants."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.cluster import ClusterConfig, CooperativeEdgeCluster
+from repro.core.federation import (TIER_LOCAL, TIER_MISS, TIER_PEER,
+                                   TIER_REMOTE, FederatedEdgeTier,
+                                   FederationConfig)
+from repro.core.policies import EvictionPolicy
+from repro.core.semantic_cache import SemanticCache
+from repro.data.workload import RoamingWorkload
+from repro.parallel.sharding import federated_digest_lookup
+
+
+def _unit(rng, n, d):
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def _fed(clusters=2, nodes=2, cap=16, d=32, p=4, tau=0.9,
+         digest_size=64, digest_interval=1, admission="always",
+         share=True, policy=EvictionPolicy("lru")):
+    return FederatedEdgeTier(FederationConfig(
+        num_clusters=clusters, digest_size=digest_size,
+        digest_interval=digest_interval, share=share,
+        cluster=ClusterConfig(num_nodes=nodes, node_capacity=cap, key_dim=d,
+                              payload_dim=p, threshold=tau, policy=policy,
+                              admission=admission)))
+
+
+# ---------------------------------------------------------------------------
+# the grouped digest probe: one dispatch, home cluster excluded
+# ---------------------------------------------------------------------------
+
+
+class TestDigestLookup:
+    @pytest.mark.parametrize("k_cl,m,b,d", [(2, 8, 4, 16), (4, 16, 7, 32),
+                                            (3, 5, 1, 8)])
+    def test_matches_home_masked_oracle(self, k_cl, m, b, d):
+        """Row (h, q) must match a numpy top-1 over the pooled digest
+        matrix with home cluster h's rows masked out (scores to fp32
+        tolerance, and the returned index must be a valid non-home row
+        scoring at the max)."""
+        rng = np.random.default_rng(k_cl * 100 + m)
+        digests = _unit(rng, k_cl * m, d).reshape(k_cl, m, d)
+        queries = _unit(rng, k_cl * b, d).reshape(k_cl, b, d)
+        valid = rng.random((k_cl, m)) > 0.3
+        gi, gs = federated_digest_lookup(
+            jnp.asarray(queries), jnp.asarray(digests), jnp.asarray(valid), 1)
+        gi, gs = np.asarray(gi)[..., 0], np.asarray(gs)[..., 0]
+        pooled = digests.reshape(k_cl * m, d)
+        for h in range(k_cl):
+            v = valid.copy()
+            v[h] = False
+            scores = pooled @ queries[h].T                 # (K*M, B)
+            scores[~v.reshape(-1)] = -np.inf
+            best = scores.max(axis=0)
+            np.testing.assert_allclose(gs[h], best, rtol=1e-5, atol=1e-5)
+            for q in range(b):
+                idx = int(gi[h, q])
+                assert idx // m != h                       # never the home
+                assert v.reshape(-1)[idx]
+                assert scores[idx, q] >= best[q] - 1e-5
+
+    def test_home_digest_never_wins(self):
+        """A query whose exact key sits only in the HOME digest must not
+        match it — the home cluster was already scanned authoritatively."""
+        rng = np.random.default_rng(0)
+        d = 16
+        key = _unit(rng, 1, d)[0]
+        digests = np.zeros((2, 4, d), np.float32)
+        digests[0, 0] = key                      # home cluster 0 advertises it
+        valid = np.zeros((2, 4), bool)
+        valid[0, 0] = True
+        q = np.zeros((2, 1, d), np.float32)
+        q[0, 0] = key
+        _, gs = federated_digest_lookup(jnp.asarray(q), jnp.asarray(digests),
+                                        jnp.asarray(valid), 1)
+        assert float(gs[0, 0, 0]) < -1e29        # nothing valid to match
+
+
+# ---------------------------------------------------------------------------
+# remote rung: serve, admit, count — and staleness handling
+# ---------------------------------------------------------------------------
+
+
+class TestRemoteRung:
+    def test_remote_hit_then_admitted_locally(self):
+        rng = np.random.default_rng(1)
+        d, p = 32, 4
+        pool = _unit(rng, 8, d)
+        pay = rng.standard_normal((8, p)).astype(np.float32)
+        fed = _fed(clusters=3, nodes=2, d=d, p=p)
+        fed.insert(0, 0, jnp.asarray(pool), jnp.asarray(pay))
+
+        res = fed.lookup(1, 1, pool)
+        assert (res.tier == TIER_REMOTE).all(), res.tier
+        assert (res.cluster == 0).all()
+        np.testing.assert_allclose(res.value, pay, rtol=1e-5)
+        assert fed.last_ladder_dispatches <= 4
+
+        res2 = fed.lookup(1, 1, pool)            # admitted into (1, 1)
+        assert (res2.tier == TIER_LOCAL).all(), res2.tier
+        st = fed.stats()
+        assert st["tier_counts"]["remote"] == 8
+        assert st["clusters"][0]["remote_hits_served"] == 8
+        assert st["clusters"][1]["remote_fills"] == 8
+
+    def test_share_off_keeps_clusters_isolated(self):
+        rng = np.random.default_rng(2)
+        d = 32
+        keys = _unit(rng, 4, d)
+        for share, want in ((True, True), (False, False)):
+            fed = _fed(clusters=2, share=share, d=d)
+            fed.insert(0, 0, jnp.asarray(keys),
+                       jnp.ones((4, 4), jnp.float32))
+            res = fed.lookup(1, 0, keys)
+            assert bool(res.hit.all()) == want
+
+    def test_stale_digest_false_hit_falls_through_to_cloud(self):
+        """A digest row whose entry was evicted since the refresh matches
+        the probe but fails the authoritative confirm: counted as a digest
+        false hit, served as a MISS with a zero payload — stale digests
+        cost a wasted probe, never a phantom payload."""
+        rng = np.random.default_rng(3)
+        d, p = 32, 4
+        e, f = _unit(rng, 2, d)
+        fed = _fed(clusters=2, nodes=1, cap=1, d=d, p=p,
+                   digest_interval=100, admission="never")
+        fed.insert(0, 0, jnp.asarray(e[None]),
+                   jnp.full((1, p), 7.0, jnp.float32))
+
+        res = fed.lookup(1, 0, e[None])          # digest fresh at step 0
+        assert res.tier[0] == TIER_REMOTE
+        # evict E: the only slot now holds F, digest still advertises E
+        fed.insert(0, 0, jnp.asarray(f[None]),
+                   jnp.full((1, p), 9.0, jnp.float32))
+        res2 = fed.lookup(1, 0, e[None])
+        assert res2.tier[0] == TIER_MISS
+        assert not res2.hit[0]
+        np.testing.assert_array_equal(res2.value[0], np.zeros(p))
+        assert fed.digest_false_hits == 1
+
+    def test_undersized_digest_under_reports_only(self):
+        """digest_size=1 advertises just the hottest entry: colder remote
+        entries become misses (under-report), never wrong payloads."""
+        rng = np.random.default_rng(4)
+        d, p = 32, 4
+        pool = _unit(rng, 4, d)
+        pay = rng.standard_normal((4, p)).astype(np.float32)
+        fed = _fed(clusters=2, nodes=1, d=d, p=p, digest_size=1,
+                   admission="never")
+        fed.insert(0, 0, jnp.asarray(pool), jnp.asarray(pay))
+        # heat up entry 2: local hits at its home cluster
+        for _ in range(3):
+            r = fed.lookup(0, 0, pool[2:3])
+            assert r.tier[0] == TIER_LOCAL
+        res = fed.lookup(1, 0, pool)
+        assert res.tier[2] == TIER_REMOTE        # the advertised hot entry
+        np.testing.assert_allclose(res.value[2], pay[2], rtol=1e-5)
+        others = [i for i in range(4) if i != 2]
+        assert (res.tier[others] == TIER_MISS).all()
+        assert fed.digest_false_hits == 0        # under-report, not phantom
+
+
+# ---------------------------------------------------------------------------
+# fresh digests == brute-force probing every cluster (seeded property)
+# ---------------------------------------------------------------------------
+
+
+def _oracle_ladder(fed, queries, mask):
+    """Numpy ladder over the pre-lookup state snapshot: local -> peer ->
+    remote (brute-force over every OTHER cluster's pooled shards)."""
+    ccfg = fed.cfg.cluster
+    K, N, B, _ = queries.shape
+    keys = np.stack([
+        np.stack([np.asarray(s.keys) for s in cl.states])
+        for cl in fed.clusters])                            # (K, N, C, D)
+    valid = np.stack([
+        np.stack([np.asarray(s.valid) for s in cl.states])
+        for cl in fed.clusters])                            # (K, N, C)
+    tier = np.full((K, N, B), TIER_MISS, np.int8)
+    for k in range(K):
+        for n in range(N):
+            for b in range(B):
+                if not mask[k, n, b]:
+                    continue
+                q = queries[k, n, b]
+                def best(kk, vv):
+                    s = kk.reshape(-1, kk.shape[-1]) @ q
+                    s[~vv.reshape(-1)] = -np.inf
+                    return s.max() if vv.any() else -np.inf
+                if best(keys[k, n], valid[k, n]) >= ccfg.threshold:
+                    tier[k, n, b] = TIER_LOCAL
+                elif best(keys[k], valid[k]) >= ccfg.threshold:
+                    tier[k, n, b] = TIER_PEER
+                else:
+                    others = [c for c in range(K) if c != k]
+                    if best(keys[others], valid[others]) >= ccfg.threshold:
+                        tier[k, n, b] = TIER_REMOTE
+    return tier
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_fresh_full_digest_equals_brute_force_every_cluster(seed):
+    """With digest_interval=1 and a digest wide enough to carry every live
+    entry, the digest rung is hit-for-hit equivalent to brute-force probing
+    every remote cluster: same tiers, same payloads, zero false hits."""
+    rng = np.random.default_rng(seed)
+    K, N, cap, d, p, tau = 3, 2, 8, 32, 4, 0.8
+    pool = _unit(rng, 20, d)
+    pay = rng.standard_normal((20, p)).astype(np.float32)
+    fed = _fed(clusters=K, nodes=N, cap=cap, d=d, p=p, tau=tau,
+               digest_size=N * cap, digest_interval=1)
+
+    for _ in range(12):
+        B = int(rng.integers(1, 4))
+        qids = rng.integers(0, 20, size=(K, N, B))
+        queries = pool[qids]
+        mask = rng.random((K, N, B)) > 0.2
+        want = _oracle_ladder(fed, queries, mask)
+        res = fed.lookup_grouped(queries, mask)
+        assert np.array_equal(res.tier[mask], want[mask]), (
+            res.tier[mask], want[mask])
+        served = res.hit & mask
+        if served.any():
+            np.testing.assert_allclose(res.value[served],
+                                       pay[qids[served]], rtol=1e-5)
+        # insert cloud results for misses at their home node
+        miss = (res.tier == TIER_MISS) & mask
+        for k in range(K):
+            for n in range(N):
+                rows = np.nonzero(miss[k, n])[0]
+                if rows.size:
+                    fed.insert(k, n, jnp.asarray(queries[k, n, rows]),
+                               jnp.asarray(pay[qids[k, n, rows]]))
+    assert fed.digest_false_hits == 0            # fresh digests never lie
+    assert fed.stats()["tier_counts"]["remote"] > 0
+
+
+# ---------------------------------------------------------------------------
+# freq-weighted admission
+# ---------------------------------------------------------------------------
+
+
+class TestFreqWeightedAdmission:
+    def test_cold_entry_not_admitted_over_hotter_victims(self):
+        """A peer entry with 1 observed hit must not displace local entries
+        with 2+; once its owner-side count beats the coldest local victim
+        it replicates."""
+        rng = np.random.default_rng(5)
+        d, p = 32, 4
+        pool = _unit(rng, 6, d)
+        cl = CooperativeEdgeCluster(ClusterConfig(
+            num_nodes=2, node_capacity=4, key_dim=d, payload_dim=p,
+            threshold=0.9, admission="freq_weighted"))
+        # node 0: full shard, every entry hit twice (freq >= 3)
+        cl.insert(0, jnp.asarray(pool[:4]), jnp.zeros((4, p), jnp.float32))
+        for _ in range(2):
+            assert bool(cl.lookup(0, jnp.asarray(pool[:4])).hit.all())
+        # node 1 owns E (freq 1 at insert)
+        cl.insert(1, jnp.asarray(pool[4:5]), jnp.ones((1, p), jnp.float32))
+
+        r = cl.lookup(0, jnp.asarray(pool[4:5]))         # peer hit, freq 1
+        assert r.tier[0] == 1 and cl.peer_fills[0] == 0  # not admitted
+        # each serve touches the owner: freq climbs; once it beats the
+        # coldest local victim's count the entry replicates
+        for _ in range(8):
+            cl.lookup(0, jnp.asarray(pool[4:5]))
+            if cl.peer_fills[0]:
+                break
+        assert cl.peer_fills[0] == 1
+
+    def test_admits_into_free_slots(self):
+        """An empty requester shard always admits (victim count 0)."""
+        rng = np.random.default_rng(6)
+        d = 32
+        keys = _unit(rng, 2, d)
+        cl = CooperativeEdgeCluster(ClusterConfig(
+            num_nodes=2, node_capacity=4, key_dim=d, payload_dim=4,
+            threshold=0.9, admission="freq_weighted"))
+        cl.insert(1, jnp.asarray(keys), jnp.ones((2, 4), jnp.float32))
+        cl.lookup(0, jnp.asarray(keys))
+        assert cl.peer_fills[0] == 2
+
+    def test_remote_admission_inherits_freq_weighted(self):
+        rng = np.random.default_rng(7)
+        d, p = 32, 4
+        pool = _unit(rng, 5, d)
+        fed = _fed(clusters=2, nodes=1, cap=4, d=d, p=p,
+                   admission="freq_weighted")
+        fed.insert(0, 0, jnp.asarray(pool[:1]),
+                   jnp.ones((1, p), jnp.float32))
+        # requester's shard is empty -> admit on first remote hit
+        res = fed.lookup(1, 0, pool[:1])
+        assert res.tier[0] == TIER_REMOTE
+        assert fed.remote_fills[1] == 1
+        assert fed.lookup(1, 0, pool[:1]).tier[0] == TIER_LOCAL
+
+
+# ---------------------------------------------------------------------------
+# peer-aware eviction
+# ---------------------------------------------------------------------------
+
+
+class TestPeerAwareEviction:
+    def test_priority_prefers_peer_cold_victim_on_ties(self):
+        """Two equally-old entries: the peer-hot one must outlive the
+        peer-cold one when the policy is peer-aware (and must NOT without
+        the flag — slot order decides)."""
+        d, p = 8, 2
+        rng = np.random.default_rng(8)
+        keys = _unit(rng, 3, d)
+        for peer_aware, survivor in ((True, 0), (False, 1)):
+            cache = SemanticCache(
+                capacity=2, key_dim=d, payload_dim=p, threshold=0.9,
+                policy=EvictionPolicy("lru", peer_aware=peer_aware))
+            state = cache.init()
+            state = cache.insert(state, jnp.asarray(keys[:2]),
+                                 jnp.zeros((2, p), jnp.float32))
+            # slot 0 served a peer (same logical age: touch only bumps
+            # peer_served here, last_used already equals the insert clock)
+            state = dataclasses.replace(
+                state,
+                peer_served=state.peer_served.at[0].add(3),
+            )
+            state = cache.insert(state, jnp.asarray(keys[2:]),
+                                 jnp.zeros((1, p), jnp.float32))
+            _, res = cache.lookup(state, jnp.asarray(keys))
+            hit = np.asarray(res.hit)
+            assert hit[survivor] and hit[2], (peer_aware, hit)
+            assert not hit[1 - survivor], (peer_aware, hit)
+
+    def test_cluster_peer_hot_entry_survives_eviction(self):
+        """Through the real serve path: node 0 holds A and B from one
+        insert batch (equal FIFO age); A keeps getting served to node 1
+        (touch -> peer_served).  When node 0 must evict, B goes, A stays."""
+        rng = np.random.default_rng(9)
+        d, p = 32, 4
+        pool = _unit(rng, 3, d)
+        cl = CooperativeEdgeCluster(ClusterConfig(
+            num_nodes=2, node_capacity=2, key_dim=d, payload_dim=p,
+            threshold=0.9, admission="never",
+            policy=EvictionPolicy("fifo", peer_aware=True)))
+        cl.insert(0, jnp.asarray(pool[:2]), jnp.zeros((2, p), jnp.float32))
+        for _ in range(2):                       # A = pool[0] is cluster-hot
+            assert cl.lookup(1, jnp.asarray(pool[:1])).tier[0] == 1
+        cl.insert(0, jnp.asarray(pool[2:]), jnp.zeros((1, p), jnp.float32))
+        res = cl.lookup(0, jnp.asarray(pool))
+        assert bool(res.hit[0]) and bool(res.hit[2])     # A + newcomer live
+        assert not res.hit[1]                            # B evicted
+
+
+# ---------------------------------------------------------------------------
+# engine integration + dispatch bound, and the benchmark acceptance
+# ---------------------------------------------------------------------------
+
+
+def test_serving_engine_remote_tier(tiny_model, nprng):
+    from repro.core.coic import CoICConfig
+    from repro.serving.engine import ServingConfig, ServingEngine
+
+    model, params = tiny_model
+    cfg = ServingConfig(max_batch=4, max_len=64, max_new_tokens=4,
+                        coic=CoICConfig(capacity=16, threshold=0.98,
+                                        descriptor="sketch", num_nodes=2,
+                                        num_clusters=2, digest_interval=1,
+                                        admission="always"))
+    eng = ServingEngine(model, params, cfg)
+    prompt = nprng.integers(0, model.cfg.vocab_size, size=(16,)).astype(np.int32)
+
+    eng.submit(prompt, node_id=0, cluster_id=0)
+    eng.run_until_drained()
+    assert eng.results[-1].source == "cloud"
+    eng.submit(prompt, node_id=1, cluster_id=1)        # other metro
+    eng.run_until_drained()
+    assert eng.results[-1].source == "remote"
+    assert eng.results[-1].decode_steps == 0           # served from cache
+    assert eng.results[-1].breakdown.remote_net_ms > 0.0
+    assert eng.results[-1].breakdown.cloud_net_ms == 0.0
+    eng.submit(prompt, node_id=1, cluster_id=1)        # admitted locally
+    eng.run_until_drained()
+    assert eng.results[-1].source == "edge"
+    np.testing.assert_array_equal(eng.results[0].tokens, eng.results[1].tokens)
+    assert eng.stats()["remote_hits"] == 1
+
+
+def test_engine_ladder_grows_at_most_two_dispatches(tiny_model, nprng):
+    """Dispatch-counter acceptance: one engine step over requests from
+    EVERY (cluster, node) runs 1 descriptor dispatch + 1 engine lookup,
+    and the federation ladder under it stays at <= 4 device dispatches
+    (2 intra-cluster + digest probe + confirm) regardless of K."""
+    from repro.core.coic import CoICConfig
+    from repro.serving.engine import ServingConfig, ServingEngine
+
+    model, params = tiny_model
+    for K in (2, 4):
+        eng = ServingEngine(model, params, ServingConfig(
+            max_batch=8, max_len=32, max_new_tokens=4,
+            coic=CoICConfig(capacity=16, threshold=0.98,
+                            descriptor="sketch", num_nodes=2,
+                            num_clusters=K, digest_interval=1)))
+        for k in range(K):
+            for n in range(2):
+                for _ in range(3):
+                    eng.submit(nprng.integers(
+                        0, model.cfg.vocab_size, size=(12,)).astype(np.int32),
+                        node_id=n, cluster_id=k)
+        eng.step()
+        assert eng.dispatches["descriptor"] == 1
+        assert eng.dispatches["lookup"] == 1
+        assert not eng.pending
+        assert eng.sem_fed.last_ladder_dispatches <= 4, (
+            K, eng.sem_fed.last_ladder_dispatches)
+
+
+def test_benchmark_federated_strictly_beats_isolated():
+    """The acceptance scenario: at mobility > 0 on the roaming workload the
+    federated tier's hit rate strictly exceeds isolated clusters, latency
+    improves, and the ladder bound holds."""
+    from benchmarks.federated_hit_rate import run
+
+    rows = run(steps=12, users_per_node=4, pool=64, node_capacity=16,
+               mobilities=(0.3,))
+    parsed = {}
+    for name, _, derived in rows:
+        parsed[name] = dict(kv.split("=", 1) for kv in derived.split(";")
+                            if "=" in kv)
+    iso = parsed["fed_isolated_m0.3"]
+    fed = parsed["fed_federated_m0.3"]
+    assert float(fed["hit_rate"]) > float(iso["hit_rate"]), (iso, fed)
+    assert float(fed["mean_latency_ms"]) < float(iso["mean_latency_ms"])
+    assert int(fed["remote"]) > 0
+    assert "digest_false_hit" in fed
+    assert int(parsed["fed_ladder_dispatches"]["max"]) <= 4
+
+
+def test_roaming_workload_mobility_zero_stays_home():
+    wl = RoamingWorkload(num_clusters=3, nodes_per_cluster=2,
+                         users_per_node=4, pool_size=32, dim=16,
+                         mobility=0.0, seed=0)
+    for _ in wl.stream(3, seed=1):
+        pass
+    assert (wl.current == wl.home).all()
+
+    wl2 = RoamingWorkload(num_clusters=3, nodes_per_cluster=2,
+                          users_per_node=4, pool_size=32, dim=16,
+                          mobility=0.5, seed=0)
+    n = 0
+    for round_ in wl2.stream(3, seed=1):
+        n += sum(len(ids) for _, _, ids, _ in round_)
+    assert n == 3 * 3 * 2 * 4                    # every user, every round
+    assert (wl2.current != wl2.home).any()

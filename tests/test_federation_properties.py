@@ -1,0 +1,145 @@
+"""Property-based federation-tier invariants (hypothesis).
+
+The two digest-staleness contracts from the design:
+
+1. **Fresh-digest equivalence** — with ``digest_interval=1`` and a digest
+   wide enough to carry every live entry, the remote rung is hit-for-hit
+   equivalent to brute-force probing every remote cluster's full shards.
+2. **Staleness only under-reports** — with an arbitrary (stale) refresh
+   interval, every payload served from the remote tier is a genuine
+   above-threshold entry (never a phantom from a dead digest row), and the
+   set of remote hits is a subset of what brute force would have served.
+
+Seeded deterministic versions of (1) run in ``test_federation.py`` so the
+invariant is always exercised; this module widens the input space when
+``hypothesis`` is available."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cluster import ClusterConfig
+from repro.core.federation import (TIER_MISS, TIER_REMOTE, FederatedEdgeTier,
+                                   FederationConfig)
+
+TAU = 0.8
+
+
+def _mk(num_clusters, num_nodes, cap, d, p, digest_size, digest_interval,
+        admission):
+    return FederatedEdgeTier(FederationConfig(
+        num_clusters=num_clusters, digest_size=digest_size,
+        digest_interval=digest_interval,
+        cluster=ClusterConfig(num_nodes=num_nodes, node_capacity=cap,
+                              key_dim=d, payload_dim=p, threshold=TAU,
+                              admission=admission)))
+
+
+def _pool(seed, n, d):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def _brute_force_remote(fed, k_home, q):
+    """Would brute-force probing every OTHER cluster's full shards serve
+    ``q``?  Uses the live states (called before the lookup mutates them)."""
+    best = -np.inf
+    for c, cl in enumerate(fed.clusters):
+        if c == k_home:
+            continue
+        for s in cl.states:
+            valid = np.asarray(s.valid)
+            if valid.any():
+                best = max(best, float(
+                    (np.asarray(s.keys)[valid] @ q).max()))
+    return best >= TAU
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.data())
+def test_fresh_full_digest_equivalent_to_brute_force(data):
+    """Contract (1): fresh, full-width digests serve exactly the requests
+    brute force would — and the payloads are the probed entries' values."""
+    K = data.draw(st.integers(2, 3), label="clusters")
+    N = data.draw(st.integers(1, 2), label="nodes")
+    cap = data.draw(st.integers(2, 6), label="capacity")
+    d = 24
+    pool = _pool(data.draw(st.integers(0, 9), label="pool_seed"), 12, d)
+    pay = np.arange(12, dtype=np.float32)[:, None].repeat(3, axis=1)
+    fed = _mk(K, N, cap, d, 3, digest_size=N * cap, digest_interval=1,
+              admission=data.draw(st.sampled_from(
+                  ["always", "never", "second_hit", "freq_weighted"]),
+                  label="admission"))
+
+    for _ in range(data.draw(st.integers(2, 5), label="rounds")):
+        qids = np.array(data.draw(st.lists(
+            st.integers(0, 11), min_size=K * N, max_size=K * N),
+            label="qids")).reshape(K, N, 1)
+        queries = pool[qids]
+        want_remote = {}
+        for k in range(K):
+            for n in range(N):
+                want_remote[(k, n)] = _brute_force_remote(
+                    fed, k, queries[k, n, 0])
+        res = fed.lookup_grouped(queries)
+        for k in range(K):
+            for n in range(N):
+                t = int(res.tier[k, n, 0])
+                if t == TIER_REMOTE:
+                    assert want_remote[(k, n)]
+                    np.testing.assert_allclose(
+                        res.value[k, n, 0], pay[qids[k, n, 0]], rtol=1e-5)
+                elif t == TIER_MISS:
+                    # brute force would also have missed remotely
+                    assert not want_remote[(k, n)]
+                    fed.insert(k, n, jnp.asarray(queries[k, n]),
+                               jnp.asarray(pay[qids[k, n]]))
+    assert fed.digest_false_hits == 0
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.data())
+def test_stale_digests_only_under_report(data):
+    """Contract (2): with stale digests every remote-served payload is the
+    requested scene's genuine value, remote hits are a subset of brute
+    force, and false digest hits land in the counter, not in results."""
+    K = data.draw(st.integers(2, 3), label="clusters")
+    cap = data.draw(st.integers(1, 3), label="capacity")
+    interval = data.draw(st.integers(2, 7), label="digest_interval")
+    d = 24
+    pool = _pool(data.draw(st.integers(0, 9), label="pool_seed"), 10, d)
+    pay = np.arange(10, dtype=np.float32)[:, None].repeat(3, axis=1)
+    fed = _mk(K, 1, cap, d, 3, digest_size=cap, digest_interval=interval,
+              admission="never")
+
+    n_remote = 0
+    for _ in range(data.draw(st.integers(3, 8), label="rounds")):
+        qids = np.array(data.draw(st.lists(
+            st.integers(0, 9), min_size=K, max_size=K),
+            label="qids")).reshape(K, 1, 1)
+        queries = pool[qids]
+        want_remote = {k: _brute_force_remote(fed, k, queries[k, 0, 0])
+                       for k in range(K)}
+        res = fed.lookup_grouped(queries)
+        for k in range(K):
+            t = int(res.tier[k, 0, 0])
+            if t == TIER_REMOTE:
+                n_remote += 1
+                assert want_remote[k]            # subset of brute force
+                np.testing.assert_allclose(
+                    res.value[k, 0, 0], pay[qids[k, 0, 0]], rtol=1e-5)
+            elif t == TIER_MISS:
+                # a phantom digest row must surface as a counted false hit
+                # (or a plain under-report) — never as a served payload
+                np.testing.assert_array_equal(res.value[k, 0, 0],
+                                              np.zeros(3))
+                fed.insert(k, 0, jnp.asarray(queries[k, 0]),
+                           jnp.asarray(pay[qids[k, 0]]))
+    # eviction churn at capacity<=3 makes stale rows routine; the counter
+    # must absorb them silently (no exception, no phantom serve)
+    assert fed.digest_false_hits >= 0
+    assert fed.stats()["tier_counts"]["remote"] == n_remote
