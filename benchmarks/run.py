@@ -13,8 +13,8 @@ import traceback
 
 def main() -> None:
     from benchmarks import (block_reuse, cache_lookup, cooperative_hit_rate,
-                            federated_hit_rate, hit_rate, load_latency,
-                            recognition_latency, roofline)
+                            federated_hit_rate, frame_deadline, hit_rate,
+                            load_latency, recognition_latency, roofline)
 
     suites = [
         ("fig2a", recognition_latency.run),
@@ -24,6 +24,7 @@ def main() -> None:
         ("cooperative_hit_rate", cooperative_hit_rate.run),
         ("cooperative_batched", cooperative_hit_rate.run_batched),
         ("federated_hit_rate", federated_hit_rate.run_smoke),
+        ("frame_deadline", frame_deadline.run_smoke),
         ("block_reuse", block_reuse.run),
         ("roofline", roofline.run),
     ]

@@ -30,8 +30,8 @@ from repro.core.federation import (FederatedEdgeTier, FederationConfig,
 from repro.core.hash_cache import HashCache, content_hash
 from repro.core.network import NetworkModel
 from repro.core.policies import EvictionPolicy
-from repro.core.router import (LatencyBreakdown, PayloadSizes, TwoTierRouter,
-                               pad_rows, partition_by_hit)
+from repro.core.router import (DeadlineStats, LatencyBreakdown, PayloadSizes,
+                               TwoTierRouter, pad_rows, partition_by_hit)
 from repro.core.semantic_cache import SemanticCache
 
 
@@ -124,6 +124,7 @@ class CoICEngine:
                 lookup_impl=cfg.lookup_impl)
             self.state = self.cache.init()
         self.asset_cache = HashCache()
+        self.deadline = DeadlineStats()   # per-tier frame-budget accounting
         self._timings = {"descriptor_ms": [], "lookup_ms": [], "cloud_ms": []}
 
     # ------------------------------------------------------------------
@@ -137,12 +138,27 @@ class CoICEngine:
 
     # ------------------------------------------------------------------
     def process_batch(self, tokens: np.ndarray, node_id: int = 0,
-                      cluster_id: int = 0) -> List[RequestResult]:
+                      cluster_id: int = 0,
+                      deadline_ms=None) -> List[RequestResult]:
         """tokens: (B, S) int32 request batch arriving at edge ``node_id``
         of cluster ``cluster_id`` (ignored without a cluster/federation).
         Returns per-request results with CoIC and origin-baseline latency
-        breakdowns."""
+        breakdowns.
+
+        ``deadline_ms``: optional motion-to-photon budget — a scalar for
+        the whole batch or a (B,) array with ``None``/NaN marking bulk
+        rows.  Each result's CoIC breakdown is stamped with its budget and
+        the per-tier met/missed outcome accumulates in ``self.deadline``
+        (``stats()["deadline"]``)."""
         B = tokens.shape[0]
+        if deadline_ms is None:
+            deadlines = [None] * B
+        elif np.ndim(deadline_ms) == 0:           # scalar or 0-d array
+            d = float(deadline_ms)
+            deadlines = [None if np.isnan(d) else d] * B
+        else:
+            deadlines = [None if d is None or np.isnan(d) else float(d)
+                         for d in np.asarray(deadline_ms, object)]
         desc = self._descriptors(tokens)
         per_req_desc_ms = self._timings["descriptor_ms"][-1] / B
 
@@ -234,6 +250,8 @@ class CoICEngine:
                                                remote_net_ms=region_share_ms,
                                                batch=B)
                 src = "cloud"
+            lat.deadline_ms = deadlines[b]
+            self.deadline.observe(src, lat.total_ms, deadlines[b])
             origin = self.router.origin_latency(float(cloud_ms[b]) if not hit[b]
                                                 else self._mean_cloud_ms())
             results.append(RequestResult(payload=payloads[b], source=src,
@@ -271,6 +289,7 @@ class CoICEngine:
         else:
             s = self.cache.stats(self.state)
         s["asset_cache"] = self.asset_cache.stats()
+        s["deadline"] = self.deadline.as_dict()
         return s
 
 

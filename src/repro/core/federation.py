@@ -30,6 +30,24 @@ batched engine step's ladder was 2 device dispatches (fused local rung,
 fused peer rung); federation REPLACES the per-cluster pair with a
 federation-wide fused pair over all K x N shards and adds at most 2 more
 (digest probe + authoritative confirm) **regardless of K**.
+
+Probe injection contract (``GroupedProbes``): ``_fused_probes`` computes
+every cluster's rung-1/rung-2 results in those two federation-wide
+kernels and hands each ``CooperativeEdgeCluster.lookup_grouped`` its
+slice via ``probes=``.  The receiving cluster must (a) apply the probes
+against the pre-step state snapshot they were computed from — admissions
+triggered by an earlier group in the same step must not change what a
+later group is served — and (b) issue no probe dispatches of its own.
+Payload reads honour the same snapshot (``pre_states``), so a slot
+overwritten mid-step still serves the probed entry's value.
+
+Digest staleness semantics, stated once: digests may UNDER-report (an
+entry admitted since the last refresh is invisible until the next one —
+a recoverable miss) and may point at dead entries (evicted since the
+refresh — the authoritative confirm rejects them as ``digest_false_hit``
+and the request falls through to the cloud).  They never over-report:
+no request is ever served a payload that the confirm probe did not find
+live in the owning cluster at serve time.
 """
 from __future__ import annotations
 

@@ -17,7 +17,7 @@ Latency accounting mirrors the paper's flow:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -33,6 +33,12 @@ class LatencyBreakdown:
     broadcast across many requests, each request's breakdown carries its
     share of the dispatch and ``amortized_over`` records how many requests
     split it (1 == unbatched, the sequential path).
+
+    ``deadline_ms`` is the request's motion-to-photon budget relative to
+    submission (``None``: bulk traffic, no deadline).  ``deadline_miss``
+    compares the modeled total against it; callers that also pay queueing
+    delay (the serving engine) evaluate the miss against their completion
+    time instead and record it through ``DeadlineStats``.
     """
 
     descriptor_ms: float = 0.0
@@ -44,12 +50,60 @@ class LatencyBreakdown:
     cloud_compute_ms: float = 0.0
     downlink_ms: float = 0.0
     amortized_over: int = 1          # requests sharing the batched dispatch
+    deadline_ms: Optional[float] = None   # frame budget; None == bulk
 
     @property
     def total_ms(self) -> float:
         return (self.descriptor_ms + self.uplink_ms + self.lookup_ms
                 + self.peer_net_ms + self.remote_net_ms + self.cloud_net_ms
                 + self.cloud_compute_ms + self.downlink_ms)
+
+    @property
+    def deadline_miss(self) -> Optional[bool]:
+        """None for bulk requests; otherwise whether the modeled latency
+        alone blows the budget."""
+        if self.deadline_ms is None:
+            return None
+        return self.total_ms > self.deadline_ms
+
+
+@dataclasses.dataclass
+class DeadlineStats:
+    """Per-tier deadline bookkeeping for frame-paced (immersive) traffic.
+
+    ``observe`` is called once per completed deadline-bearing request with
+    the tier that served it (``edge``/``peer``/``remote``/``cloud``) and the
+    request's completion time — queueing delay included, which is what
+    distinguishes this from ``LatencyBreakdown.deadline_miss``.  Bulk
+    requests (``deadline_ms=None``) are ignored, so ``miss_rate`` is over
+    deadline-bearing traffic only.
+    """
+
+    met: Dict[str, int] = dataclasses.field(default_factory=dict)
+    missed: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def observe(self, tier: str, completion_ms: float,
+                deadline_ms: Optional[float]) -> bool:
+        """Record one completion; returns True iff the deadline was missed
+        (always False for bulk requests)."""
+        if deadline_ms is None:
+            return False
+        miss = completion_ms > deadline_ms
+        bucket = self.missed if miss else self.met
+        bucket[tier] = bucket.get(tier, 0) + 1
+        return miss
+
+    @property
+    def observed(self) -> int:
+        return sum(self.met.values()) + sum(self.missed.values())
+
+    def miss_rate(self) -> float:
+        n = self.observed
+        return (sum(self.missed.values()) / n) if n else 0.0
+
+    def as_dict(self) -> dict:
+        return {"met": dict(self.met), "missed": dict(self.missed),
+                "observed": self.observed, "miss_rate": self.miss_rate()}
 
 
 @dataclasses.dataclass(frozen=True)

@@ -13,9 +13,50 @@ where peer sharing converts compulsory misses into LAN hits.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List, Tuple
+from typing import Iterator, List, Optional, Tuple
 
 import numpy as np
+
+
+def _unit_scene_pool(rng: np.random.Generator, pool_size: int, dim: int,
+                     payload_dim: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Shared scene-pool construction: unit-norm scene descriptors plus a
+    deterministic ground-truth payload per scene (class-logits analogue).
+    All workloads draw from the SAME rng call sequence, so seeds stay
+    comparable across workload classes."""
+    scenes = rng.standard_normal((pool_size, dim)).astype(np.float32)
+    scenes /= np.linalg.norm(scenes, axis=1, keepdims=True)
+    payloads = rng.standard_normal((pool_size, payload_dim)).astype(np.float32)
+    return scenes, payloads
+
+
+def _rotated_zipf(pool_size: int, zipf_s: float, groups: int,
+                  rotate: bool = True) -> np.ndarray:
+    """(groups, pool_size) Zipf(s) popularity rows, the ranking rotated per
+    group so every group has a different hot head but the heads overlap —
+    group A's tail is group B's head, the regime where sharing converts
+    compulsory misses into peer/remote hits."""
+    ranks = np.arange(1, pool_size + 1, dtype=np.float64)
+    base = ranks ** (-zipf_s)
+    probs = np.stack([
+        np.roll(base, (g * pool_size) // groups if rotate else 0)
+        for g in range(groups)])
+    return probs / probs.sum(axis=1, keepdims=True)
+
+
+def _migrate_users(current: np.ndarray, num_clusters: int, mobility: float,
+                   rng: np.random.Generator) -> int:
+    """One mobility tick shared by the roaming workloads: each user moves
+    to a uniformly-random OTHER cluster with probability ``mobility``
+    (``current`` is mutated in place).  Returns the number of movers."""
+    if num_clusters < 2 or mobility <= 0.0:
+        return 0
+    movers = rng.random(len(current)) < mobility
+    if not movers.any():
+        return 0
+    hops = rng.integers(1, num_clusters, size=int(movers.sum()))
+    current[movers] = (current[movers] + hops) % num_clusters
+    return int(movers.sum())
 
 
 @dataclasses.dataclass
@@ -33,18 +74,10 @@ class ZipfWorkload:
 
     def __post_init__(self):
         rng = np.random.default_rng(self.seed)
-        scenes = rng.standard_normal((self.pool_size, self.dim)).astype(np.float32)
-        self.scenes = scenes / np.linalg.norm(scenes, axis=1, keepdims=True)
-        # deterministic ground-truth result per scene (class logits analogue)
-        self.payloads = rng.standard_normal(
-            (self.pool_size, self.payload_dim)).astype(np.float32)
-        ranks = np.arange(1, self.pool_size + 1, dtype=np.float64)
-        base = ranks ** (-self.zipf_s)
-        self._probs = np.stack([
-            np.roll(base, (n * self.pool_size) // self.num_nodes
-                    if self.rotate_popularity else 0)
-            for n in range(self.num_nodes)])
-        self._probs /= self._probs.sum(axis=1, keepdims=True)
+        self.scenes, self.payloads = _unit_scene_pool(
+            rng, self.pool_size, self.dim, self.payload_dim)
+        self._probs = _rotated_zipf(self.pool_size, self.zipf_s,
+                                    self.num_nodes, self.rotate_popularity)
 
     # ------------------------------------------------------------------
     def sample(self, rng: np.random.Generator, node: int, batch: int
@@ -121,19 +154,12 @@ class RoamingWorkload:
     def __post_init__(self):
         assert 0.0 <= self.mobility <= 1.0, self.mobility
         rng = np.random.default_rng(self.seed)
-        scenes = rng.standard_normal(
-            (self.pool_size, self.dim)).astype(np.float32)
-        self.scenes = scenes / np.linalg.norm(scenes, axis=1, keepdims=True)
-        self.payloads = rng.standard_normal(
-            (self.pool_size, self.payload_dim)).astype(np.float32)
-        ranks = np.arange(1, self.pool_size + 1, dtype=np.float64)
-        base = ranks ** (-self.zipf_s)
+        self.scenes, self.payloads = _unit_scene_pool(
+            rng, self.pool_size, self.dim, self.payload_dim)
         # per-HOME-cluster rotated heads: cluster A's tail is cluster B's
         # head, so roamers carry demand for remotely-cached scenes
-        self._probs = np.stack([
-            np.roll(base, (k * self.pool_size) // self.num_clusters)
-            for k in range(self.num_clusters)])
-        self._probs /= self._probs.sum(axis=1, keepdims=True)
+        self._probs = _rotated_zipf(self.pool_size, self.zipf_s,
+                                    self.num_clusters)
         n_users = (self.num_clusters * self.nodes_per_cluster
                    * self.users_per_node)
         self.home = np.repeat(np.arange(self.num_clusters),
@@ -145,14 +171,8 @@ class RoamingWorkload:
     def migrate(self, rng: np.random.Generator) -> int:
         """One mobility tick: each user moves to a random other cluster
         with probability ``mobility``.  Returns the number of movers."""
-        if self.num_clusters < 2 or self.mobility <= 0.0:
-            return 0
-        movers = rng.random(self._n_users) < self.mobility
-        if not movers.any():
-            return 0
-        hops = rng.integers(1, self.num_clusters, size=int(movers.sum()))
-        self.current[movers] = (self.current[movers] + hops) % self.num_clusters
-        return int(movers.sum())
+        return _migrate_users(self.current, self.num_clusters, self.mobility,
+                              rng)
 
     # ------------------------------------------------------------------
     def step_requests(self, rng: np.random.Generator
@@ -188,3 +208,160 @@ class RoamingWorkload:
         for _ in range(steps):
             self.migrate(rng)
             yield self.step_requests(rng)
+
+
+@dataclasses.dataclass(frozen=True)
+class FrameRequest:
+    """One request of a frame-paced stream round.
+
+    ``deadline_ms`` is the motion-to-photon budget relative to emission
+    (``None`` for background bulk traffic); ``bulk`` requests carry long
+    prompts in engine-level benchmarks (the chunked-prefill stressor)."""
+
+    cluster: int
+    node: int
+    user: int
+    scene: int
+    deadline_ms: Optional[float]
+    priority: int
+    bulk: bool
+
+
+@dataclasses.dataclass
+class FramePacedWorkload:
+    """Frame-paced immersive streams mixed with background bulk traffic —
+    the traffic shape deadline-aware scheduling is built for.
+
+    Each *frame user* renders at a fixed FPS (drawn round-robin from
+    ``fps_choices``): every ``1000/fps`` ms of simulated time (advanced
+    ``step_ms`` per engine step, with per-user phase offsets so frames
+    don't all land on the same step) they emit one recognition request
+    whose deadline is ``deadline_frames`` frame intervals — the
+    motion-to-photon budget of an AR/VR overlay.  Each *bulk user* emits a
+    request with probability ``bulk_rate`` per step, with no deadline —
+    the batch-analytics traffic that causes head-of-line blocking under
+    FIFO admission.
+
+    Scenes are Zipf-popular from one pool with per-home-cluster rotated
+    heads (the ``RoamingWorkload`` regime); users optionally roam between
+    clusters at ``mobility`` per step, so the stream exercises the full
+    local -> peer -> remote-cluster -> cloud ladder.  Bulk users draw from
+    the same pool but a flattened (less cacheable) distribution.
+    """
+
+    num_clusters: int = 1
+    nodes_per_cluster: int = 2
+    frame_users_per_node: int = 4
+    fps_choices: Tuple[int, ...] = (30, 60)
+    deadline_frames: float = 1.0     # budget = deadline_frames / fps
+    bulk_users_per_node: int = 2
+    bulk_rate: float = 0.5           # per-step per-bulk-user emission prob
+    step_ms: float = 2.0             # simulated wall time of one engine step
+    pool_size: int = 96
+    dim: int = 128
+    payload_dim: int = 8
+    zipf_s: float = 1.1
+    bulk_zipf_s: float = 0.4         # flatter: bulk traffic caches poorly
+    noise: float = 0.02
+    mobility: float = 0.0            # per-step cluster-migration probability
+    seed: int = 0
+
+    def __post_init__(self):
+        assert 0.0 <= self.mobility <= 1.0, self.mobility
+        assert self.step_ms > 0, self.step_ms
+        rng = np.random.default_rng(self.seed)
+        self.scenes, self.payloads = _unit_scene_pool(
+            rng, self.pool_size, self.dim, self.payload_dim)
+        self._probs = _rotated_zipf(self.pool_size, self.zipf_s,
+                                    self.num_clusters)
+        self._bulk_probs = _rotated_zipf(self.pool_size, self.bulk_zipf_s,
+                                         1)[0]
+
+        per_node = self.frame_users_per_node + self.bulk_users_per_node
+        n_users = self.num_clusters * self.nodes_per_cluster * per_node
+        self._n_users = n_users
+        self.home = np.repeat(np.arange(self.num_clusters),
+                              self.nodes_per_cluster * per_node)
+        self.current = self.home.copy()
+        self.node_of = np.tile(np.repeat(np.arange(self.nodes_per_cluster),
+                                         per_node), self.num_clusters)
+        # within each node: first frame_users_per_node are frame-paced
+        within = np.tile(np.arange(per_node),
+                         self.num_clusters * self.nodes_per_cluster)
+        self.is_frame = within < self.frame_users_per_node
+        fps = np.zeros((n_users,), np.float64)
+        fps[self.is_frame] = [
+            self.fps_choices[i % len(self.fps_choices)]
+            for i in range(int(self.is_frame.sum()))]
+        self.fps = fps
+        # phase-offset accumulators: user u's next frame is due when
+        # _acc[u] >= 1000/fps[u]; staggered starts avoid lockstep emission
+        self._acc = np.zeros((n_users,), np.float64)
+        with np.errstate(divide="ignore"):
+            interval = np.where(self.is_frame, 1000.0 / np.maximum(fps, 1e-9),
+                                np.inf)
+        self._interval = interval
+        self._acc[self.is_frame] = (
+            rng.random(int(self.is_frame.sum())) * interval[self.is_frame])
+
+    # ------------------------------------------------------------------
+    def migrate(self, rng: np.random.Generator) -> int:
+        """One mobility tick (see ``RoamingWorkload.migrate``)."""
+        return _migrate_users(self.current, self.num_clusters, self.mobility,
+                              rng)
+
+    # ------------------------------------------------------------------
+    def step_requests(self, rng: np.random.Generator) -> List[FrameRequest]:
+        """Advance simulated time by ``step_ms`` and emit this step's
+        requests, frame streams first within a (cluster, node) — FIFO
+        admission therefore sees bulk arrivals from PREVIOUS steps ahead
+        of this step's frames, which is exactly the head-of-line blocking
+        EDF removes."""
+        out: List[FrameRequest] = []
+        self._acc[self.is_frame] += self.step_ms
+        for u in range(self._n_users):
+            k = int(self.current[u])
+            node = int(self.node_of[u])
+            if self.is_frame[u]:
+                while self._acc[u] >= self._interval[u]:
+                    self._acc[u] -= self._interval[u]
+                    scene = int(rng.choice(self.pool_size,
+                                           p=self._probs[self.home[u]]))
+                    out.append(FrameRequest(
+                        cluster=k, node=node, user=u, scene=scene,
+                        deadline_ms=self.deadline_frames * self._interval[u],
+                        priority=1, bulk=False))
+            elif rng.random() < self.bulk_rate:
+                scene = int(rng.choice(self.pool_size, p=self._bulk_probs))
+                out.append(FrameRequest(
+                    cluster=k, node=node, user=u, scene=scene,
+                    deadline_ms=None, priority=0, bulk=True))
+        return out
+
+    def stream(self, steps: int, seed: int = 1
+               ) -> Iterator[List[FrameRequest]]:
+        """Yields ``steps`` rounds of requests, one migration tick before
+        each round."""
+        rng = np.random.default_rng(seed)
+        for _ in range(steps):
+            self.migrate(rng)
+            yield self.step_requests(rng)
+
+    # ------------------------------------------------------------------
+    def descriptor(self, rng: np.random.Generator, scene: int) -> np.ndarray:
+        """One noisy unit-norm view descriptor of ``scene`` (tier-level
+        driving; engine-level benchmarks derive their own from prompts)."""
+        d = (self.scenes[scene]
+             + self.noise * rng.standard_normal(self.dim).astype(np.float32))
+        return (d / np.linalg.norm(d)).astype(np.float32)
+
+    def token_prompts(self, vocab_size: int, frame_len: int, bulk_len: int
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """Deterministic token prompts per scene for engine-level driving:
+        (frame (pool, frame_len), bulk (pool, bulk_len)) int32.  Bulk
+        prompts are long — the chunked-prefill stressor."""
+        rng = np.random.default_rng(self.seed + 0x9E3779B9)
+        frame = rng.integers(0, vocab_size,
+                             size=(self.pool_size, frame_len))
+        bulk = rng.integers(0, vocab_size, size=(self.pool_size, bulk_len))
+        return frame.astype(np.int32), bulk.astype(np.int32)

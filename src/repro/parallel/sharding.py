@@ -17,6 +17,36 @@ Rule sets:
   shards kv_heads over model when divisible, else ``cache_seq`` over model —
   the seq-sharded layout is exactly flash-decode: GSPMD partitions the
   softmax reductions over the cache axis.
+
+Cache-probe collectives
+-----------------------
+
+This module also owns the device-side probes of the cooperative cache
+ladder — each one is designed to be a SINGLE dispatch however wide the
+tier gets, which is what keeps the engine's per-step ladder bound constant:
+
+* ``cluster_topk_lookup`` / ``grouped_cluster_topk_lookup`` — the peer
+  rung: (all nodes' queries) x (all shards) in one ``similarity_topk``
+  kernel call over the pooled shard stack.  The results feed
+  ``core/cluster.py::GroupedProbes``, the *injection contract* that lets
+  an outer tier (the federation) compute every cluster's rung-1/rung-2
+  probes in two federation-wide kernels and hand each cluster its slice:
+  a cluster given ``probes=`` must apply them against the same pre-step
+  state snapshot the probes were computed from, and must not issue its
+  own probe dispatches.
+* ``federated_digest_lookup`` — the remote rung's digest probe: every
+  home cluster's miss batch against every OTHER cluster's top-M digest in
+  one kernel call.  Digests are deliberately stale (refreshed every
+  ``digest_interval`` steps), and staleness only ever *under-reports*:
+  a returned candidate is a hint that the caller MUST confirm against the
+  candidate cluster's authoritative shards — a failed confirm is counted
+  ``digest_false_hit`` and falls through to the cloud, so a stale digest
+  can cost a wasted probe but never fabricate a hit, and an entry
+  admitted since the last refresh is merely invisible until the next one.
+* ``sharded_topk_lookup`` — the same peer-rung collective as a
+  ``shard_map`` over a real ``cache`` mesh axis: each device computes its
+  local top-k and one all-gather of (k idx, k score) per shard replaces
+  shipping whole shards around.
 """
 from __future__ import annotations
 

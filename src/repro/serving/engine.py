@@ -3,35 +3,65 @@ in front of the model — the deployment shape of the paper's Figure 1.
 
 Request lifecycle (one lookup ladder per engine STEP, not per request):
 
-  submit  -> enqueue only (no device work)
+  submit  -> enqueue only (no device work); carries an optional per-request
+             ``priority`` and frame ``deadline_ms`` (motion-to-photon budget
+             relative to submission)
   step:
     schedule — drain pending requests into ONE jitted descriptor extraction
                over length-bucketed prompt pads and ONE grouped cluster
                lookup spanning requests from all nodes
                (hit -> result immediately, charged the modeled network +
                 probe latency; miss -> admission queue)
-    admit    — bucketed batched prefill: all queued requests with free slots
-               prefill in ONE dispatch per step, padded to (pow2 batch,
-               pow2 length) buckets so admission compiles once per bucket
-               instead of once per prompt length
+    admit    — the admission queue is ordered earliest-deadline-first
+               (``queue_policy="edf"``: deadline-bearing requests jump bulk
+               requests, higher priority jumps within a class, ties broken
+               FIFO; ``"fifo"`` is the head-of-line-blocking baseline),
+               then drained by bucketed batched prefill: all queued
+               requests with free slots prefill in ONE dispatch per step,
+               padded to (pow2 batch, pow2 length) buckets so admission
+               compiles once per bucket instead of once per prompt length.
+               Prompts longer than ``prefill_chunk`` take the CHUNKED
+               admission path instead: they reserve a slot and trickle
+               ``prefill_chunk`` tokens per step through
+               ``model.prefill_chunk``, so one huge prompt never inflates
+               the shared prefill bucket or stalls the admissions behind it
+               (bit-identical prefill state to the one-shot path — the
+               test_layer_reuse equivalence, now at engine scope)
     decode   — one decode_step over the whole active batch
     retire   — EOS or max_new_tokens -> result + batched CoIC insert
                (descriptors are cached from schedule time: zero extra
                extraction dispatches)
+
+Deadline accounting: a request's completion time is its queueing delay in
+engine steps (``step_ms`` models the wall duration of one step in a paced
+simulation; 0 falls back to measured wall time) plus the modeled hit
+latency (cache hits) or the modeled network terms around the engine's own
+compute (cloud path).  Misses against ``deadline_ms`` are counted per
+serving tier in ``self.deadline`` (``core/router.py::DeadlineStats``) and
+stamped on each ``ServedResult``.  An already-expired deadline is still
+served — and counted as a miss — never dropped.
 
 ``scheduling="sequential"`` drains ONE request per step through the same
 bucketed machinery — the per-request-ladder baseline the batched mode is
 measured against (benchmarks/cooperative_hit_rate.py --batched).
 
 All device work has static shapes (B slots, max_len cache, pow2 buckets);
-scheduling is host-side, as in vLLM-class systems.
+scheduling is host-side, as in vLLM-class systems.  The per-step ladder
+bound survives both scheduling policies and chunked prefill: at most one
+descriptor dispatch + one grouped lookup per step — the federation tier
+fuses all clusters' rungs via the ``GroupedProbes`` injection contract
+(see ``core/federation.py``), so its internal ladder stays <= 4
+dispatches regardless of cluster count, and stale digests only ever
+under-report (a confirmed miss falls to this engine's own prefill/decode
+path, never a phantom cache payload).  ``max_step_ladder`` tracks the
+observed per-step maximum.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +74,8 @@ from repro.core.descriptor import NgramSketchDescriptor, PrefixDescriptor
 from repro.core.federation import (FederatedEdgeTier, FederationConfig,
                                    TIER_REMOTE as FED_REMOTE)
 from repro.core.network import NetworkModel
-from repro.core.router import LatencyBreakdown, PayloadSizes, TwoTierRouter
+from repro.core.router import (DeadlineStats, LatencyBreakdown, PayloadSizes,
+                               TwoTierRouter)
 from repro.core.semantic_cache import SemanticCache
 from repro.serving.kv_cache import batch_cache_scatter, init_batch_cache
 
@@ -61,9 +92,26 @@ class ServingConfig:
     coic: Optional[CoICConfig] = None
     scheduling: str = "batched"      # batched | sequential (one req/step)
     min_bucket: int = 8              # smallest length/width pad bucket
+    # admission ordering: "edf" (earliest-deadline-first; deadline-bearing
+    # requests jump bulk, priority breaks class ties, FIFO breaks the rest —
+    # degenerates to FIFO when no request carries a deadline) or "fifo"
+    # (submission order, the head-of-line-blocking baseline)
+    queue_policy: str = "edf"
+    # chunked-prefill admission: prompts longer than this many tokens
+    # reserve a slot and prefill ``prefill_chunk`` tokens per step through
+    # model.prefill_chunk instead of joining the shared bucketed prefill
+    # (0 disables; auto-disabled for SWA/recurrent caches, which need the
+    # exact-length one-shot path)
+    prefill_chunk: int = 0
+    # modeled wall-clock duration of one engine step, for deadline
+    # accounting in paced simulations (frame workloads); 0 uses measured
+    # wall time for the cloud path and modeled-latency-only for hits
+    step_ms: float = 0.0
 
     def __post_init__(self):
         assert self.scheduling in ("batched", "sequential"), self.scheduling
+        assert self.queue_policy in ("edf", "fifo"), self.queue_policy
+        assert self.prefill_chunk >= 0, self.prefill_chunk
 
 
 @dataclasses.dataclass
@@ -75,6 +123,18 @@ class _Active:
 
 
 @dataclasses.dataclass
+class _Chunking:
+    """A long prompt mid chunked prefill: owns a reserved slot and a B=1
+    prefill cache that is scattered into the batch cache once the last
+    chunk lands."""
+    req_id: int
+    slot: int
+    prompt: np.ndarray
+    cache: dict
+    filled: int = 0                  # prompt tokens consumed so far
+
+
+@dataclasses.dataclass
 class ServedResult:
     req_id: int
     tokens: np.ndarray
@@ -82,6 +142,12 @@ class ServedResult:
     latency_s: float                 # hits: modeled; cloud: submit->retire
     decode_steps: int
     breakdown: Optional[LatencyBreakdown] = None   # modeled terms (hits)
+    priority: int = 0
+    deadline_ms: Optional[float] = None   # budget relative to submission
+    completion_ms: float = 0.0       # queueing delay + modeled/measured ms
+    deadline_miss: bool = False      # completion_ms > deadline_ms (if set)
+    submit_step: int = 0             # engine step count at submit()
+    finish_step: int = 0             # engine step count at completion
 
 
 class ServingEngine:
@@ -93,16 +159,30 @@ class ServingEngine:
         self.pending: deque = deque()    # (rid, prompt, node) — pre-lookup
         self.queue: deque = deque()      # (rid, prompt) — lookup missed
         self.active: Dict[int, _Active] = {}
+        self.chunking: Dict[int, _Chunking] = {}      # mid chunked prefill
         self.free_slots = list(range(cfg.max_batch))
         self.results: List[ServedResult] = []
         self._req_counter = 0
         self._prompts: Dict[int, np.ndarray] = {}
         self._desc_of: Dict[int, np.ndarray] = {}     # schedule-time reuse
         self._t_submit: Dict[int, float] = {}
+        # deadline bookkeeping (EDF scheduling + per-tier miss accounting)
+        self._priority: Dict[int, int] = {}
+        self._n_priority = 0             # in-flight nonzero-priority count
+        self._deadline: Dict[int, Optional[float]] = {}   # relative budget
+        self._abs_deadline: Dict[int, float] = {}     # EDF sort key (paced)
+        self._submit_step: Dict[int, int] = {}
+        self.step_count = 0
+        self.deadline = DeadlineStats()
         # device dispatches by kind — the batching win is visible here:
         # one descriptor + one lookup per step regardless of batch size
+        # (prefill_chunk: per-chunk trickle dispatches of long prompts)
         self.dispatches = {"descriptor": 0, "lookup": 0, "prefill": 0,
-                           "decode": 0}
+                           "prefill_chunk": 0, "decode": 0}
+        # per-step ladder bound: descriptor + lookup dispatches this step
+        # (must stay <= 2 under any queue policy / chunking combination)
+        self.last_step_ladder = 0
+        self.max_step_ladder = 0
 
         B = cfg.max_batch
         self.cache = init_batch_cache(model, B, cfg.max_len)
@@ -122,6 +202,15 @@ class ServingEngine:
         self._prefill = jax.jit(
             lambda p, t, ln: model.prefill(p, t, max_len=cfg.max_len,
                                            lengths=ln))
+        # chunked prefill needs linear caches: SWA rings rotate by padded
+        # length and recurrent conv/state prefill absorbs pads, so those
+        # models keep the exact one-shot path (prefill_chunk is ignored)
+        self._can_chunk = (cfg.prefill_chunk > 0
+                           and hasattr(model, "prefill_chunk")
+                           and not self._exact_prefill)
+        if self._can_chunk:
+            self._chunk_fn = jax.jit(model.prefill_chunk,
+                                     donate_argnums=(2,))
 
         # CoIC front (single semantic cache, a cooperative cluster when
         # coic.num_nodes > 1, or a cross-cluster federation when
@@ -175,18 +264,96 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, node_id: int = 0,
-               cluster_id: int = 0) -> int:
+               cluster_id: int = 0, priority: int = 0,
+               deadline_ms: Optional[float] = None) -> int:
         """prompt: (S,) int32 arriving at edge ``node_id`` of cluster
         ``cluster_id`` (ignored without a cluster/federation).  Enqueue-only:
         the lookup ladder runs at the next ``step()`` for the whole pending
         batch at once.  Returns request id (result arrives via ``step()``
-        -> self.results)."""
+        -> self.results).
+
+        ``deadline_ms``: motion-to-photon budget relative to now (frame
+        traffic); ``None`` marks bulk traffic.  Under
+        ``queue_policy="edf"`` deadline-bearing requests are admitted
+        earliest-deadline-first ahead of all bulk requests; ``priority``
+        breaks ties within a class (higher first), submission order breaks
+        the rest.  An expired deadline is still served (and counted as a
+        miss), never dropped."""
         rid = self._req_counter
         self._req_counter += 1
         self._t_submit[rid] = time.perf_counter()
+        self._priority[rid] = priority
+        if priority:
+            self._n_priority += 1
+        self._deadline[rid] = deadline_ms
+        self._submit_step[rid] = self.step_count
+        if deadline_ms is not None:
+            # absolute deadline on the paced clock (step_ms=0 collapses to
+            # the relative budget, which still orders same-step arrivals)
+            self._abs_deadline[rid] = (self.step_count * self.cfg.step_ms
+                                       + deadline_ms)
         self.pending.append((rid, np.asarray(prompt, np.int32), node_id,
                              cluster_id))
         return rid
+
+    # ------------------------------------------------------------------
+    def _queue_key(self, entry):
+        """Admission order: EDF over absolute deadlines (bulk == +inf), then
+        priority (higher first), then FIFO (rid is submission order)."""
+        rid = entry[0]
+        if self.cfg.queue_policy == "fifo":
+            return (rid,)
+        dl = self._abs_deadline.get(rid, np.inf)
+        return (dl, -self._priority.get(rid, 0), rid)
+
+    def _order_queue(self) -> None:
+        # pure-bulk fast path: with no deadline and no nonzero priority in
+        # flight every EDF key is (inf, 0, rid) — already FIFO, skip the
+        # per-step O(Q log Q) sort a deep backlog would otherwise pay
+        if (self.cfg.queue_policy == "fifo" or len(self.queue) < 2
+                or (not self._abs_deadline and not self._n_priority)):
+            return
+        self.queue = deque(sorted(self.queue, key=self._queue_key))
+
+    # ------------------------------------------------------------------
+    def _complete(self, rid: int, source: str, modeled_ms: float,
+                  wall_s: float) -> Tuple[float, bool]:
+        """Completion accounting for ``rid`` served by ``source``: queueing
+        delay (paced steps when ``step_ms`` > 0, else measured wall time)
+        plus the modeled per-tier terms; records the per-tier deadline
+        outcome.  Returns (completion_ms, deadline_miss)."""
+        if self.cfg.step_ms > 0:
+            waited = self.step_count - self._submit_step.get(rid,
+                                                             self.step_count)
+            completion_ms = waited * self.cfg.step_ms + modeled_ms
+        elif modeled_ms > 0:
+            completion_ms = modeled_ms
+        else:
+            completion_ms = wall_s * 1e3
+        miss = self.deadline.observe(source, completion_ms,
+                                     self._deadline.get(rid))
+        return completion_ms, miss
+
+    def _finalize(self, rid: int, *, tokens: np.ndarray, source: str,
+                  latency_s: float, decode_steps: int,
+                  breakdown: Optional[LatencyBreakdown] = None,
+                  modeled_ms: float = 0.0, wall_s: float = 0.0) -> None:
+        """Shared completion bookkeeping for the hit path and ``_retire``:
+        deadline outcome, priority-counter release, and the
+        ``ServedResult`` record."""
+        completion_ms, missed = self._complete(rid, source, modeled_ms,
+                                               wall_s)
+        prio = self._priority.pop(rid, 0)
+        if prio:
+            self._n_priority -= 1
+        self.results.append(ServedResult(
+            req_id=rid, tokens=tokens, source=source, latency_s=latency_s,
+            decode_steps=decode_steps, breakdown=breakdown, priority=prio,
+            deadline_ms=self._deadline.pop(rid, None),
+            completion_ms=completion_ms, deadline_miss=missed,
+            submit_step=self._submit_step.pop(rid, self.step_count),
+            finish_step=self.step_count))
+        self._abs_deadline.pop(rid, None)
 
     # ------------------------------------------------------------------
     def _pad_prompts(self, prompts: List[np.ndarray], fill: int,
@@ -342,10 +509,18 @@ class ServingEngine:
                                                   batch=n)
                     src = "edge"
                 self._t_submit.pop(rid, None)
-                self.results.append(ServedResult(
-                    req_id=rid, tokens=toks, source=src,
-                    latency_s=lat.total_ms / 1e3, decode_steps=0,
-                    breakdown=lat))
+                lat.deadline_ms = self._deadline.get(rid)
+                modeled_ms = lat.total_ms
+                if self.cfg.step_ms > 0:
+                    # paced simulation: device compute rides the step
+                    # clock; keep only the modeled network terms — the
+                    # measured desc/lookup wall time includes first-call
+                    # jit compiles, which are not motion-to-photon signal
+                    modeled_ms -= lat.descriptor_ms + lat.lookup_ms
+                self._finalize(rid, tokens=toks, source=src,
+                               latency_s=lat.total_ms / 1e3, decode_steps=0,
+                               breakdown=lat, modeled_ms=modeled_ms,
+                               wall_s=lat.total_ms / 1e3)
             else:
                 self._req_node[rid] = node
                 self._req_cluster[rid] = clu
@@ -354,9 +529,30 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def _admit(self) -> None:
-        """Bucketed batched prefill: admit every queued request that has a
-        free slot in ONE prefill dispatch (sequential mode: one per step)."""
+        """Deadline-ordered admission: the queue is sorted by the EDF key
+        (FIFO under ``queue_policy="fifo"`` or when nothing carries a
+        deadline), then drained front-to-back — long prompts peel off into
+        the chunked path (one reserved slot, one ``prefill_chunk``-token
+        dispatch per step), everything else joins ONE bucketed batched
+        prefill dispatch (sequential mode: one request per step)."""
+        self._advance_chunks()
+        self._order_queue()
+        # sequential mode is the per-request one-shot baseline: chunking
+        # stays out of it so batched-vs-sequential comparisons measure
+        # scheduling, not admission shape
+        chunking_on = self._can_chunk and self.cfg.scheduling != "sequential"
         while self.queue and self.free_slots:
+            if chunking_on and \
+                    len(self.queue[0][1]) > self.cfg.prefill_chunk:
+                rid, prompt = self.queue.popleft()
+                slot = self.free_slots.pop()
+                st = _Chunking(req_id=rid, slot=slot,
+                               prompt=prompt[:self.cfg.max_len],
+                               cache=init_batch_cache(self.model, 1,
+                                                      self.cfg.max_len))
+                self.chunking[rid] = st
+                self._advance_chunk(st)       # first chunk rides this step
+                continue
             m = min(len(self.queue), len(self.free_slots))
             if self.cfg.scheduling == "sequential":
                 m = 1
@@ -366,6 +562,15 @@ class ServingEngine:
                 L0 = len(self.queue[0][1])
                 run = 1
                 while run < m and len(self.queue[run][1]) == L0:
+                    run += 1
+                m = run
+            if chunking_on:
+                # the bucketed dispatch takes only the front run of short
+                # prompts: a long prompt mid-queue must not inflate the
+                # shared (pow2 B, pow2 S) pad bucket
+                run = 1
+                while run < m and \
+                        len(self.queue[run][1]) <= self.cfg.prefill_chunk:
                     run += 1
                 m = run
             taken = [self.queue.popleft() for _ in range(m)]
@@ -395,14 +600,55 @@ class ServingEngine:
                                             t_admit=now)
                 self._prompts[rid] = prompt
 
+    # ------------------------------------------------------------------
+    def _advance_chunks(self) -> None:
+        """One ``prefill_chunk``-token dispatch per in-flight long prompt
+        per step — the trickle that lets other admissions interleave."""
+        for st in list(self.chunking.values()):
+            self._advance_chunk(st)
+
+    def _advance_chunk(self, st: _Chunking) -> None:
+        """Feed the next chunk of ``st``'s prompt through
+        ``model.prefill_chunk``; on the last chunk, scatter the B=1 cache
+        into the reserved slot and activate the row (bit-identical state to
+        the one-shot prefill — the chunk path writes the same positions
+        with the same values, just across steps)."""
+        n = min(self.cfg.prefill_chunk, len(st.prompt) - st.filled)
+        chunk = np.asarray(st.prompt[st.filled:st.filled + n],
+                           np.int32)[None, :]
+        logits, st.cache, _ = self._chunk_fn(
+            self.params, jnp.asarray(chunk), st.cache,
+            jnp.asarray([st.filled], jnp.int32))
+        self.dispatches["prefill_chunk"] += 1
+        st.filled += n
+        if st.filled < len(st.prompt):
+            return
+        rid, slot = st.req_id, st.slot
+        del self.chunking[rid]
+        self.cache = batch_cache_scatter(
+            self.cache, st.cache, jnp.asarray([slot], jnp.int32))
+        nxt = int(jnp.argmax(logits[0]))
+        L = len(st.prompt)
+        self.lengths = self.lengths.at[slot].set(L)
+        self.tokens = self.tokens.at[slot].set(nxt)
+        self.row_active[slot] = True
+        self.active[slot] = _Active(req_id=rid, slot=slot, generated=[nxt],
+                                    t_admit=time.perf_counter())
+        self._prompts[rid] = st.prompt
+
     def _retire(self, slot: int) -> None:
         a = self.active.pop(slot)
         toks = np.asarray(a.generated[:self.cfg.max_new_tokens], np.int32)
         t_sub = self._t_submit.pop(a.req_id, a.t_admit)
-        self.results.append(ServedResult(
-            req_id=a.req_id, tokens=toks, source="cloud",
-            latency_s=time.perf_counter() - t_sub,
-            decode_steps=len(a.generated)))
+        wall_s = time.perf_counter() - t_sub
+        modeled_ms = 0.0
+        if self.cfg.step_ms > 0 and self.semantic is not None:
+            # paced simulation: the engine's own compute is counted in
+            # steps; add only the modeled network terms around it
+            modeled_ms = self.router.miss_latency(0.0, 0.0, 0.0).total_ms
+        self._finalize(a.req_id, tokens=toks, source="cloud",
+                       latency_s=wall_s, decode_steps=len(a.generated),
+                       modeled_ms=modeled_ms, wall_s=wall_s)
         self.row_active[slot] = False
         self.free_slots.append(slot)
         node = self._req_node.pop(a.req_id, 0)
@@ -428,8 +674,14 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def step(self) -> None:
         """One engine iteration: schedule (batched lookup ladder) + admit
-        (bucketed batched prefill) + one batched decode step."""
+        (EDF-ordered bucketed/chunked prefill) + one batched decode step."""
+        self.step_count += 1
+        ladder0 = self.dispatches["descriptor"] + self.dispatches["lookup"]
         self._schedule()
+        self.last_step_ladder = (self.dispatches["descriptor"]
+                                 + self.dispatches["lookup"] - ladder0)
+        self.max_step_ladder = max(self.max_step_ladder,
+                                   self.last_step_ladder)
         self._admit()
         if not self.active:
             return
@@ -449,7 +701,8 @@ class ServingEngine:
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[ServedResult]:
         steps = 0
-        while (self.pending or self.queue or self.active) and steps < max_steps:
+        while (self.pending or self.queue or self.chunking
+               or self.active) and steps < max_steps:
             self.step()
             steps += 1
         return self.results
@@ -463,6 +716,8 @@ class ServingEngine:
             "remote_hits": sum(r.source == "remote" for r in self.results),
             "cloud": sum(r.source == "cloud" for r in self.results),
             "dispatches": dict(self.dispatches),
+            "max_step_ladder": self.max_step_ladder,
+            "deadline": self.deadline.as_dict(),
         }
         if self.sem_fed is not None:
             out["semantic"] = self.sem_fed.stats()

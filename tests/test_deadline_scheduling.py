@@ -1,0 +1,287 @@
+"""Frame-deadline-aware scheduling: EDF/FIFO equivalence properties,
+expired-deadline handling, chunked-prefill bit-exactness, and the per-step
+ladder dispatch bound under chunking."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.coic import CoICConfig
+from repro.core.router import DeadlineStats, LatencyBreakdown
+from repro.data.workload import FramePacedWorkload
+from repro.serving.engine import ServingConfig, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def fp32_model():
+    # fp32: bf16 near-ties can flip argmax between bucketed batch widths
+    # (different reduction order), which is numerics, not scheduling
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = dataclasses.replace(get_config("coic-paper"), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(vocab, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, size=(L,)).astype(np.int32) for L in lens]
+
+
+def _serve(model, params, prompts, deadlines=None, priorities=None,
+           policy="edf", max_batch=2, max_new=4, chunk=0, step_ms=0.0,
+           coic=None):
+    eng = ServingEngine(model, params, ServingConfig(
+        max_batch=max_batch, max_len=96, max_new_tokens=max_new,
+        queue_policy=policy, prefill_chunk=chunk, step_ms=step_ms,
+        coic=coic))
+    for i, p in enumerate(prompts):
+        eng.submit(p,
+                   priority=(priorities[i] if priorities else 0),
+                   deadline_ms=(deadlines[i] if deadlines else None))
+    eng.run_until_drained()
+    return eng
+
+
+def _result_map(eng):
+    return {r.req_id: (r.source, tuple(int(t) for t in r.tokens),
+                       r.finish_step) for r in eng.results}
+
+
+# ---------------------------------------------------------------------------
+# EDF <-> FIFO equivalence properties
+# ---------------------------------------------------------------------------
+
+
+def test_edf_without_deadlines_equals_fifo(fp32_model):
+    """A batch with NO deadlines must drain in exactly FIFO order under
+    EDF — same sources, tokens, and per-request finish steps."""
+    cfg, model, params = fp32_model
+    prompts = _prompts(cfg.vocab_size, [16, 24, 12, 20, 16])
+    e_edf = _serve(model, params, prompts, policy="edf")
+    e_fifo = _serve(model, params, prompts, policy="fifo")
+    assert _result_map(e_edf) == _result_map(e_fifo)
+
+
+def test_edf_all_equal_deadlines_equals_fifo(fp32_model):
+    """ALL requests bearing the same deadline ties back to FIFO order
+    (ties broken by submission order)."""
+    cfg, model, params = fp32_model
+    prompts = _prompts(cfg.vocab_size, [16, 24, 12, 20])
+    dls = [500.0] * len(prompts)
+    e_edf = _serve(model, params, prompts, deadlines=dls, policy="edf")
+    e_fifo = _serve(model, params, prompts, deadlines=dls, policy="fifo")
+    assert _result_map(e_edf) == _result_map(e_fifo)
+
+
+def test_deadline_request_jumps_bulk_backlog(fp32_model):
+    """With one slot, a frame request submitted AFTER three bulk requests
+    is admitted first under EDF and last under FIFO."""
+    cfg, model, params = fp32_model
+    prompts = _prompts(cfg.vocab_size, [24, 24, 24, 12])
+    dls = [None, None, None, 40.0]
+    e_edf = _serve(model, params, prompts, deadlines=dls, policy="edf",
+                   max_batch=1, step_ms=2.0)
+    e_fifo = _serve(model, params, prompts, deadlines=dls, policy="fifo",
+                    max_batch=1, step_ms=2.0)
+    edf, fifo = _result_map(e_edf), _result_map(e_fifo)
+    # the frame (rid 3) finishes before every bulk request under EDF...
+    assert edf[3][2] < min(edf[r][2] for r in (0, 1, 2))
+    # ...and after every bulk request under FIFO
+    assert fifo[3][2] > max(fifo[r][2] for r in (0, 1, 2))
+    # scheduling must never change the tokens anyone decodes
+    for rid in edf:
+        assert edf[rid][1] == fifo[rid][1]
+
+
+def test_priority_breaks_ties_within_class(fp32_model):
+    """Equal deadlines: higher priority admits first; bulk (no deadline)
+    orders by priority too."""
+    cfg, model, params = fp32_model
+    prompts = _prompts(cfg.vocab_size, [16, 16, 16])
+    eng = _serve(model, params, prompts, deadlines=[100.0, 100.0, None],
+                 priorities=[0, 5, 0], policy="edf", max_batch=1)
+    res = _result_map(eng)
+    assert res[1][2] <= res[0][2] <= res[2][2]
+
+
+# ---------------------------------------------------------------------------
+# expired deadlines
+# ---------------------------------------------------------------------------
+
+
+def test_expired_deadline_still_served_and_counted(fp32_model):
+    """A request whose budget is already blown at submit time is served
+    (never dropped) and counted as a per-tier deadline miss."""
+    cfg, model, params = fp32_model
+    prompts = _prompts(cfg.vocab_size, [16])
+    eng = _serve(model, params, prompts, deadlines=[0.0], step_ms=2.0)
+    assert len(eng.results) == 1
+    r = eng.results[0]
+    assert r.deadline_miss and r.deadline_ms == 0.0
+    assert len(r.tokens) == 4                       # fully served
+    assert eng.deadline.missed == {"cloud": 1}
+    assert eng.deadline.miss_rate() == 1.0
+
+
+def test_deadline_stats_ignores_bulk():
+    st = DeadlineStats()
+    assert st.observe("edge", 1e9, None) is False
+    assert st.observed == 0
+    assert st.observe("edge", 5.0, 10.0) is False
+    assert st.observe("cloud", 20.0, 10.0) is True
+    assert st.met == {"edge": 1} and st.missed == {"cloud": 1}
+    assert st.miss_rate() == 0.5
+
+
+def test_coic_engine_deadline_accounting(tiny_model):
+    """CoICEngine.process_batch threads per-request budgets onto the CoIC
+    breakdowns and accumulates per-tier met/missed counts."""
+    from repro.core.coic import CoICEngine, recognition_cloud_fn
+
+    model, params = tiny_model
+    cloud = recognition_cloud_fn(model, params, num_classes=8)
+    eng = CoICEngine(model, params,
+                     CoICConfig(capacity=16, threshold=0.98, payload_dim=8,
+                                descriptor="sketch", descriptor_dim=64),
+                     cloud_fn=cloud)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, model.cfg.vocab_size, size=(2, 16)).astype(np.int32)
+    res = eng.process_batch(toks, deadline_ms=[1e9, None])
+    assert res[0].coic.deadline_ms == 1e9
+    assert res[0].coic.deadline_miss is False
+    assert res[1].coic.deadline_ms is None        # bulk: not observed
+    assert res[1].coic.deadline_miss is None
+    st = eng.stats()["deadline"]
+    assert st["observed"] == 1 and st["met"] == {"cloud": 1}
+    # a scalar budget applies to the whole batch; an impossible one misses
+    eng.process_batch(toks, deadline_ms=1e-6)
+    st = eng.stats()["deadline"]
+    assert sum(st["missed"].values()) == 2
+
+
+def test_latency_breakdown_deadline_miss():
+    lat = LatencyBreakdown(lookup_ms=5.0)
+    assert lat.deadline_miss is None                # bulk: no deadline
+    lat.deadline_ms = 10.0
+    assert lat.deadline_miss is False
+    lat.deadline_ms = 1.0
+    assert lat.deadline_miss is True
+
+
+# ---------------------------------------------------------------------------
+# chunked-prefill admission
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_prefill_bit_identical_tokens(fp32_model):
+    """A long prompt admitted chunk-by-chunk must decode exactly the
+    one-shot prefill's tokens (the test_layer_reuse equivalence at engine
+    scope), while short prompts interleave with the trickle."""
+    cfg, model, params = fp32_model
+    prompts = _prompts(cfg.vocab_size, [50, 12, 12, 12])
+    e_one = _serve(model, params, prompts, chunk=0, max_batch=2, max_new=6)
+    e_chk = _serve(model, params, prompts, chunk=8, max_batch=2, max_new=6)
+    one, chk = _result_map(e_one), _result_map(e_chk)
+    for rid in one:
+        assert one[rid][1] == chk[rid][1], rid
+    # the long prompt really took the chunk path: ceil(50/8) dispatches
+    # for it (plus 2 per 12-token prompt, 12 > 8)
+    assert e_chk.dispatches["prefill_chunk"] >= 7
+    assert e_one.dispatches["prefill_chunk"] == 0
+
+
+def test_chunked_long_prompt_does_not_stall_shorts(fp32_model):
+    """One huge prompt + three shorts, two slots: the shorts must all
+    retire before the chunked long prompt (it trickles while they run)."""
+    cfg, model, params = fp32_model
+    prompts = _prompts(cfg.vocab_size, [64, 8, 8, 8])
+    eng = _serve(model, params, prompts, chunk=8, max_batch=2, max_new=4)
+    res = _result_map(eng)
+    assert max(res[r][2] for r in (1, 2, 3)) < res[0][2]
+
+
+def test_ladder_bound_under_edf_and_chunking(fp32_model):
+    """Dispatch-counter acceptance: EDF + chunked prefill + a federated
+    CoIC front still run at most ONE descriptor + ONE grouped lookup per
+    engine step, and the federation's internal ladder stays <= 4."""
+    cfg, model, params = fp32_model
+    wl = FramePacedWorkload(num_clusters=2, nodes_per_cluster=2,
+                            frame_users_per_node=2, bulk_users_per_node=2,
+                            bulk_rate=0.7, pool_size=24, seed=3)
+    frame_p, bulk_p = wl.token_prompts(cfg.vocab_size, 12, 40)
+    eng = ServingEngine(model, params, ServingConfig(
+        max_batch=4, max_len=64, max_new_tokens=4, queue_policy="edf",
+        prefill_chunk=16, step_ms=wl.step_ms,
+        coic=CoICConfig(capacity=16, threshold=0.98, descriptor="sketch",
+                        descriptor_dim=64, num_nodes=2, num_clusters=2,
+                        digest_size=8, digest_interval=2)))
+    for round_ in wl.stream(10, seed=4):
+        for fr in round_:
+            eng.submit(bulk_p[fr.scene] if fr.bulk else frame_p[fr.scene],
+                       node_id=fr.node, cluster_id=fr.cluster,
+                       priority=fr.priority, deadline_ms=fr.deadline_ms)
+        eng.step()
+    eng.run_until_drained()
+    assert eng.max_step_ladder <= 2                  # 1 desc + 1 lookup
+    assert eng.sem_fed.stats()["max_ladder_dispatches"] <= 4
+    assert eng.dispatches["prefill_chunk"] > 0       # chunking exercised
+    assert eng.deadline.observed > 0                 # deadlines accounted
+
+
+# ---------------------------------------------------------------------------
+# frame-paced workload shape
+# ---------------------------------------------------------------------------
+
+
+def test_frame_paced_workload_rates_and_deadlines():
+    wl = FramePacedWorkload(num_clusters=2, nodes_per_cluster=2,
+                            frame_users_per_node=2, fps_choices=(50,),
+                            bulk_users_per_node=1, bulk_rate=1.0,
+                            step_ms=5.0, pool_size=16, seed=0)
+    rounds = list(wl.stream(100, seed=1))
+    frames = [r for rnd in rounds for r in rnd if not r.bulk]
+    bulk = [r for rnd in rounds for r in rnd if r.bulk]
+    # 8 frame users at 50 FPS over 100 x 5 ms = 0.5 s -> ~200 frames
+    assert 190 <= len(frames) <= 210, len(frames)
+    assert len(bulk) == 4 * 100                      # bulk_rate=1.0
+    assert all(r.deadline_ms == 20.0 for r in frames)   # 1 frame @ 50 FPS
+    assert all(r.deadline_ms is None and r.priority == 0 for r in bulk)
+    assert {r.cluster for r in frames} <= {0, 1}
+    assert {r.node for r in frames} <= {0, 1}
+
+
+def test_frame_paced_workload_mobility_moves_users():
+    wl = FramePacedWorkload(num_clusters=3, nodes_per_cluster=1,
+                            frame_users_per_node=4, bulk_users_per_node=0,
+                            mobility=1.0, seed=0)
+    rng = np.random.default_rng(0)
+    moved = wl.migrate(rng)
+    assert moved == wl._n_users
+    assert (wl.current != wl.home).all()
+    wl0 = FramePacedWorkload(num_clusters=3, nodes_per_cluster=1,
+                             frame_users_per_node=4, bulk_users_per_node=0,
+                             mobility=0.0, seed=0)
+    assert wl0.migrate(rng) == 0
+
+
+# ---------------------------------------------------------------------------
+# benchmark acceptance (slow tier)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_frame_deadline_benchmark_acceptance():
+    """EDF strictly beats FIFO on p99 motion-to-photon latency AND
+    deadline-miss rate at equal offered load, with the dispatch bound
+    held under chunked prefill."""
+    from benchmarks.frame_deadline import run_smoke
+
+    rows = {name: derived for name, _, derived in run_smoke()}
+    kv = dict(p.split("=", 1) for p in rows["frame_edf_vs_fifo"].split(";"))
+    assert kv["ok"] == "True", rows["frame_edf_vs_fifo"]
+    kv = dict(p.split("=", 1) for p in rows["frame_dispatch_bound"].split(";"))
+    assert kv["ok"] == "True", rows["frame_dispatch_bound"]
