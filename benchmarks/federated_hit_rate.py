@@ -14,10 +14,17 @@ over the same stream:
                and ONE authoritative confirm per step
 
 Reported per (scenario, mobility): global hit rate (any edge tier),
-per-tier counts (local/peer/remote/miss), ``digest_false_hit``, and mean
-end-to-end latency under the analytic network model (remote hits pay the
-metro<->region hops, amortized over the step's miss batch; misses
-additionally pay the fruitless digest-probe share before the WAN).
+per-tier counts (local/peer/remote/miss), ``digest_false_hit``,
+``digest_mode`` / ``digest_bytes_shipped`` (the metro -> region control
+plane priced by ``core/digest.py``), and mean end-to-end latency under the
+analytic network model (remote hits pay the metro<->region hops, amortized
+over the step's miss batch; misses additionally pay the fruitless
+digest-probe share before the WAN).
+
+``fed_digest_*`` rows sweep the digest wire format (full/delta refresh x
+fp32/int8 keys) on the same stream; the ``fed_digest_bytes`` row is the
+acceptance check the nightly smoke pins: delta+int8 refresh ships >= 4x
+fewer metro -> region bytes than full-fp32 at equal (±1%) hit rate.
 
 A final ``fed_ladder_dispatches`` row proves the dispatch bound: the
 federated step's ladder issues at most 4 device dispatches (2 for the
@@ -51,10 +58,12 @@ def _router(dim: int, payload_dim: int) -> TwoTierRouter:
 def _mk_tier(clusters: int, nodes: int, capacity: int, dim: int,
              payload_dim: int, threshold: float, digest_size: int,
              digest_interval: int, federate: bool,
-             admission: str = "always") -> FederatedEdgeTier:
+             admission: str = "always", digest_quant: str = "fp32",
+             digest_refresh: str = "full") -> FederatedEdgeTier:
     return FederatedEdgeTier(FederationConfig(
         num_clusters=clusters, digest_size=digest_size,
         digest_interval=digest_interval, share=federate,
+        digest_quant=digest_quant, digest_refresh=digest_refresh,
         cluster=ClusterConfig(
             num_nodes=nodes, node_capacity=capacity, key_dim=dim,
             payload_dim=payload_dim, threshold=threshold,
@@ -140,15 +149,56 @@ def run(seed: int = 0, clusters: int = 3, nodes: int = 2,
                             threshold, digest_size, digest_interval, federate)
             rate, tiers, false_hits, mean_lat, wall, n_req = _drive(
                 tier, wl, router, steps, seed + 1)
+            dig = tier.digest_stats()
             rows.append((
                 f"fed_{scenario}_m{mobility:g}", wall / n_req * 1e6,
                 f"hit_rate={rate:.3f};mean_latency_ms={mean_lat:.2f};"
                 + ";".join(f"{t}={tiers[t]}" for t in TIER_NAMES)
-                + f";digest_false_hit={false_hits}"))
+                + f";digest_false_hit={false_hits}"
+                + f";digest_mode={dig['mode']}"
+                + f";digest_bytes_shipped={dig['bytes_shipped']}"))
+
+    # digest wire-format sweep at the highest mobility (same stream): the
+    # int8 + push-on-delta control plane must match full-fp32's hit rate
+    # (quantization/delta only ever under-report) while shipping a
+    # fraction of the metro->region bytes — priced on the region link
+    mob = max(mobilities)
+    digest_runs = {}
+    for quant, refresh in (("fp32", "full"), ("int8", "full"),
+                           ("fp32", "delta"), ("int8", "delta")):
+        wl = RoamingWorkload(
+            num_clusters=clusters, nodes_per_cluster=nodes,
+            users_per_node=users_per_node, pool_size=pool, dim=dim,
+            payload_dim=payload_dim, mobility=mob, seed=seed)
+        tier = _mk_tier(clusters, nodes, node_capacity, dim, payload_dim,
+                        threshold, digest_size, digest_interval, True,
+                        digest_quant=quant, digest_refresh=refresh)
+        rate, _, false_hits, mean_lat, wall, n_req = _drive(
+            tier, wl, router, steps, seed + 1)
+        dig = tier.digest_stats()
+        ship_ms = router.digest_ship_ms(dig["bytes_shipped"])
+        digest_runs[dig["mode"]] = (rate, dig["bytes_shipped"])
+        rows.append((
+            f"fed_digest_{dig['mode']}", wall / n_req * 1e6,
+            f"hit_rate={rate:.3f};mean_latency_ms={mean_lat:.2f}"
+            f";digest_mode={dig['mode']}"
+            f";digest_bytes_shipped={dig['bytes_shipped']}"
+            f";digest_rows_shipped={dig['rows_shipped']}"
+            f";digest_ship_ms={ship_ms:.2f}"
+            f";digest_false_hit={false_hits}"))
+    base_rate, base_bytes = digest_runs["full_fp32"]
+    best_rate, best_bytes = digest_runs["delta_int8"]
+    ratio = base_bytes / max(1, best_bytes)
+    rows.append(("fed_digest_bytes", 0.0,
+                 f"full_fp32_bytes={base_bytes}"
+                 f";delta_int8_bytes={best_bytes}"
+                 f";bytes_ratio={ratio:.2f}"
+                 f";hit_rate_full_fp32={base_rate:.4f}"
+                 f";hit_rate_delta_int8={best_rate:.4f}"
+                 f";ok={ratio >= 4.0 and abs(best_rate - base_rate) <= 0.01}"))
 
     # admission-policy comparison at the highest mobility: always vs
     # second_hit vs freq_weighted (ROADMAP "frequency-weighted admission")
-    mob = max(mobilities)
     for admission in ("always", "second_hit", "freq_weighted"):
         wl = RoamingWorkload(
             num_clusters=clusters, nodes_per_cluster=nodes,

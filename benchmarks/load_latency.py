@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import os
 import tempfile
-import time
 
 import jax
 import numpy as np

@@ -19,7 +19,6 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-import numpy as np
 
 PEAK_FLOPS = 197e12         # bf16 / chip (TPU v5e)
 HBM_BW = 819e9              # bytes/s / chip

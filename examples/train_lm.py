@@ -7,7 +7,6 @@ Default is a CPU-friendly ~10M-param model for a few hundred steps; pass
     PYTHONPATH=src python examples/train_lm.py --steps 300
 """
 import argparse
-import sys
 import tempfile
 
 import jax

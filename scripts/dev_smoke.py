@@ -1,5 +1,4 @@
 """Dev loop: instantiate every reduced arch, run fwd/loss/prefill/decode."""
-import sys
 
 import jax
 import jax.numpy as jnp

@@ -2,6 +2,11 @@
 from repro.core.cluster import (ClusterConfig, ClusterLookupResult,
                                 CooperativeEdgeCluster)
 from repro.core.coic import CoICConfig, CoICEngine, RequestResult
+from repro.core.digest import (DigestConfig, DigestPublisher,
+                               RegionDigestBoard)
+from repro.core.tiers import (TIER_LOCAL, TIER_MISS, TIER_NAMES, TIER_PEER,
+                              TIER_REMOTE, CacheTier, LadderResult,
+                              TierLadder, TierProbeResult)
 from repro.core.descriptor import NgramSketchDescriptor, PrefixDescriptor, l2_normalize
 from repro.core.federation import (FederatedEdgeTier, FederatedLookupResult,
                                    FederationConfig)

@@ -3,15 +3,15 @@
 The paper argues for "caching and sharing computation-intensive IC results on
 the edge" *across* applications and users; a single isolated ``SemanticCache``
 per engine never shares anything.  ``CooperativeEdgeCluster`` runs N edge
-nodes, each owning one ``SemanticCache`` shard, with a three-rung lookup
-ladder per request batch:
+nodes, each owning one ``SemanticCache`` shard, behind the unified ladder
+protocol (``core/tiers.py``):
 
-  1. local  — the serving node's own shard (cheap, same box)
+  1. local  — the serving node's own shard (``LocalRung``, one batched
+              dispatch over every node's shard)
   2. peer   — on a local miss the descriptor is broadcast to the other
               shards over the edge<->edge link; the whole cluster probe is
-              ONE collective (``cluster_topk_lookup`` over the stacked
-              shards, or ``sharded_topk_lookup`` on a real ``cache``-axis
-              mesh) instead of N host round-trips
+              ONE pooled dispatch (``PeerRung``; ``sharded_topk_lookup`` on
+              a real ``cache``-axis mesh) instead of N host round-trips
   3. cloud  — the caller forwards the remaining misses and inserts results
               back into the serving node's shard
 
@@ -21,15 +21,20 @@ and are optionally re-admitted into the serving node's shard
 ``admission="second_hit"``), so hot items replicate toward their consumers —
 eCAR/CloudAR-style cooperative sharing.
 
-Two request paths:
+This class is the *storage + policy* owner (shards, admission bookkeeping,
+peer-serve mechanics); the rung walking itself is the shared
+``TierLadder``, which the cross-cluster federation reuses over K of these
+clusters with the same rung objects — no per-layer rung code, no probe
+injection.  ``CooperativeEdgeCluster`` is itself a ``CacheTier``: an
+engine can compose it directly with a cloud tier in one ladder.
 
-* ``lookup(node, queries)`` — one node's batch, the per-request ladder.
+Request paths (both through the same ladder):
+
+* ``lookup(node, queries)`` — one node's batch (pow2-padded, no retraces).
 * ``lookup_grouped(queries, mask)`` — requests from ALL nodes at once as a
-  ``(num_nodes, B, D)`` grouped-query batch.  Rung 1 is ONE
-  ``similarity_topk_batched`` dispatch (every node's local shard probed for
-  that node's rows); rung 2 is ONE ``grouped_cluster_topk_lookup`` dispatch
-  spanning every shard.  This is the batched engine step's amortized ladder:
-  two device dispatches per step regardless of node count or batch size.
+  ``(num_nodes, B, D)`` grouped-query batch: the batched engine step's
+  amortized ladder, two device dispatches per step regardless of node
+  count or batch size.
 """
 from __future__ import annotations
 
@@ -42,20 +47,17 @@ import numpy as np
 
 from repro.core.policies import EvictionPolicy
 from repro.core.semantic_cache import SemanticCache, SemanticCacheState
-from repro.kernels.similarity import similarity_topk_batched
-from repro.parallel.sharding import (cluster_topk_lookup,
-                                     grouped_cluster_topk_lookup,
-                                     sharded_topk_lookup)
+from repro.core.tiers import (TIER_LOCAL, TIER_MISS, TIER_NAMES, TIER_PEER,
+                              LocalRung, PeerRung, TierLadder,
+                              TierProbeResult, build_probe_context, pow2,
+                              route_flat)
 
-TIER_LOCAL, TIER_PEER, TIER_MISS = 0, 1, 2
-TIER_NAMES = ("local", "peer", "miss")
-
-
-def pow2(n: int, lo: int = 1) -> int:
-    """Next power of two >= max(n, lo) — the shared pad-bucket policy that
-    keeps jitted probe/prefill shapes from retracing per distinct count."""
-    n = max(n, lo)
-    return 1 << (n - 1).bit_length()
+# canonical codes/names re-exported from core/tiers.py: cluster results use
+# the same TIER_LOCAL=0 / TIER_PEER=1 / TIER_MISS=3 codes as every layer
+# (TIER_REMOTE=2 never appears in a standalone cluster's results)
+__all__ = ["TIER_LOCAL", "TIER_PEER", "TIER_MISS", "TIER_NAMES",
+           "ClusterConfig", "ClusterLookupResult", "CooperativeEdgeCluster",
+           "admission_filter", "pow2"]
 
 
 def admission_filter(kind: str, slots: np.ndarray, owner_state,
@@ -100,22 +102,6 @@ def admission_filter(kind: str, slots: np.ndarray, owner_state,
     return owner_freq > vfreq
 
 
-class GroupedProbes(NamedTuple):
-    """Externally-computed ladder probes for ``lookup_grouped``.
-
-    The federation tier fuses every cluster's rung-1/rung-2 dispatches into
-    two federation-wide batched kernels and injects each cluster's slice
-    here, so per-cluster application costs zero extra device dispatches.
-    ``alive`` holds the per-node TTL-expiry masks the probes ran against.
-    """
-
-    l_idx: np.ndarray        # (G, B) rung-1 best slot in each node's shard
-    l_score: np.ndarray      # (G, B)
-    g_idx: Optional[np.ndarray]   # (G, B) rung-2 best global idx in [0, N*C)
-    g_score: Optional[np.ndarray]
-    alive: List
-
-
 @dataclasses.dataclass(frozen=True)
 class ClusterConfig:
     num_nodes: int = 4
@@ -144,7 +130,8 @@ class ClusterConfig:
 
 class ClusterLookupResult(NamedTuple):
     hit: np.ndarray          # (...,) bool — local or peer
-    tier: np.ndarray         # (...,) int8 — TIER_LOCAL | TIER_PEER | TIER_MISS
+    tier: np.ndarray         # (...,) int8 — canonical TIER_LOCAL | TIER_PEER
+                             # | TIER_MISS codes (core/tiers.py)
     owner: np.ndarray        # (...,) int32 — serving node, -1 on miss
     score: np.ndarray        # (...,) f32 — best score at the serving tier
     value: np.ndarray        # (..., P) payload (zeros on miss)
@@ -154,10 +141,12 @@ class CooperativeEdgeCluster:
     """N cooperating edge nodes, one ``SemanticCache`` shard each.
 
     ``mesh`` (optional): a Mesh with a ``cache`` axis of size ``num_nodes``;
-    when given, the peer probe runs as a shard_map collective with one
+    when given, the peer rung runs as a shard_map collective with one
     all-gather of (idx, score) per shard.  Without it the probe is a single
-    vmapped device call over the stacked shards — same results, same math.
+    batched device call over the stacked shards — same results, same math.
     """
+
+    name, code = "edge", TIER_LOCAL      # CacheTier identity (org-level)
 
     def __init__(self, cfg: ClusterConfig, mesh=None, cache_axis: str = "cache"):
         self.cfg = cfg
@@ -180,7 +169,13 @@ class CooperativeEdgeCluster:
         # incarnation (owner, slot, inserted_at)
         self._peer_seen: List[Dict[Tuple[int, int, int], int]] = [
             {} for _ in range(cfg.num_nodes)]
-        self.probe_dispatches = 0    # similarity probes sent to the device
+        self.ladder = TierLadder([LocalRung(), PeerRung()])
+
+    # ------------------------------------------------------------------
+    @property
+    def probe_dispatches(self) -> int:
+        """Similarity probes sent to the device (ladder-counted)."""
+        return self.ladder.probe_dispatches
 
     # ------------------------------------------------------------------
     def _stacks(self):
@@ -192,29 +187,6 @@ class CooperativeEdgeCluster:
             self._keys_stack = jnp.stack([s.keys for s in self.states])
         alive = [self.cache.policy.expire(s, s.clock) for s in self.states]
         return self._keys_stack, jnp.stack(alive), alive
-
-    # ------------------------------------------------------------------
-    def _peer_probe(self, queries: jax.Array):
-        """One collective top-1 probe over all shards.  Returns (global_idx,
-        score) — global index in [0, N*C).
-
-        Queries are zero-padded to the next power of two so the jitted
-        lookup doesn't retrace on every distinct miss count.
-        """
-        keys, valid, _ = self._stacks()
-        n = queries.shape[0]
-        n_pad = 1 << (n - 1).bit_length()
-        if n_pad > n:
-            queries = jnp.pad(queries, ((0, n_pad - n), (0, 0)))
-        self.probe_dispatches += 1
-        if self.mesh is not None:
-            idx, score = sharded_topk_lookup(
-                queries, keys, valid, 1, self.mesh,
-                self.cache_axis, impl=self.cfg.lookup_impl)
-        else:
-            idx, score = cluster_topk_lookup(
-                queries, keys, valid, 1, impl=self.cfg.lookup_impl)
-        return idx[:n, 0], score[:n, 0]
 
     # ------------------------------------------------------------------
     def _admission_filter(self, node: int, owner: int, slots: np.ndarray,
@@ -240,15 +212,18 @@ class CooperativeEdgeCluster:
             if int(ins[k[0]][k[1]]) == k[2]}
 
     # ------------------------------------------------------------------
-    def _serve_peer_hits(self, node: int, queries: jax.Array,
-                         miss_rows: np.ndarray, g_idx: np.ndarray,
-                         g_score: np.ndarray, hit, tier, owner, score, value,
-                         snapshot: Optional[List[SemanticCacheState]] = None
-                         ) -> int:
+    def serve_peer_hits(self, node: int, queries: jax.Array,
+                        miss_rows: np.ndarray, g_idx: np.ndarray,
+                        g_score: np.ndarray, hit, tier, owner, score, value,
+                        snapshot: Optional[List[SemanticCacheState]] = None
+                        ) -> int:
         """Fold a cluster-wide probe of ``node``'s local misses into the
         result arrays: serve rows whose best global match is an
         above-threshold peer entry, touch the owners, apply admission.
-        Returns the number of peer-served rows (for the local-miss rebate).
+        Called by ``PeerRung`` — this is the peer tier's serve mechanics,
+        kept on the cluster because it owns the shards and the admission
+        bookkeeping.  Returns the number of peer-served rows (for the
+        local-miss rebate).
 
         ``miss_rows`` indexes the result arrays; ``g_idx``/``g_score`` are
         the global top-1 per miss row.  The local shard already reported a
@@ -299,42 +274,25 @@ class CooperativeEdgeCluster:
         return n_peer_served
 
     # ------------------------------------------------------------------
-    def lookup(self, node: int, queries: jax.Array) -> ClusterLookupResult:
-        """queries: (Q, D) unit descriptors arriving at ``node``."""
-        cfg = self.cfg
-        queries = jnp.asarray(queries)
-
-        self.probe_dispatches += 1
-        self.states[node], res = self.cache.lookup(self.states[node], queries)
-        hit = np.array(res.hit)
-        score = np.array(res.score)
-        value = np.array(res.value)
-        tier = np.where(hit, TIER_LOCAL, TIER_MISS).astype(np.int8)
-        owner = np.where(hit, node, -1).astype(np.int32)
-
-        miss_rows = np.nonzero(~hit)[0]
-        if miss_rows.size and cfg.share and cfg.num_nodes > 1:
-            q_miss = queries[jnp.asarray(miss_rows)]
-            g_idx, g_score = self._peer_probe(q_miss)
-            n_peer_served = self._serve_peer_hits(
-                node, queries, miss_rows, np.asarray(g_idx),
-                np.asarray(g_score), hit, tier, owner, score, value)
-            if n_peer_served:
-                # the local shard counted these as misses, but the owner
-                # shard counted the served hit — undo the local miss so
-                # hits + misses == requests and hit_rate means "served at
-                # any edge tier"
-                self.states[node] = dataclasses.replace(
-                    self.states[node],
-                    misses=self.states[node].misses - n_peer_served)
-
-        return ClusterLookupResult(hit=hit, tier=tier, owner=owner,
-                                   score=score, value=value)
+    def probe(self, queries: np.ndarray, mask: np.ndarray, ctx=None):
+        """CacheTier protocol: one grouped ladder walk over (1, N, B, D)
+        (the leading cluster dim is 1 — the federation composes the same
+        rungs over K > 1 clusters).  Accepts (N, B, D) and broadcasts."""
+        queries = np.asarray(queries, np.float32)
+        if queries.ndim == 3:
+            queries = queries[None]
+            mask = None if mask is None else np.asarray(mask, bool)[None]
+        if mask is None:
+            mask = np.ones(queries.shape[:3], bool)
+        pctx = build_probe_context([self])
+        res = self.ladder.probe(queries, mask, pctx,
+                                self.cfg.payload_dim,
+                                self.cfg.payload_dtype)
+        return TierProbeResult(*res, dispatches=self.ladder.last_dispatches)
 
     # ------------------------------------------------------------------
     def lookup_grouped(self, queries: jax.Array,
-                       mask: Optional[np.ndarray] = None,
-                       probes: Optional[GroupedProbes] = None
+                       mask: Optional[np.ndarray] = None
                        ) -> ClusterLookupResult:
         """The batched engine step's ladder: queries (num_nodes, B, D) —
         group g holds the request batch that arrived at edge node g; mask
@@ -342,85 +300,31 @@ class CooperativeEdgeCluster:
         width).  Returns a ClusterLookupResult with (num_nodes, B) leading
         dims; padding rows report miss/zero and leave no state trace.
 
-        Rung 1 (local) is ONE ``similarity_topk_batched`` dispatch over the
-        stacked shards; rung 2 (peer) is ONE ``grouped_cluster_topk_lookup``
-        dispatch spanning every shard — per-request semantics identical to
+        One ``LocalRung`` dispatch + at most one ``PeerRung`` dispatch per
+        call, whatever N or B — per-request semantics identical to
         ``lookup`` called per node (modulo clock granularity: one tick per
         step instead of one per call).
-
-        ``probes``: externally-computed rung-1/rung-2 results (the
-        federation tier fuses all clusters' probes into two federation-wide
-        dispatches); when given, this call performs NO device probes of its
-        own — only the host-side application.
         """
-        cfg = self.cfg
-        queries = jnp.asarray(queries)
-        G, B, _ = queries.shape
-        assert G == cfg.num_nodes, (G, cfg.num_nodes)
-        mask_np = (np.ones((G, B), bool) if mask is None
-                   else np.asarray(mask, bool))
+        res = self.probe(np.asarray(queries, np.float32), mask)
+        return ClusterLookupResult(hit=res.hit[0], tier=res.tier[0],
+                                   owner=res.owner[0], score=res.score[0],
+                                   value=res.value[0])
 
-        # ---- rung 1: every node's own shard, one batched-kernel dispatch
-        if probes is None:
-            keys, valid, alive = self._stacks()
-            self.probe_dispatches += 1
-            l_idx, l_score = similarity_topk_batched(
-                queries, keys, valid, 1, impl=cfg.lookup_impl)
-            l_idx, l_score = l_idx[..., 0], l_score[..., 0]
-        else:
-            alive = probes.alive
-            l_idx = jnp.asarray(probes.l_idx)
-            l_score = jnp.asarray(probes.l_score)
+    # ------------------------------------------------------------------
+    def lookup(self, node: int, queries: jax.Array) -> ClusterLookupResult:
+        """queries: (Q, D) unit descriptors arriving at ``node`` — the
+        per-request path, routed through the same grouped ladder with a
+        single-group mask (pow2-padded so jitted probes don't retrace).
 
-        hit = np.zeros((G, B), bool)
-        score = np.zeros((G, B), np.float32)
-        tier = np.full((G, B), TIER_MISS, np.int8)
-        owner = np.full((G, B), -1, np.int32)
-        value = np.zeros((G, B, cfg.payload_dim),
-                         np.dtype(cfg.payload_dtype))
-        for g in range(G):
-            self.states[g], res = self.cache.apply_probe(
-                self.states[g], l_idx[g], l_score[g],
-                mask=jnp.asarray(mask_np[g]), alive=alive[g])
-            hit[g] = np.asarray(res.hit)
-            score[g] = np.asarray(res.score)
-            value[g] = np.asarray(res.value)
-        tier[hit] = TIER_LOCAL
-        owner[hit] = np.nonzero(hit)[0].astype(np.int32)
-
-        # ---- rung 2: one grouped probe spanning every shard
-        any_miss = (~hit & mask_np)
-        if any_miss.any() and cfg.share and cfg.num_nodes > 1:
-            if probes is None:
-                g_idx, g_score = grouped_cluster_topk_lookup(
-                    queries, keys, valid, 1, impl=cfg.lookup_impl)
-                self.probe_dispatches += 1
-                g_idx = np.asarray(g_idx[..., 0])
-                g_score = np.asarray(g_score[..., 0])
-            else:
-                assert probes.g_idx is not None
-                g_idx = np.asarray(probes.g_idx)
-                g_score = np.asarray(probes.g_score)
-            # states are functional, so holding the pre-serve list is a free
-            # snapshot: every group's payload reads resolve against the
-            # state the probe scanned, however earlier groups' admissions
-            # mutate the live shards
-            probed = list(self.states)
-            for g in range(G):
-                miss_rows = np.nonzero(any_miss[g])[0]
-                if not miss_rows.size:
-                    continue
-                n_served = self._serve_peer_hits(
-                    g, queries[g], miss_rows, g_idx[g][miss_rows],
-                    g_score[g][miss_rows], hit[g], tier[g], owner[g],
-                    score[g], value[g], snapshot=probed)
-                if n_served:
-                    self.states[g] = dataclasses.replace(
-                        self.states[g],
-                        misses=self.states[g].misses - n_served)
-
-        return ClusterLookupResult(hit=hit, tier=tier, owner=owner,
-                                   score=score, value=value)
+        Clock semantics: a ladder walk advances EVERY shard's logical
+        clock by one (the grouped path always did; this path now shares
+        it), so ``EvictionPolicy.ttl`` counts ladder steps — uniform
+        across shards — rather than per-owning-shard lookups."""
+        queries = np.asarray(queries, np.float32)
+        res = route_flat(self, queries, node, 0)
+        return ClusterLookupResult(hit=res.hit, tier=res.tier,
+                                   owner=res.owner, score=res.score,
+                                   value=res.value)
 
     # ------------------------------------------------------------------
     def insert(self, node: int, keys: jax.Array, values: jax.Array) -> None:
@@ -429,15 +333,21 @@ class CooperativeEdgeCluster:
             self.states[node], jnp.asarray(keys), jnp.asarray(values))
         self._keys_stack = None
 
+    def insert_home(self, cluster_id: int, node: int, keys, values) -> None:
+        """Org-generic insert (cluster orgs ignore ``cluster_id``; a
+        degenerate node axis ignores ``node``, matching ``pack_flat``'s
+        routing rule for the solo cache)."""
+        self.insert(0 if self.cfg.num_nodes == 1 else node, keys, values)
+
     # ------------------------------------------------------------------
     def stats(self) -> dict:
         per_node = [self.cache.stats(s) for s in self.states]
         for p, s in enumerate(per_node):
             s["peer_hits_served"] = int(self.peer_hits[p])
             s["peer_fills"] = int(self.peer_fills[p])
-        # per-node misses exclude peer-served requests (lookup() rebates
-        # them), so hits + misses == requests and hit_rate is "served at
-        # any edge tier"
+        # per-node misses exclude peer-served requests (the peer rung
+        # rebates them), so hits + misses == requests and hit_rate is
+        # "served at any edge tier"
         total_hits = sum(s["hits"] for s in per_node)
         total_misses = sum(s["misses"] for s in per_node)
         tot = total_hits + total_misses
@@ -449,4 +359,5 @@ class CooperativeEdgeCluster:
             "misses": total_misses,
             "hit_rate": (total_hits / tot) if tot else 0.0,
             "probe_dispatches": self.probe_dispatches,
+            "ladder": self.ladder.stats(),
         }

@@ -11,6 +11,14 @@ Workflow per batch of requests (paper §2, Figure 1):
 The "cloud" here is any callable batch->payload (a pjit-sharded LM on the
 production mesh in deployment; a small recognizer in the paper-scale
 benchmarks).
+
+The serving path is ONE ``TierLadder`` (``core/tiers.py``) composing two
+org-level ``CacheTier``s: the edge org — a ``CooperativeEdgeCluster``
+(``num_nodes >= 1``; a 1-node cluster IS the paper's single edge cache) or
+a ``FederatedEdgeTier`` (``num_clusters > 1``) — and ``CloudRung``, which
+serves whatever the edge rungs left, inserting results back into the home
+shard.  Latency is charged per canonical tier through
+``TwoTierRouter.tier_latency`` — no per-tier if/elif here.
 """
 from __future__ import annotations
 
@@ -22,17 +30,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cluster import (TIER_LOCAL, TIER_MISS, TIER_PEER,
-                                ClusterConfig, CooperativeEdgeCluster)
-from repro.core.descriptor import NgramSketchDescriptor, PrefixDescriptor
-from repro.core.federation import (FederatedEdgeTier, FederationConfig,
-                                   TIER_REMOTE as FED_REMOTE)
+from repro.core.cluster import ClusterConfig, CooperativeEdgeCluster
+from repro.core.federation import FederatedEdgeTier, FederationConfig
 from repro.core.hash_cache import HashCache, content_hash
 from repro.core.network import NetworkModel
 from repro.core.policies import EvictionPolicy
 from repro.core.router import (DeadlineStats, LatencyBreakdown, PayloadSizes,
-                               TwoTierRouter, pad_rows, partition_by_hit)
-from repro.core.semantic_cache import SemanticCache
+                               TwoTierRouter, pad_rows)
+from repro.core.tiers import (TIER_LOCAL, TIER_MISS, TIER_NAMES, TIER_PEER,
+                              TIER_REMOTE, TierLadder, TierProbeResult,
+                              empty_probe_arrays, org_grid, pack_flat)
+from repro.core.descriptor import NgramSketchDescriptor, PrefixDescriptor
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +66,8 @@ class CoICConfig:
     federate: bool = True            # remote rung on local+peer miss
     digest_size: int = 128           # top-M hottest keys per cluster digest
     digest_interval: int = 4         # steps between digest refreshes
+    digest_quant: str = "fp32"       # fp32 | int8 digest wire format
+    digest_refresh: str = "full"     # full | delta (push-on-delta)
 
 
 @dataclasses.dataclass
@@ -67,6 +77,63 @@ class RequestResult:
     score: float
     coic: LatencyBreakdown
     origin: LatencyBreakdown
+
+
+# canonical tier name -> user-facing source label
+SOURCE_OF = {"local": "edge", "peer": "peer", "remote": "remote",
+             "miss": "cloud"}
+
+
+@dataclasses.dataclass
+class _CloudCtx:
+    """Per-batch context the engine ladder threads to ``CloudRung``."""
+
+    tokens: np.ndarray               # (B, S) raw requests
+    desc: np.ndarray                 # (B, D) descriptors (edge-cache keys)
+    flat_row: np.ndarray             # (K, N, Bp) -> flat row index, -1 pad
+    cloud_ms: np.ndarray             # (K, N, Bp) per-request amortized ms
+
+
+class CloudRung:
+    """The terminal ladder tier: computes every remaining row on the cloud
+    model and (optionally) inserts the results into the home shard.  Rows
+    it serves keep the canonical ``TIER_MISS`` code — "miss" at the edge IS
+    the cloud path, which keeps the ladder's tier_counts consistent across
+    layers."""
+
+    name, code = "cloud", TIER_MISS
+
+    def __init__(self, engine: "CoICEngine"):
+        self.eng = engine
+
+    def probe(self, queries, mask, ctx: _CloudCtx
+              ) -> Optional[TierProbeResult]:
+        eng = self.eng
+        K, N, B, _ = queries.shape
+        kk, nn, bb = np.nonzero(mask)
+        flat = ctx.flat_row[kk, nn, bb]
+        padded, n_real = pad_rows(ctx.tokens, flat, eng.miss_bucket)
+        t0 = time.perf_counter()
+        out = np.asarray(eng.cloud_fn(padded))[:n_real]
+        dt = (time.perf_counter() - t0) * 1e3
+        eng._timings["cloud_ms"].append(dt)
+        ctx.cloud_ms[kk, nn, bb] = dt / max(1, n_real)
+
+        hit, tier, cluster, owner, score, value = empty_probe_arrays(
+            queries, eng.cfg.payload_dim, eng.cfg.payload_dtype)
+        value[kk, nn, bb] = out.astype(eng.cfg.payload_dtype)
+        if eng.cfg.insert_on_miss:
+            for k in range(K):
+                for g in range(N):
+                    sel = (kk == k) & (nn == g)
+                    if sel.any():
+                        eng.edge.insert_home(
+                            k, g, jnp.asarray(ctx.desc[flat[sel]]),
+                            jnp.asarray(out[sel].astype(
+                                eng.cfg.payload_dtype)))
+        return TierProbeResult(hit=mask.copy(), tier=tier,
+                               cluster=cluster, owner=owner, score=score,
+                               value=value, dispatches=1)
 
 
 class CoICEngine:
@@ -97,32 +164,29 @@ class CoICEngine:
             result_bytes=cfg.payload_dim * 4)
         self.router = TwoTierRouter(self.network, self.sizes)
 
-        self.cluster: Optional[CooperativeEdgeCluster] = None
-        self.federation: Optional[FederatedEdgeTier] = None
         cluster_cfg = ClusterConfig(
             num_nodes=cfg.num_nodes, node_capacity=cfg.capacity,
             key_dim=key_dim, payload_dim=cfg.payload_dim,
             threshold=cfg.threshold, payload_dtype=cfg.payload_dtype,
             policy=cfg.policy, lookup_impl=cfg.lookup_impl,
             admission=cfg.admission, share=cfg.share)
+        self.cluster: Optional[CooperativeEdgeCluster] = None
+        self.federation: Optional[FederatedEdgeTier] = None
         if cfg.num_clusters > 1:
             self.federation = FederatedEdgeTier(FederationConfig(
                 num_clusters=cfg.num_clusters, cluster=cluster_cfg,
                 digest_size=cfg.digest_size,
-                digest_interval=cfg.digest_interval, share=cfg.federate))
+                digest_interval=cfg.digest_interval,
+                digest_quant=cfg.digest_quant,
+                digest_refresh=cfg.digest_refresh, share=cfg.federate))
+            self.edge = self.federation
             self.cache = self.federation.clusters[0].cache
-            self.state = None
-        elif cfg.num_nodes > 1:
-            self.cluster = CooperativeEdgeCluster(cluster_cfg)
-            self.cache = self.cluster.cache
-            self.state = None
         else:
-            self.cache = SemanticCache(
-                capacity=cfg.capacity, key_dim=key_dim,
-                payload_dim=cfg.payload_dim, threshold=cfg.threshold,
-                payload_dtype=cfg.payload_dtype, policy=cfg.policy,
-                lookup_impl=cfg.lookup_impl)
-            self.state = self.cache.init()
+            # a 1-node cluster IS the single isolated edge cache
+            self.cluster = CooperativeEdgeCluster(cluster_cfg)
+            self.edge = self.cluster
+            self.cache = self.cluster.cache
+        self.ladder = TierLadder([self.edge, CloudRung(self)])
         self.asset_cache = HashCache()
         self.deadline = DeadlineStats()   # per-tier frame-budget accounting
         self._timings = {"descriptor_ms": [], "lookup_ms": [], "cloud_ms": []}
@@ -161,53 +225,37 @@ class CoICEngine:
                          for d in np.asarray(deadline_ms, object)]
         desc = self._descriptors(tokens)
         per_req_desc_ms = self._timings["descriptor_ms"][-1] / B
+        desc_np = np.asarray(desc)
 
-        t0 = time.perf_counter()
-        if self.federation is not None:
-            fres = self.federation.lookup(cluster_id, node_id,
-                                          np.asarray(desc))
-            hit, tier, score, values = (fres.hit, fres.tier, fres.score,
-                                        fres.value)
-        elif self.cluster is not None:
-            cres = self.cluster.lookup(node_id, desc)
-            hit, tier, score, values = cres.hit, cres.tier, cres.score, cres.value
-        else:
-            self.state, res = self.cache.lookup(self.state, desc)
-            jax.block_until_ready(res.value)
-            hit = np.asarray(res.hit)
-            score = np.asarray(res.score)
-            values = np.asarray(res.value)
-            tier = np.where(hit, TIER_LOCAL, TIER_MISS).astype(np.int8)
-        lookup_ms = (time.perf_counter() - t0) * 1e3 / B
+        # one ladder walk: edge org (local -> peer -> remote) then cloud
+        K, N = org_grid(self.edge)
+        queries, mask, rows_of = pack_flat(
+            desc_np, [node_id] * B, [cluster_id] * B, K, N)
+        flat_row = np.full(mask.shape, -1, np.int64)
+        for k, kr in enumerate(rows_of):
+            for g, rows in enumerate(kr):
+                flat_row[k, g, :len(rows)] = rows
+        ctx = _CloudCtx(tokens=np.asarray(tokens), desc=desc_np,
+                        flat_row=flat_row,
+                        cloud_ms=np.zeros(mask.shape))
+        res = self.ladder.probe(queries, mask, ctx, self.cfg.payload_dim,
+                                self.cfg.payload_dtype)
+        lookup_ms = self.ladder.last_probe_ms.get(self.edge.name, 0.0) / B
         self._timings["lookup_ms"].append(lookup_ms * B)
 
-        payloads = np.zeros((B, self.cfg.payload_dim),
+        # gather back to flat submission order
+        kk, nn, bb = np.nonzero(mask)
+        order = flat_row[kk, nn, bb]
+        tier = np.empty((B,), np.int8)
+        score = np.empty((B,), np.float32)
+        payloads = np.empty((B, self.cfg.payload_dim),
                             np.dtype(self.cfg.payload_dtype))
-        cloud_ms = np.zeros((B,))
-        hit_rows, miss_rows = partition_by_hit(hit)
-        payloads[hit_rows] = values[hit_rows]
-
-        if miss_rows.size:
-            padded, n_real = pad_rows(tokens, miss_rows, self.miss_bucket)
-            t0 = time.perf_counter()
-            cloud_out = np.asarray(self.cloud_fn(padded))[:n_real]
-            dt = (time.perf_counter() - t0) * 1e3
-            self._timings["cloud_ms"].append(dt)
-            cloud_ms[miss_rows] = dt / max(1, n_real)
-            payloads[miss_rows] = cloud_out
-            if self.cfg.insert_on_miss:
-                miss_desc = np.asarray(desc)[miss_rows]
-                cloud_vals = jnp.asarray(
-                    cloud_out.astype(self.cfg.payload_dtype))
-                if self.federation is not None:
-                    self.federation.insert(cluster_id, node_id,
-                                           jnp.asarray(miss_desc), cloud_vals)
-                elif self.cluster is not None:
-                    self.cluster.insert(node_id, jnp.asarray(miss_desc),
-                                        cloud_vals)
-                else:
-                    self.state = self.cache.insert(
-                        self.state, jnp.asarray(miss_desc), cloud_vals)
+        cloud_ms = np.empty((B,))
+        tier[order] = res.tier[kk, nn, bb]
+        score[order] = res.score[kk, nn, bb]
+        payloads[order] = res.value[kk, nn, bb]
+        cloud_ms[order] = ctx.cloud_ms[kk, nn, bb]
+        edge_hit = tier != TIER_MISS
 
         # Per-tier amortization: the whole batch shares one descriptor
         # extraction and one cluster-probe dispatch; all local misses share
@@ -215,45 +263,33 @@ class CoICEngine:
         # for cloud misses), and everything that escalates past the peer
         # tier shares ONE metro->region digest probe — each request's
         # breakdown carries its share.
-        n_local_miss = int((np.asarray(tier) != TIER_LOCAL).sum())
-        peer_share_ms = 0.0
-        if self.cfg.share and self.cfg.num_nodes > 1 and (
-                self.cluster is not None or self.federation is not None):
-            peer_share_ms = self.router.peer_broadcast_ms(n_local_miss)
-        n_escalated = 0
-        region_share_ms = 0.0
-        if self.federation is not None and self.cfg.federate \
-                and self.cfg.num_clusters > 1:
-            n_escalated = int((np.asarray(tier) >= FED_REMOTE).sum())
-            region_share_ms = self.router.region_broadcast_ms(n_escalated)
+        n_local_miss = int((tier != TIER_LOCAL).sum())
+        peer_on = self.cfg.share and self.cfg.num_nodes > 1
+        peer_share_ms = (self.router.peer_broadcast_ms(n_local_miss)
+                         if peer_on else 0.0)
+        region_on = (self.federation is not None and self.cfg.federate
+                     and self.cfg.num_clusters > 1)
+        n_escalated = int((tier >= TIER_REMOTE).sum()) if region_on else 0
+        region_share_ms = (self.router.region_broadcast_ms(n_escalated)
+                           if region_on else 0.0)
+        batch_of = {TIER_LOCAL: B, TIER_PEER: max(1, n_local_miss),
+                    TIER_REMOTE: max(1, n_escalated), TIER_MISS: B}
 
         results = []
         for b in range(B):
-            is_remote = self.federation is not None and tier[b] == FED_REMOTE
-            if tier[b] == TIER_LOCAL:
-                lat = self.router.hit_latency(per_req_desc_ms, lookup_ms,
-                                              batch=B)
-                src = "edge"
-            elif tier[b] == TIER_PEER:
-                lat = self.router.peer_hit_latency(per_req_desc_ms, lookup_ms,
-                                                   batch=n_local_miss)
-                src = "peer"
-            elif is_remote:
-                lat = self.router.remote_hit_latency(
-                    per_req_desc_ms, lookup_ms, peer_net_ms=peer_share_ms,
-                    batch=n_escalated)
-                src = "remote"
-            else:
-                lat = self.router.miss_latency(per_req_desc_ms, lookup_ms,
-                                               float(cloud_ms[b]),
-                                               peer_net_ms=peer_share_ms,
-                                               remote_net_ms=region_share_ms,
-                                               batch=B)
-                src = "cloud"
+            t = int(tier[b])
+            name = TIER_NAMES[t]
+            src = SOURCE_OF[name]
+            lat = self.router.tier_latency(
+                name, per_req_desc_ms, lookup_ms, batch=batch_of[t],
+                peer_net_ms=(peer_share_ms if t >= TIER_REMOTE else 0.0),
+                remote_net_ms=(region_share_ms if t == TIER_MISS else 0.0),
+                cloud_compute_ms=float(cloud_ms[b]))
             lat.deadline_ms = deadlines[b]
             self.deadline.observe(src, lat.total_ms, deadlines[b])
-            origin = self.router.origin_latency(float(cloud_ms[b]) if not hit[b]
-                                                else self._mean_cloud_ms())
+            origin = self.router.origin_latency(
+                float(cloud_ms[b]) if not edge_hit[b]
+                else self._mean_cloud_ms())
             results.append(RequestResult(payload=payloads[b], source=src,
                                          score=float(score[b]), coic=lat,
                                          origin=origin))
@@ -284,13 +320,27 @@ class CoICEngine:
     def stats(self) -> dict:
         if self.federation is not None:
             s = self.federation.stats()
-        elif self.cluster is not None:
+        elif self.cfg.num_nodes > 1:
             s = self.cluster.stats()
         else:
-            s = self.cache.stats(self.state)
+            # solo cache: the flat per-shard stats shape, as ever
+            s = self.cache.stats(self.cluster.states[0])
+        # the uniform per-tier dispatch/digest block, whatever the config
+        lad = self.edge.ladder.stats()
+        lad["rung_dispatches"]["cloud"] = \
+            self.ladder.rung_dispatches.get("cloud", 0)
+        s["ladder"] = lad
+        s["digest"] = (self.federation.digest_stats()
+                       if self.federation is not None else EMPTY_DIGEST_STATS)
         s["asset_cache"] = self.asset_cache.stats()
         s["deadline"] = self.deadline.as_dict()
         return s
+
+
+# the uniform digest-stats shape for configs without a federation tier
+EMPTY_DIGEST_STATS = {"mode": "off", "size": 0, "bytes_shipped": 0,
+                      "rows_shipped": 0, "updates_applied": 0,
+                      "refreshes": 0, "false_hits": 0, "interval": 0}
 
 
 # ---------------------------------------------------------------------------

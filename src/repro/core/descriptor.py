@@ -20,7 +20,6 @@ cache lookup is a single MXU matmul (kernels/similarity).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

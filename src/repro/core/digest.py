@@ -1,0 +1,239 @@
+"""Quantized delta-digest subsystem — the metro -> region control plane.
+
+Each cluster advertises its top-M hottest entry keys as a *digest*; the
+region keeps a replica per cluster that the federation's remote rung probes
+(one grouped dispatch for the whole step's miss batch).  This module owns
+the wire format and the shipped-bytes accounting of that control plane:
+
+* **Quantization** (``DigestConfig.quant``): ``"fp32"`` ships raw keys
+  (``D * 4`` bytes/row); ``"int8"`` ships symmetric per-row int8 codes plus
+  one fp32 scale (``D + 4`` bytes/row, ~3.9x smaller at D=128).  The region
+  probes the quantized codes directly (``federated_digest_lookup_quantized``
+  dequantizes inside the one jitted dispatch — same kernel surface as the
+  fp32 probe).  Because every digest candidate still passes the
+  authoritative confirm against the owning cluster's full-precision shards,
+  quantization error can only UNDER-report (a near-threshold entry's
+  quantized score dips below tau -> recoverable miss); it can never serve a
+  phantom payload, and with fresh digests the int8 hit set is a subset of
+  the fp32 hit set (see tests/test_digest.py + the hypothesis variants).
+
+* **Push-on-delta refresh** (``DigestConfig.refresh``): ``"full"`` ships
+  all M rows every refresh; ``"delta"`` ships only rows whose *shipped
+  representation* (quantized codes, scale, validity) changed since the last
+  publish, each prefixed by a 4-byte row index — and falls back to the
+  full-frame encoding whenever the delta would be larger (e.g. a cold
+  start or full-churn refresh, where per-row indices are pure overhead),
+  so a delta refresh NEVER ships more than a full one.  Delta application
+  is exact reconstruction: after any interleaving of updates the region
+  replica is bit-identical to a full refresh of the current digest
+  (property-tested), so delta mode changes bytes, never semantics.
+
+``RegionDigestBoard.bytes_shipped`` accumulates the metro -> region traffic;
+``TwoTierRouter.digest_ship_ms`` prices it on the region link
+(``NetworkModel.e_r``) for the benchmarks' latency accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+DIGEST_QUANTS = ("fp32", "int8")
+DIGEST_REFRESHES = ("full", "delta")
+
+
+@dataclasses.dataclass(frozen=True)
+class DigestConfig:
+    size: int = 128                  # top-M rows per cluster
+    quant: str = "fp32"              # fp32 | int8 (wire + probe format)
+    refresh: str = "full"            # full | delta (what a refresh ships)
+
+    def __post_init__(self):
+        assert self.size >= 1, self.size
+        assert self.quant in DIGEST_QUANTS, self.quant
+        assert self.refresh in DIGEST_REFRESHES, self.refresh
+
+    @property
+    def mode(self) -> str:
+        return f"{self.refresh}_{self.quant}"
+
+    def row_bytes(self, key_dim: int) -> int:
+        """Wire bytes of one digest row's key payload."""
+        if self.quant == "int8":
+            return key_dim + 4           # int8 codes + fp32 scale
+        return key_dim * 4
+
+
+def quantize_rows(keys: np.ndarray):
+    """Symmetric per-row int8 quantization: codes = round(key / scale),
+    scale = max|row| / 127 (zero rows get scale 0 and all-zero codes).
+    Returns (codes (M, D) int8, scales (M,) f32)."""
+    keys = np.asarray(keys, np.float32)
+    amax = np.abs(keys).max(axis=-1)
+    scales = (amax / 127.0).astype(np.float32)
+    safe = np.where(scales > 0, scales, 1.0)
+    codes = np.clip(np.rint(keys / safe[:, None]), -127, 127).astype(np.int8)
+    codes[scales == 0] = 0
+    return codes, scales
+
+
+def dequantize_rows(codes: np.ndarray, scales: np.ndarray) -> np.ndarray:
+    return codes.astype(np.float32) * np.asarray(scales,
+                                                 np.float32)[:, None]
+
+
+class DigestUpdate(NamedTuple):
+    """One refresh message: the changed rows (all M in full mode) and the
+    wire size it cost on the metro -> region link."""
+
+    rows: np.ndarray             # (R,) int32 digest row indices
+    codes: np.ndarray            # (R, D) int8 (int8 mode) — else empty
+    scales: np.ndarray           # (R,) f32 (int8 mode) — else empty
+    keys: np.ndarray             # (R, D) f32 (fp32 mode) — else empty
+    valid: np.ndarray            # (R,) bool
+    bytes: int
+
+
+class DigestPublisher:
+    """Metro side of one cluster's digest: remembers the last-shipped
+    representation and emits full or delta ``DigestUpdate``s."""
+
+    def __init__(self, cfg: DigestConfig, key_dim: int):
+        self.cfg = cfg
+        M, D = cfg.size, key_dim
+        self._codes = np.zeros((M, D), np.int8)      # int8 mode
+        self._scales = np.zeros((M,), np.float32)
+        self._keys = np.zeros((M, D), np.float32)    # fp32 mode
+        self._valid = np.zeros((M,), bool)
+
+    def publish(self, keys: np.ndarray, valid: np.ndarray) -> DigestUpdate:
+        """keys (M, D) f32 / valid (M,): the cluster's freshly-selected
+        digest rows.  Returns the update to ship region-side."""
+        cfg = self.cfg
+        keys = np.asarray(keys, np.float32)
+        valid = np.asarray(valid, bool)
+        M, D = keys.shape
+        keys = np.where(valid[:, None], keys, 0.0).astype(np.float32)
+        if cfg.quant == "int8":
+            codes, scales = quantize_rows(keys)
+            codes[~valid] = 0
+            scales[~valid] = 0.0
+            changed = ((codes != self._codes).any(axis=1)
+                       | (scales != self._scales) | (valid != self._valid))
+        else:
+            codes = np.zeros((0, D), np.int8)
+            scales = np.zeros((0,), np.float32)
+            changed = ((keys != self._keys).any(axis=1)
+                       | (valid != self._valid))
+
+        # full-frame encoding: every row's key payload + a valid bitmap
+        full_bytes = M * cfg.row_bytes(D) + (M + 7) // 8
+        if cfg.refresh == "full":
+            rows = np.arange(M, dtype=np.int32)
+            n_bytes = full_bytes
+        else:
+            rows = np.nonzero(changed)[0].astype(np.int32)
+            # per changed row: 4-byte index + key payload (tombstones —
+            # rows going invalid — ship the index only)
+            n_live = int(valid[rows].sum())
+            n_bytes = len(rows) * 4 + n_live * cfg.row_bytes(D)
+            if n_bytes >= full_bytes:
+                # high-churn refresh: the per-row indices are pure
+                # overhead — ship the full frame instead, so delta never
+                # costs more than full
+                rows = np.arange(M, dtype=np.int32)
+                n_bytes = full_bytes
+
+        if cfg.quant == "int8":
+            self._codes, self._scales = codes, scales
+            update = DigestUpdate(rows, codes[rows], scales[rows],
+                                  np.zeros((0, D), np.float32), valid[rows],
+                                  n_bytes)
+        else:
+            update = DigestUpdate(rows, codes, scales, keys[rows],
+                                  valid[rows], n_bytes)
+        self._keys = keys
+        self._valid = valid.copy()
+        return update
+
+
+class RegionDigestBoard:
+    """Region side: K per-cluster digest replicas reconstructed from
+    updates, exposed as the tensors the grouped digest probe scans, plus
+    the shipped-bytes ledger of the metro -> region link."""
+
+    def __init__(self, cfg: DigestConfig, num_clusters: int, key_dim: int):
+        self.cfg = cfg
+        K, M, D = num_clusters, cfg.size, key_dim
+        self.codes = np.zeros((K, M, D), np.int8)
+        self.scales = np.zeros((K, M), np.float32)
+        self.keys = np.zeros((K, M, D), np.float32)
+        self.valid = np.zeros((K, M), bool)
+        self.bytes_shipped = 0
+        self.rows_shipped = 0
+        self.updates_applied = 0
+
+    # ------------------------------------------------------------------
+    def apply(self, cluster: int, update: DigestUpdate) -> None:
+        rows = update.rows
+        if self.cfg.quant == "int8":
+            self.codes[cluster, rows] = update.codes
+            self.scales[cluster, rows] = update.scales
+        else:
+            self.keys[cluster, rows] = update.keys
+        self.valid[cluster, rows] = update.valid
+        self.bytes_shipped += update.bytes
+        self.rows_shipped += len(rows)
+        self.updates_applied += 1
+
+    # ------------------------------------------------------------------
+    def probe_keys(self) -> np.ndarray:
+        """(K, M, D) f32 digest matrix as the probe sees it (dequantized in
+        int8 mode — the device path dequantizes inside the jitted dispatch;
+        this host-side view exists for oracles/tests)."""
+        if self.cfg.quant == "int8":
+            K, M, D = self.codes.shape
+            return (self.codes.astype(np.float32)
+                    * self.scales[..., None]).reshape(K, M, D)
+        return self.keys
+
+    def stats(self) -> dict:
+        return {
+            "mode": self.cfg.mode,
+            "size": self.cfg.size,
+            "bytes_shipped": int(self.bytes_shipped),
+            "rows_shipped": int(self.rows_shipped),
+            "updates_applied": int(self.updates_applied),
+        }
+
+
+def region_pin_mask(shard_keys: np.ndarray, shard_valid: np.ndarray,
+                    peer_served: np.ndarray,
+                    protected_keys: Optional[np.ndarray],
+                    threshold: float, hot_min: int = 1) -> np.ndarray:
+    """Region-aware eviction support: which of a shard's entries are the
+    region's last PROTECTED copy of a region-hot entry.
+
+    An entry is region-hot when it has served ``hot_min``+ requests for
+    other nodes/clusters (``peer_served``, maintained by
+    ``SemanticCache.touch``); it pins unless ``protected_keys`` already
+    holds an above-threshold duplicate.  The federation walks clusters in
+    id order and passes the keys ALREADY PINNED at earlier shards/
+    clusters as ``protected_keys`` — deferring only to genuinely
+    protected copies (never to a cold, unpinned replica) guarantees the
+    lowest-id region-hot holder of every entry keeps a pin.  Pinned
+    entries are lifted above all unpinned ones in eviction priority
+    (``EvictionPolicy(region_aware=True)``), so a region-hot entry cannot
+    vanish from every cluster at once just because its authoritative
+    holder saw local churn.
+    """
+    shard_keys = np.asarray(shard_keys, np.float32)
+    hot = np.asarray(shard_valid, bool) & (np.asarray(peer_served) >= hot_min)
+    if not hot.any():
+        return np.zeros(shard_keys.shape[0], bool)
+    if protected_keys is None or not len(protected_keys):
+        return hot                       # nothing protected anywhere yet
+    dup = (shard_keys @ np.asarray(protected_keys, np.float32).T
+           ).max(axis=1) >= threshold
+    return hot & ~dup

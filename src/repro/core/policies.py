@@ -17,7 +17,11 @@ NEG = -1e30
 
 @dataclasses.dataclass(frozen=True)
 class EvictionPolicy:
-    """kind: lru | lfu | fifo | lru_ttl.  ttl in engine time units (steps).
+    """kind: lru | lfu | fifo | lru_ttl.  ttl in engine time units
+    (ladder steps: every lookup/insert advances a shard's logical clock
+    by one, and a grouped ladder walk ticks every shard in the org once —
+    so in a cluster/federation, ttl counts the org's steps, not lookups
+    at the owning shard alone).
 
     ``peer_aware``: bias eviction away from entries the rest of the cluster
     relies on — among equal base priorities, an entry with a higher
@@ -27,11 +31,24 @@ class EvictionPolicy:
     is a sub-integer fraction of the base priority, so it only ever breaks
     ties (exact while the base priority stays below fp32's 2^23/1024
     integer-resolution bound — far beyond any test/benchmark clock here).
+
+    ``region_aware``: protect the region's last authoritative copy of a
+    region-hot entry.  The federation tier marks such slots in
+    ``state.region_pin`` at each digest refresh (region-hot == served
+    remote/peer consumers; last copy == no duplicate already pinned at a
+    lower-id cluster, so the lowest-id hot holder always keeps a pin
+    — see ``core/digest.py::region_pin_mask``);
+    pinned slots are lifted above every unpinned slot via a
+    rank-transform of the base priority (stable ties to the lower slot,
+    exact in fp32 for any capacity < 2^23 — no magnitude tricks that
+    would absorb the base order).  "Protect", not "never evict": when
+    everything is pinned, the base order still decides.
     """
 
     kind: str = "lru"
     ttl: int = 0
     peer_aware: bool = False
+    region_aware: bool = False
 
     def priority(self, state) -> jax.Array:
         """(C,) fp32 — higher means keep longer.  Invalid slots get NEG so
@@ -48,6 +65,17 @@ class EvictionPolicy:
         if self.peer_aware:
             pri = pri + jnp.clip(state.peer_served, 0, 1023).astype(
                 jnp.float32) / 1024.0
+        if self.region_aware:
+            # exact two-stage order: dense-rank the base priority (stable
+            # argsort ties break to the lower slot, matching insert()'s
+            # victim convention), then lift pinned-and-valid slots above
+            # every unpinned one.  Ranks are small integers, so the fp32
+            # sum stays exact — a large additive bonus would swallow the
+            # base order among pinned slots.
+            C = pri.shape[0]
+            rank = jnp.argsort(jnp.argsort(pri)).astype(jnp.float32)
+            pri = rank + jnp.where(state.region_pin & state.valid,
+                                   jnp.float32(C), jnp.float32(0))
         return jnp.where(state.valid, pri, NEG)
 
     def expire(self, state, now: jax.Array) -> jax.Array:

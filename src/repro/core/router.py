@@ -218,6 +218,36 @@ class TwoTierRouter:
             amortized_over=batch,
         )
 
+    def digest_ship_ms(self, payload_bytes: float) -> float:
+        """Price of shipping a digest refresh metro -> region on the region
+        link — the control-plane cost ``core/digest.py`` accounts in bytes
+        (``digest_bytes_shipped``); benchmarks report both."""
+        return self.net.edge_to_region_ms(payload_bytes)
+
+    def tier_latency(self, tier: str, descriptor_ms: float, lookup_ms: float,
+                     *, batch: int = 1, peer_net_ms: float = 0.0,
+                     remote_net_ms: float = 0.0,
+                     cloud_compute_ms: float = 0.0) -> LatencyBreakdown:
+        """The one data-driven entry the engines charge every request
+        through: ``tier`` is a canonical ladder tier name
+        (``core/tiers.py::TIER_NAMES``; ``edge`` aliases ``local`` and
+        ``cloud`` aliases ``miss``).  Replaces the per-engine if/elif
+        chains over tier codes — adding a rung means adding a row here, not
+        editing every engine."""
+        if tier in ("local", "edge"):
+            return self.hit_latency(descriptor_ms, lookup_ms, batch=batch)
+        if tier == "peer":
+            return self.peer_hit_latency(descriptor_ms, lookup_ms,
+                                         batch=batch)
+        if tier == "remote":
+            return self.remote_hit_latency(descriptor_ms, lookup_ms,
+                                           peer_net_ms=peer_net_ms,
+                                           batch=batch)
+        assert tier in ("miss", "cloud"), tier
+        return self.miss_latency(descriptor_ms, lookup_ms, cloud_compute_ms,
+                                 peer_net_ms=peer_net_ms,
+                                 remote_net_ms=remote_net_ms, batch=batch)
+
     def origin_latency(self, cloud_compute_ms: float) -> LatencyBreakdown:
         s = self.sizes
         return LatencyBreakdown(
@@ -227,12 +257,6 @@ class TwoTierRouter:
             cloud_compute_ms=cloud_compute_ms,
             downlink_ms=self.net.edge_to_client_ms(s.result_bytes),
         )
-
-
-def partition_by_hit(hit: np.ndarray):
-    """(hit_rows, miss_rows) index arrays from a (B,) bool mask."""
-    hit = np.asarray(hit)
-    return np.nonzero(hit)[0], np.nonzero(~hit)[0]
 
 
 def pad_rows(arr: np.ndarray, rows: np.ndarray, bucket: Optional[int] = None):

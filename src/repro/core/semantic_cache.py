@@ -23,7 +23,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.policies import NEG, EvictionPolicy
+from repro.core.policies import EvictionPolicy
 from repro.kernels.similarity import similarity_lookup
 
 
@@ -37,6 +37,7 @@ class SemanticCacheState:
     inserted_at: jax.Array   # (C,) int32
     freq: jax.Array          # (C,) int32 — hit count (LFU)
     peer_served: jax.Array   # (C,) int32 — hits served for OTHER nodes/clusters
+    region_pin: jax.Array    # (C,) bool — region's last copy of a hot entry
     clock: jax.Array         # () int32 — logical time
     hits: jax.Array          # () int32 — stats
     misses: jax.Array        # () int32
@@ -71,6 +72,7 @@ class SemanticCache:
             inserted_at=z((C,), jnp.int32),
             freq=z((C,), jnp.int32),
             peer_served=z((C,), jnp.int32),
+            region_pin=z((C,), bool),
             clock=jnp.zeros((), jnp.int32),
             hits=jnp.zeros((), jnp.int32),
             misses=jnp.zeros((), jnp.int32),
@@ -174,6 +176,7 @@ class SemanticCache:
             inserted_at=state.inserted_at.at[victims].set(state.clock, mode="drop"),
             freq=state.freq.at[victims].set(1, mode="drop"),
             peer_served=state.peer_served.at[victims].set(0, mode="drop"),
+            region_pin=state.region_pin.at[victims].set(False, mode="drop"),
             clock=state.clock + 1,
         )
         return new

@@ -10,7 +10,7 @@ a true multi-host job (single-process here).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import jax
 import numpy as np

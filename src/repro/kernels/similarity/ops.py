@@ -11,7 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.similarity.kernel import (NEG_INF, similarity_lookup_kernel,
+from repro.kernels.similarity.kernel import (similarity_lookup_kernel,
                                              similarity_topk_batched_kernel,
                                              similarity_topk_kernel)
 from repro.kernels.similarity.ref import (similarity_lookup_ref,

@@ -23,7 +23,6 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -39,9 +38,7 @@ from repro.train.trainer import TrainerConfig, make_train_step, train_state_shap
 # Collective-bytes parsing from compiled HLO
 # ---------------------------------------------------------------------------
 
-from repro.launch.hloparse import (_COLLECTIVES, _DTYPE_BYTES,
-                                   _shape_bytes, _wire_factor,
-                                   parse_collectives)
+from repro.launch.hloparse import parse_collectives
 
 
 # ---------------------------------------------------------------------------
@@ -94,7 +91,6 @@ def lower_cell(arch: str, shape: str, multi_pod: bool, *, unroll: bool = False,
     model = build_model(cfg, moe_impl=moe_impl, attention_impl="xla")
     global RULES_TRAIN, RULES_SERVE, RULES_SERVE_LONG
     if not act_sharding:
-        import dataclasses as _dc
         from repro.parallel.sharding import ShardingRules
 
         def _strip(rules):

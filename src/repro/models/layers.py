@@ -8,7 +8,6 @@ tests and the dry-run, where Pallas TPU custom-calls cannot lower).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax

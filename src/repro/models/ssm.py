@@ -15,7 +15,6 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig, SSMConfig
 from repro.models.layers import ParamSpec, rms_norm

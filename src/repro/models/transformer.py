@@ -17,7 +17,6 @@ layers keep (conv_state, ssd_state).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Dict, Optional, Tuple
 
 import jax

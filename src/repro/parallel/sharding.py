@@ -25,24 +25,29 @@ This module also owns the device-side probes of the cooperative cache
 ladder — each one is designed to be a SINGLE dispatch however wide the
 tier gets, which is what keeps the engine's per-step ladder bound constant:
 
-* ``cluster_topk_lookup`` / ``grouped_cluster_topk_lookup`` — the peer
-  rung: (all nodes' queries) x (all shards) in one ``similarity_topk``
-  kernel call over the pooled shard stack.  The results feed
-  ``core/cluster.py::GroupedProbes``, the *injection contract* that lets
-  an outer tier (the federation) compute every cluster's rung-1/rung-2
-  probes in two federation-wide kernels and hand each cluster its slice:
-  a cluster given ``probes=`` must apply them against the same pre-step
-  state snapshot the probes were computed from, and must not issue its
-  own probe dispatches.
-* ``federated_digest_lookup`` — the remote rung's digest probe: every
-  home cluster's miss batch against every OTHER cluster's top-M digest in
-  one kernel call.  Digests are deliberately stale (refreshed every
-  ``digest_interval`` steps), and staleness only ever *under-reports*:
-  a returned candidate is a hint that the caller MUST confirm against the
-  candidate cluster's authoritative shards — a failed confirm is counted
-  ``digest_false_hit`` and falls through to the cloud, so a stale digest
-  can cost a wasted probe but never fabricate a hit, and an entry
-  admitted since the last refresh is merely invisible until the next one.
+* ``cluster_topk_lookup`` — the peer rung as a pooled collective: (all
+  nodes' queries) x (all shards) in one ``similarity_topk`` kernel call
+  over the pooled shard stack (merge semantics shared with the batched
+  kernel path, bit-exact against the pooled oracle).  The
+  ladder's rung implementations (``core/tiers.py::LocalRung``/
+  ``PeerRung``) issue the equivalent batched probes directly through
+  ``similarity_topk_batched`` — one federation-wide dispatch per rung —
+  against the pre-step state snapshot in their ``ProbeContext``.
+* ``federated_digest_lookup`` (and its ``_quantized`` variant) — the
+  remote rung's digest probe: every home cluster's miss batch against
+  every OTHER cluster's top-M digest in one kernel call.  The quantized
+  variant takes the int8 codes + per-row scales the region actually
+  received over the wire (``core/digest.py``) and dequantizes inside the
+  same jitted dispatch — no new kernel surface, int8-resident operands.
+  Digests are deliberately stale (refreshed every ``digest_interval``
+  steps), and staleness only ever *under-reports*: a returned candidate
+  is a hint that the caller MUST confirm against the candidate cluster's
+  authoritative shards — a failed confirm is counted ``digest_false_hit``
+  and falls through to the cloud, so a stale digest can cost a wasted
+  probe but never fabricate a hit, and an entry admitted since the last
+  refresh is merely invisible until the next one.  Quantization obeys the
+  same contract: the confirm runs at full precision, so int8 rounding can
+  only demote a near-threshold candidate to a recoverable miss.
 * ``sharded_topk_lookup`` — the same peer-rung collective as a
   ``shard_map`` over a real ``cache`` mesh axis: each device computes its
   local top-k and one all-gather of (k idx, k score) per shard replaces
@@ -268,27 +273,6 @@ def cluster_topk_lookup(queries: jax.Array, keys: jax.Array,
 
 
 @partial(jax.jit, static_argnames=("k", "impl"))
-def grouped_cluster_topk_lookup(queries: jax.Array, keys: jax.Array,
-                                valid: jax.Array, k: int, *,
-                                impl: str = "auto"):
-    """Cluster-wide lookup for *grouped* queries: requests from all N_nodes
-    edge nodes probe every shard in ONE dispatch — the batched engine step's
-    peer rung.
-
-    queries: (G, B, D) — group g holds node g's request batch (pad rows are
-    fine: they just return garbage candidates the caller masks).  keys:
-    (N, C, D) stacked shards; valid: (N, C).
-    Returns (idx (G, B, k) int32 global indices in [0, N*C), score
-    (G, B, k) f32) — each (g, b) row equal to ``similarity_topk`` over the
-    pooled ``keys.reshape(N*C, D)``.
-    """
-    g, b, d = queries.shape
-    idx, score = cluster_topk_lookup(queries.reshape(g * b, d), keys, valid,
-                                     k, impl=impl)
-    return idx.reshape(g, b, -1), score.reshape(g, b, -1)
-
-
-@partial(jax.jit, static_argnames=("k", "impl"))
 def federated_digest_lookup(queries: jax.Array, digests: jax.Array,
                             valid: jax.Array, k: int = 1, *,
                             impl: str = "auto"):
@@ -324,6 +308,22 @@ def federated_digest_lookup(queries: jax.Array, digests: jax.Array,
     not_home = ~jnp.eye(K, dtype=bool)                   # (K_home, K)
     valid_h = (valid[None, :, :] & not_home[:, :, None]).reshape(K, K * M)
     return similarity_topk_batched(queries, pooled, valid_h, k, impl=impl)
+
+
+@partial(jax.jit, static_argnames=("k", "impl"))
+def federated_digest_lookup_quantized(queries: jax.Array, codes: jax.Array,
+                                      scales: jax.Array, valid: jax.Array,
+                                      k: int = 1, *, impl: str = "auto"):
+    """``federated_digest_lookup`` over int8-quantized digests.
+
+    codes: (K, M, D) int8 symmetric per-row codes; scales: (K, M) f32
+    per-row scales — exactly the wire format the region received
+    (``core/digest.py::DigestPublisher``), kept int8-resident and
+    dequantized inside this one jitted dispatch.  queries/valid/k as in
+    ``federated_digest_lookup``; same home-cluster masking, same kernel.
+    """
+    digests = codes.astype(jnp.float32) * scales[..., None]
+    return federated_digest_lookup(queries, digests, valid, k, impl=impl)
 
 
 def sharded_topk_lookup(queries: jax.Array, keys: jax.Array,

@@ -46,15 +46,19 @@ bucketed machinery — the per-request-ladder baseline the batched mode is
 measured against (benchmarks/cooperative_hit_rate.py --batched).
 
 All device work has static shapes (B slots, max_len cache, pow2 buckets);
-scheduling is host-side, as in vLLM-class systems.  The per-step ladder
-bound survives both scheduling policies and chunked prefill: at most one
-descriptor dispatch + one grouped lookup per step — the federation tier
-fuses all clusters' rungs via the ``GroupedProbes`` injection contract
-(see ``core/federation.py``), so its internal ladder stays <= 4
-dispatches regardless of cluster count, and stale digests only ever
-under-report (a confirmed miss falls to this engine's own prefill/decode
-path, never a phantom cache payload).  ``max_step_ladder`` tracks the
-observed per-step maximum.
+scheduling is host-side, as in vLLM-class systems.  The CoIC front is a
+ladder org from ``core/tiers.py`` — a ``CooperativeEdgeCluster`` (1-node
+for the solo cache) or a ``FederatedEdgeTier`` — driven through ONE
+``route_flat`` call per step; per-tier latency is charged through
+``TwoTierRouter.tier_latency`` over canonical tier codes (no per-tier
+if/elif here).  The per-step ladder bound survives both scheduling
+policies and chunked prefill: at most one descriptor dispatch + one
+grouped lookup per step, and the org's internal ``TierLadder`` stays <= 4
+device dispatches regardless of cluster count (each rung is one
+federation-wide batched dispatch; stale/quantized digests only ever
+under-report — a confirmed miss falls to this engine's own
+prefill/decode path, never a phantom cache payload).  ``max_step_ladder``
+tracks the observed per-step maximum.
 """
 from __future__ import annotations
 
@@ -67,20 +71,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cluster import (TIER_LOCAL, TIER_MISS, TIER_PEER,
-                                ClusterConfig, CooperativeEdgeCluster)
-from repro.core.coic import CoICConfig
+from repro.core.cluster import ClusterConfig, CooperativeEdgeCluster
+from repro.core.coic import EMPTY_DIGEST_STATS, SOURCE_OF, CoICConfig
 from repro.core.descriptor import NgramSketchDescriptor, PrefixDescriptor
-from repro.core.federation import (FederatedEdgeTier, FederationConfig,
-                                   TIER_REMOTE as FED_REMOTE)
+from repro.core.federation import FederatedEdgeTier, FederationConfig
 from repro.core.network import NetworkModel
 from repro.core.router import (DeadlineStats, LatencyBreakdown, PayloadSizes,
                                TwoTierRouter)
-from repro.core.semantic_cache import SemanticCache
+from repro.core.tiers import (TIER_LOCAL, TIER_MISS, TIER_NAMES, TIER_PEER,
+                              TIER_REMOTE, pow2 as _pow2, route_flat)
 from repro.serving.kv_cache import batch_cache_scatter, init_batch_cache
-
-
-from repro.core.cluster import pow2 as _pow2  # pad buckets bound retracing
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +103,13 @@ class ServingConfig:
     # (0 disables; auto-disabled for SWA/recurrent caches, which need the
     # exact-length one-shot path)
     prefill_chunk: int = 0
+    # priority-aware chunk pacing: when engine slots sit idle (free decode
+    # slots and an empty admission queue) an in-flight long prompt may
+    # advance up to this many chunks per step instead of the fixed
+    # one-chunk trickle; the EDF queue key picks who gets the budget first.
+    # 1 == the original fixed trickle.  Pacing never changes decoded
+    # tokens — only how many steps the prefill takes.
+    chunk_pacing: int = 1
     # modeled wall-clock duration of one engine step, for deadline
     # accounting in paced simulations (frame workloads); 0 uses measured
     # wall time for the cloud path and modeled-latency-only for hits
@@ -112,6 +119,7 @@ class ServingConfig:
         assert self.scheduling in ("batched", "sequential"), self.scheduling
         assert self.queue_policy in ("edf", "fifo"), self.queue_policy
         assert self.prefill_chunk >= 0, self.prefill_chunk
+        assert self.chunk_pacing >= 1, self.chunk_pacing
 
 
 @dataclasses.dataclass
@@ -212,11 +220,14 @@ class ServingEngine:
             self._chunk_fn = jax.jit(model.prefill_chunk,
                                      donate_argnums=(2,))
 
-        # CoIC front (single semantic cache, a cooperative cluster when
-        # coic.num_nodes > 1, or a cross-cluster federation when
-        # coic.num_clusters > 1 — each serving replica fronts one edge node)
+        # CoIC front: one ladder org (core/tiers.py) — a cooperative
+        # cluster (1-node for the solo cache) or a cross-cluster federation
+        # when coic.num_clusters > 1; each serving replica fronts one edge
+        # node.  The engine's own prefill/decode path is the ladder's
+        # cloud fall-through.
         self.coic_cfg = cfg.coic
         self.semantic = None
+        self.sem_org = None
         self.sem_cluster = None
         self.sem_fed = None
         self._req_node: Dict[int, int] = {}
@@ -242,18 +253,18 @@ class ServingEngine:
                 self.sem_fed = FederatedEdgeTier(FederationConfig(
                     num_clusters=c.num_clusters, cluster=cluster_cfg,
                     digest_size=c.digest_size,
-                    digest_interval=c.digest_interval, share=c.federate))
+                    digest_interval=c.digest_interval,
+                    digest_quant=c.digest_quant,
+                    digest_refresh=c.digest_refresh, share=c.federate))
+                self.sem_org = self.sem_fed
                 self.semantic = self.sem_fed.clusters[0].cache
-            elif c.num_nodes > 1:
-                self.sem_cluster = CooperativeEdgeCluster(cluster_cfg)
-                self.semantic = self.sem_cluster.cache
             else:
-                self.semantic = SemanticCache(
-                    capacity=c.capacity, key_dim=key_dim,
-                    payload_dim=cfg.max_new_tokens, threshold=c.threshold,
-                    payload_dtype="int32", policy=c.policy,
-                    lookup_impl=c.lookup_impl)
-                self.sem_state = self.semantic.init()
+                self.sem_cluster = CooperativeEdgeCluster(cluster_cfg)
+                self.sem_org = self.sem_cluster
+                self.semantic = self.sem_cluster.cache
+            self._peer_on = c.share and c.num_nodes > 1
+            self._region_on = (self.sem_fed is not None and c.federate
+                               and c.num_clusters > 1)
             # satellite: cache-served requests are charged the modeled
             # network + probe latency instead of the old latency_s=0.0
             self.network = network or NetworkModel()
@@ -405,109 +416,38 @@ class ServingEngine:
         desc, desc_ms = self._extract_descriptors(prompts)
         n = len(batch)
 
+        # ONE route through the org's TierLadder, whatever the config
+        # (solo 1-node cluster / cooperative cluster / federation)
         t0 = time.perf_counter()
-        if self.sem_fed is not None:
-            K = self.sem_fed.cfg.num_clusters
-            N = self.sem_fed.cfg.cluster.num_nodes
-            rows_of = [[[] for _ in range(N)] for _ in range(K)]
-            for i, (node, clu) in enumerate(zip(nodes, clusters)):
-                rows_of[clu][node].append(i)
-            Bmax = _pow2(max(len(r) for kr in rows_of for r in kr))
-            queries = np.zeros((K, N, Bmax, self.key_dim), np.float32)
-            qmask = np.zeros((K, N, Bmax), bool)
-            for k in range(K):
-                for g in range(N):
-                    rows = rows_of[k][g]
-                    queries[k, g, :len(rows)] = desc[rows]
-                    qmask[k, g, :len(rows)] = True
-            fres = self.sem_fed.lookup_grouped(queries, qmask)
-            self.dispatches["lookup"] += 1
-            hit = np.zeros((n,), bool)
-            tier = np.full((n,), TIER_MISS, np.int8)
-            value = np.zeros((n, self.cfg.max_new_tokens), np.int32)
-            for k in range(K):
-                for g in range(N):
-                    rows = rows_of[k][g]
-                    if not rows:
-                        continue
-                    hit[rows] = fres.hit[k, g, :len(rows)]
-                    tier[rows] = fres.tier[k, g, :len(rows)]
-                    value[rows] = fres.value[k, g, :len(rows)]
-        elif self.sem_cluster is not None:
-            G = self.sem_cluster.cfg.num_nodes
-            rows_of = [[] for _ in range(G)]
-            for i, node in enumerate(nodes):
-                rows_of[node].append(i)
-            Bmax = _pow2(max(len(r) for r in rows_of))
-            queries = np.zeros((G, Bmax, self.key_dim), np.float32)
-            mask = np.zeros((G, Bmax), bool)
-            for g, rows in enumerate(rows_of):
-                queries[g, :len(rows)] = desc[rows]
-                mask[g, :len(rows)] = True
-            cres = self.sem_cluster.lookup_grouped(jnp.asarray(queries), mask)
-            self.dispatches["lookup"] += 1
-            hit = np.concatenate([cres.hit[g][:len(r)]
-                                  for g, r in enumerate(rows_of)])
-            tier = np.concatenate([cres.tier[g][:len(r)]
-                                   for g, r in enumerate(rows_of)])
-            value = np.concatenate([cres.value[g][:len(r)]
-                                    for g, r in enumerate(rows_of)])
-            order = np.concatenate([np.array(r, np.int64)
-                                    for r in rows_of]).astype(np.int64)
-            inv = np.empty_like(order)
-            inv[order] = np.arange(n)
-            hit, tier, value = hit[inv], tier[inv], value[inv]
-        else:
-            Qb = _pow2(n)
-            qpad = np.zeros((Qb, self.key_dim), np.float32)
-            qpad[:n] = desc
-            qmask = np.zeros((Qb,), bool)
-            qmask[:n] = True
-            self.sem_state, res = self.semantic.lookup(
-                self.sem_state, jnp.asarray(qpad), jnp.asarray(qmask))
-            self.dispatches["lookup"] += 1
-            hit = np.asarray(res.hit)[:n]
-            value = np.asarray(res.value)[:n]
-            tier = np.where(hit, TIER_LOCAL, TIER_MISS).astype(np.int8)
+        res = route_flat(self.sem_org, desc, nodes, clusters)
+        self.dispatches["lookup"] += 1
         lookup_ms = (time.perf_counter() - t0) * 1e3
+        tier, value = res.tier, res.value
+        hit = tier != TIER_MISS
 
         # every local miss (peer hit or cloud miss) shares ONE peer
         # descriptor broadcast — per CLUSTER: each metro's LAN broadcast
         # carries only its own misses; everything escalating past the peer
         # tier shares that home cluster's ONE metro->region digest message;
         # local hits share the step's single descriptor + lookup dispatch
-        tier_np = np.asarray(tier)
         clus_np = np.asarray(clusters)
-        n_local_miss = int((tier_np != TIER_LOCAL).sum())
-        lm = {0: n_local_miss}
-        esc = {}
-        fed_peer_on = False
-        if self.sem_fed is not None:
-            lm = {k: int(((tier_np != TIER_LOCAL) & (clus_np == k)).sum())
-                  for k in set(clusters)}
-            esc = {k: int(((tier_np >= FED_REMOTE) & (clus_np == k)).sum())
-                   for k in set(clusters)}
-            fed_peer_on = (self.sem_fed.cfg.cluster.share
-                           and self.sem_fed.cfg.cluster.num_nodes > 1)
+        lm = {k: int(((tier != TIER_LOCAL) & (clus_np == k)).sum())
+              for k in set(clusters)}
+        esc = {k: int(((tier >= TIER_REMOTE) & (clus_np == k)).sum())
+               for k in set(clusters)} if self._region_on else {}
         for i, (rid, prompt, node, clu) in enumerate(batch):
             if hit[i]:
                 toks = np.asarray(value[i], np.int32)
-                if tier[i] == TIER_PEER:
-                    lat = self.router.peer_hit_latency(
-                        desc_ms / n, lookup_ms / n,
-                        batch=max(1, lm.get(clu, n_local_miss)))
-                    src = "peer"
-                elif self.sem_fed is not None and tier[i] == FED_REMOTE:
-                    lat = self.router.remote_hit_latency(
-                        desc_ms / n, lookup_ms / n,
-                        peer_net_ms=(self.router.peer_broadcast_ms(lm[clu])
-                                     if fed_peer_on else 0.0),
-                        batch=max(1, esc[clu]))
-                    src = "remote"
-                else:
-                    lat = self.router.hit_latency(desc_ms / n, lookup_ms / n,
-                                                  batch=n)
-                    src = "edge"
+                t = int(tier[i])
+                name = TIER_NAMES[t]
+                src = SOURCE_OF[name]
+                amort = {TIER_LOCAL: n, TIER_PEER: max(1, lm[clu]),
+                         TIER_REMOTE: max(1, esc.get(clu, 0))}[t]
+                lat = self.router.tier_latency(
+                    name, desc_ms / n, lookup_ms / n, batch=amort,
+                    peer_net_ms=(self.router.peer_broadcast_ms(lm[clu])
+                                 if t == TIER_REMOTE and self._peer_on
+                                 else 0.0))
                 self._t_submit.pop(rid, None)
                 lat.deadline_ms = self._deadline.get(rid)
                 modeled_ms = lat.total_ms
@@ -603,9 +543,25 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def _advance_chunks(self) -> None:
         """One ``prefill_chunk``-token dispatch per in-flight long prompt
-        per step — the trickle that lets other admissions interleave."""
-        for st in list(self.chunking.values()):
+        per step — the trickle that lets other admissions interleave.
+        With ``chunk_pacing > 1`` and an otherwise-idle engine (free decode
+        slots, empty admission queue) each prompt may advance up to
+        ``chunk_pacing`` chunks this step, most-urgent (EDF key) first —
+        idle steps finish long prompts sooner without ever delaying an
+        admission or changing decoded tokens."""
+        # EDF order so any extra pacing budget goes to the most urgent
+        sts = sorted(self.chunking.values(),
+                     key=lambda st: self._queue_key((st.req_id,)))
+        for st in sts:
             self._advance_chunk(st)
+        if self.cfg.chunk_pacing <= 1:
+            return
+        for st in sts:
+            for _ in range(self.cfg.chunk_pacing - 1):
+                if (st.req_id not in self.chunking or self.queue
+                        or not self.free_slots):
+                    break
+                self._advance_chunk(st)
 
     def _advance_chunk(self, st: _Chunking) -> None:
         """Feed the next chunk of ``st``'s prompt through
@@ -660,16 +616,8 @@ class ServingEngine:
             desc = self._desc_of.pop(a.req_id)
             pad = np.zeros((self.cfg.max_new_tokens,), np.int32)
             pad[:len(toks)] = toks
-            if self.sem_fed is not None:
-                self.sem_fed.insert(clu, node, jnp.asarray(desc[None, :]),
-                                    jnp.asarray(pad[None, :]))
-            elif self.sem_cluster is not None:
-                self.sem_cluster.insert(node, jnp.asarray(desc[None, :]),
-                                        jnp.asarray(pad[None, :]))
-            else:
-                self.sem_state = self.semantic.insert(
-                    self.sem_state, jnp.asarray(desc[None, :]),
-                    jnp.asarray(pad[None, :]))
+            self.sem_org.insert_home(clu, node, jnp.asarray(desc[None, :]),
+                                     jnp.asarray(pad[None, :]))
 
     # ------------------------------------------------------------------
     def step(self) -> None:
@@ -721,8 +669,16 @@ class ServingEngine:
         }
         if self.sem_fed is not None:
             out["semantic"] = self.sem_fed.stats()
-        elif self.sem_cluster is not None:
+        elif self.sem_cluster is not None and self.coic_cfg.num_nodes > 1:
             out["semantic"] = self.sem_cluster.stats()
-        elif self.semantic is not None:
-            out["semantic"] = self.semantic.stats(self.sem_state)
+        elif self.sem_cluster is not None:
+            # solo cache: the flat per-shard stats shape, as ever
+            out["semantic"] = self.semantic.stats(self.sem_cluster.states[0])
+        if self.sem_org is not None:
+            # the uniform per-tier dispatch/digest block (same shape for
+            # solo / cluster / federation configs — satellite)
+            out["ladder"] = self.sem_org.ladder.stats()
+            out["digest"] = (self.sem_fed.digest_stats()
+                             if self.sem_fed is not None
+                             else EMPTY_DIGEST_STATS)
         return out

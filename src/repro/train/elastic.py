@@ -19,17 +19,16 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
-import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.data.pipeline import SyntheticLMData, shard_batch
 from repro.launch.mesh import make_mesh
 from repro.parallel.sharding import RULES_TRAIN, set_activation_sharder
-from repro.train.trainer import (TrainerConfig, TrainState, make_train_step,
-                                 make_optimizer)
+from repro.train.trainer import (TrainerConfig, TrainState,
+                                 make_train_step)
 
 
 class SimulatedFailure(Exception):

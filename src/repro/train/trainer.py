@@ -16,7 +16,6 @@ from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.optim.adamw import AdamW, AdamWConfig, OptState
 from repro.optim.schedule import cosine_with_warmup

@@ -10,8 +10,8 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core.cluster import (TIER_LOCAL, TIER_MISS, TIER_PEER,
-                                ClusterConfig, CooperativeEdgeCluster)
+from repro.core.cluster import (TIER_LOCAL, TIER_PEER, ClusterConfig,
+                                CooperativeEdgeCluster)
 from repro.data.workload import ZipfWorkload
 from repro.kernels.similarity import (similarity_topk_batched,
                                       similarity_topk_batched_ref)

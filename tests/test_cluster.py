@@ -7,11 +7,9 @@ be exercised, not skipped)."""
 import numpy as np
 import pytest
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.cluster import (TIER_LOCAL, TIER_MISS, TIER_PEER,
-                                ClusterConfig, CooperativeEdgeCluster)
+from repro.core.cluster import ClusterConfig, CooperativeEdgeCluster
 from repro.core.policies import EvictionPolicy
 from repro.core.semantic_cache import SemanticCache
 from repro.kernels.similarity import similarity_topk

@@ -1,5 +1,4 @@
 """Config integrity: every assigned arch loads with its published numbers."""
-import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, SHAPES, get_config, reduced_config, supports_cell
@@ -96,8 +95,6 @@ def test_reduced_config_same_family(arch):
 
 def test_param_counts_match_billing():
     """Sanity: full-config parameter counts are near the advertised sizes."""
-    import jax
-
     expect = {"llama32_1b": (1.0e9, 1.7e9), "qwen2_72b": (70e9, 80e9),
               "mamba2_2p7b": (2.4e9, 3.0e9), "granite_20b": (18e9, 22e9)}
     for arch, (lo, hi) in expect.items():

@@ -32,12 +32,12 @@ def _prompts(vocab, lens, seed=0):
 
 
 def _serve(model, params, prompts, deadlines=None, priorities=None,
-           policy="edf", max_batch=2, max_new=4, chunk=0, step_ms=0.0,
-           coic=None):
+           policy="edf", max_batch=2, max_new=4, chunk=0, pacing=1,
+           step_ms=0.0, coic=None):
     eng = ServingEngine(model, params, ServingConfig(
         max_batch=max_batch, max_len=96, max_new_tokens=max_new,
-        queue_policy=policy, prefill_chunk=chunk, step_ms=step_ms,
-        coic=coic))
+        queue_policy=policy, prefill_chunk=chunk, chunk_pacing=pacing,
+        step_ms=step_ms, coic=coic))
     for i, p in enumerate(prompts):
         eng.submit(p,
                    priority=(priorities[i] if priorities else 0),
@@ -202,6 +202,40 @@ def test_chunked_long_prompt_does_not_stall_shorts(fp32_model):
     eng = _serve(model, params, prompts, chunk=8, max_batch=2, max_new=4)
     res = _result_map(eng)
     assert max(res[r][2] for r in (1, 2, 3)) < res[0][2]
+
+
+def test_chunk_pacing_never_changes_tokens(fp32_model):
+    """Priority-aware chunk pacing (multiple chunk dispatches per step
+    while slots sit idle) must decode exactly the fixed-trickle tokens —
+    pacing changes WHEN prefill work happens, never its result — and the
+    paced long prompt must finish no later."""
+    cfg, model, params = fp32_model
+    prompts = _prompts(cfg.vocab_size, [64, 12, 12])
+    e_slow = _serve(model, params, prompts, chunk=8, pacing=1,
+                    max_batch=4, max_new=6)
+    e_fast = _serve(model, params, prompts, chunk=8, pacing=4,
+                    max_batch=4, max_new=6)
+    slow, fast = _result_map(e_slow), _result_map(e_fast)
+    for rid in slow:
+        assert slow[rid][1] == fast[rid][1], rid      # identical tokens
+    assert fast[0][2] <= slow[0][2]                   # long prompt no later
+    # the paced engine really advanced multiple chunks in one step: fewer
+    # steps elapsed before the long prompt's slot activated
+    assert e_fast.dispatches["prefill_chunk"] == \
+        e_slow.dispatches["prefill_chunk"]            # same total chunk work
+
+
+def test_chunk_pacing_defers_to_queued_admissions(fp32_model):
+    """Pacing only spends IDLE capacity: with an admission backlog wider
+    than the slot count, the paced engine behaves exactly like the fixed
+    trickle (no queued request waits on an extra chunk dispatch)."""
+    cfg, model, params = fp32_model
+    prompts = _prompts(cfg.vocab_size, [64, 12, 12, 12, 12, 12])
+    e_slow = _serve(model, params, prompts, chunk=8, pacing=1,
+                    max_batch=2, max_new=4)
+    e_fast = _serve(model, params, prompts, chunk=8, pacing=4,
+                    max_batch=2, max_new=4)
+    assert _result_map(e_slow) == _result_map(e_fast)
 
 
 def test_ladder_bound_under_edf_and_chunking(fp32_model):

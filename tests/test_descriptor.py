@@ -1,5 +1,4 @@
 """Feature descriptors: unit norm, determinism, semantic behaviour."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 

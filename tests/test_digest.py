@@ -1,0 +1,346 @@
+"""Quantized delta-digest subsystem: int8 round-trip bounds, push-on-delta
+exact reconstruction, int8-probing-under-reports-only (subset of fp32
+hit-for-hit), shipped-bytes accounting, and region-aware eviction.
+
+Seeded-random sequences run directly (no ``hypothesis`` dependency — the
+container may not ship it); ``test_federation_properties.py`` holds the
+hypothesis variants."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.cluster import ClusterConfig
+from repro.core.digest import (DigestConfig, DigestPublisher,
+                               RegionDigestBoard, dequantize_rows,
+                               quantize_rows, region_pin_mask)
+from repro.core.federation import (TIER_MISS, TIER_REMOTE, FederatedEdgeTier,
+                                   FederationConfig)
+from repro.core.policies import EvictionPolicy
+from repro.core.router import PayloadSizes, TwoTierRouter
+from repro.core.network import NetworkModel
+
+
+def _unit(rng, n, d):
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def _fed(clusters=2, nodes=1, cap=8, d=32, p=4, tau=0.9, digest_size=None,
+         digest_interval=1, quant="fp32", refresh="full",
+         admission="never", policy=EvictionPolicy("lru")):
+    return FederatedEdgeTier(FederationConfig(
+        num_clusters=clusters, digest_size=digest_size or nodes * cap,
+        digest_interval=digest_interval, digest_quant=quant,
+        digest_refresh=refresh,
+        cluster=ClusterConfig(num_nodes=nodes, node_capacity=cap, key_dim=d,
+                              payload_dim=p, threshold=tau, policy=policy,
+                              admission=admission)))
+
+
+# ---------------------------------------------------------------------------
+# int8 round trip
+# ---------------------------------------------------------------------------
+
+
+class TestQuantization:
+    @pytest.mark.parametrize("seed", range(3))
+    def test_roundtrip_error_bounded(self, seed):
+        """Per-component error <= scale/2 (symmetric rounding), and the
+        cosine of a unit row with its dequantized self stays near 1."""
+        rng = np.random.default_rng(seed)
+        keys = _unit(rng, 16, 64)
+        codes, scales = quantize_rows(keys)
+        deq = dequantize_rows(codes, scales)
+        err = np.abs(deq - keys)
+        assert (err <= scales[:, None] / 2 + 1e-7).all()
+        cos = (deq * keys).sum(-1) / np.maximum(
+            np.linalg.norm(deq, axis=-1), 1e-9)
+        assert (cos > 0.995).all()
+
+    def test_zero_rows_stable(self):
+        codes, scales = quantize_rows(np.zeros((4, 8), np.float32))
+        assert (codes == 0).all() and (scales == 0).all()
+        assert (dequantize_rows(codes, scales) == 0).all()
+
+    def test_codes_in_int8_range(self):
+        rng = np.random.default_rng(7)
+        keys = rng.standard_normal((8, 32)).astype(np.float32) * 100
+        codes, _ = quantize_rows(keys)
+        assert codes.dtype == np.int8
+        assert codes.min() >= -127 and codes.max() <= 127
+
+
+# ---------------------------------------------------------------------------
+# push-on-delta refresh: exact reconstruction, fewer bytes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("quant", ["fp32", "int8"])
+@pytest.mark.parametrize("seed", range(4))
+def test_delta_reconstructs_full_refresh_state(quant, seed):
+    """After ANY interleaving of updates, the delta board's probe state is
+    bit-identical to the full-refresh board's, and a delta refresh never
+    ships more than the full refresh."""
+    rng = np.random.default_rng(seed)
+    M, D = 8, 16
+
+    def mk(r):
+        return (DigestPublisher(DigestConfig(M, quant, r), D),
+                RegionDigestBoard(DigestConfig(M, quant, r), 1, D))
+
+    pub_f, board_f = mk("full")
+    pub_d, board_d = mk("delta")
+
+    keys = _unit(rng, M, D)
+    valid = np.ones((M,), bool)
+    for step in range(12):
+        # random interleaving: mutate a random subset of rows, flip some
+        # validity, occasionally change nothing at all
+        if step and rng.random() < 0.3:
+            pass                                     # no-op refresh
+        else:
+            rows = rng.random(M) < rng.random()
+            keys[rows] = _unit(rng, int(rows.sum()), D) if rows.any() else \
+                keys[rows]
+            valid ^= rng.random(M) < 0.2
+        board_f.apply(0, pub_f.publish(keys.copy(), valid.copy()))
+        board_d.apply(0, pub_d.publish(keys.copy(), valid.copy()))
+        np.testing.assert_array_equal(board_d.valid, board_f.valid)
+        if quant == "int8":
+            np.testing.assert_array_equal(board_d.codes, board_f.codes)
+            np.testing.assert_array_equal(board_d.scales, board_f.scales)
+        else:
+            np.testing.assert_array_equal(board_d.keys, board_f.keys)
+        np.testing.assert_array_equal(board_d.probe_keys(),
+                                      board_f.probe_keys())
+    assert board_d.bytes_shipped <= board_f.bytes_shipped
+    assert board_d.rows_shipped <= board_f.rows_shipped
+
+
+def test_noop_refresh_ships_zero_delta_bytes():
+    """An unchanged top-M set ships nothing under push-on-delta (the
+    ROADMAP follow-on this subsystem closes) — and M rows under full."""
+    M, D = 4, 8
+    rng = np.random.default_rng(0)
+    keys = _unit(rng, M, D)
+    valid = np.ones((M,), bool)
+    pub = DigestPublisher(DigestConfig(M, "int8", "delta"), D)
+    first = pub.publish(keys, valid)
+    assert first.bytes > 0                           # cold start ships all
+    second = pub.publish(keys, valid)
+    assert second.bytes == 0 and len(second.rows) == 0
+    pub_full = DigestPublisher(DigestConfig(M, "int8", "full"), D)
+    pub_full.publish(keys, valid)
+    assert pub_full.publish(keys, valid).bytes > 0
+
+
+def test_int8_row_bytes_smaller():
+    D = 128
+    assert DigestConfig(8, "int8", "full").row_bytes(D) == D + 4
+    assert DigestConfig(8, "fp32", "full").row_bytes(D) == 4 * D
+    r = TwoTierRouter(NetworkModel(), PayloadSizes(1, 1, 1))
+    assert r.digest_ship_ms(4 * D) > r.digest_ship_ms(D + 4) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# int8 digest probing only under-reports (subset of fp32, hit-for-hit)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_int8_remote_hits_subset_of_fp32(seed):
+    """Same shard contents, fresh full-width digests: every request the
+    int8-digest tier serves remotely is also served remotely by the
+    fp32-digest tier with the same payload, and int8 demotions land on the
+    cloud path (TIER_MISS) — never a wrong payload (the full-precision
+    confirm gates both)."""
+    rng = np.random.default_rng(seed)
+    K, N, cap, d, p, tau = 3, 2, 8, 32, 4, 0.85
+    pool = _unit(rng, 24, d)
+    pay = rng.standard_normal((24, p)).astype(np.float32)
+    feds = {q: _fed(clusters=K, nodes=N, cap=cap, d=d, p=p, tau=tau,
+                    quant=q, admission="never") for q in ("fp32", "int8")}
+    # identical contents in both tiers (inserts only — no serve divergence)
+    for k in range(K):
+        for n in range(N):
+            ids = rng.integers(0, 24, size=cap // 2)
+            for fed in feds.values():
+                fed.insert(k, n, jnp.asarray(pool[ids]),
+                           jnp.asarray(pay[ids]))
+
+    for _ in range(6):
+        B = int(rng.integers(1, 5))
+        qids = rng.integers(0, 24, size=(K, N, B))
+        queries = pool[qids]
+        res = {q: fed.lookup_grouped(queries) for q, fed in feds.items()}
+        r8, r32 = res["int8"], res["fp32"]
+        remote8 = r8.tier == TIER_REMOTE
+        remote32 = r32.tier == TIER_REMOTE
+        # subset hit-for-hit: int8 remote rows are fp32 remote rows
+        assert (remote32 | ~remote8).all(), (r8.tier, r32.tier)
+        if remote8.any():
+            np.testing.assert_allclose(r8.value[remote8],
+                                       pay[qids[remote8]], rtol=1e-5)
+        # a demotion is a recoverable miss, never a phantom payload
+        demoted = remote32 & ~remote8
+        if demoted.any():
+            assert (r8.tier[demoted] == TIER_MISS).all()
+            assert (r8.value[demoted] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: int8 + delta matches fp32 + full hit rate at a fraction of
+# the shipped bytes (the benchmark acceptance at unit scale)
+# ---------------------------------------------------------------------------
+
+
+def test_delta_int8_bytes_reduction_at_equal_hit_rate():
+    from repro.data.workload import RoamingWorkload
+
+    def drive(quant, refresh):
+        wl = RoamingWorkload(num_clusters=3, nodes_per_cluster=2,
+                             users_per_node=4, pool_size=48, dim=128,
+                             payload_dim=4, mobility=0.3, seed=0)
+        fed = _fed(clusters=3, nodes=2, cap=12, d=128, p=4, tau=0.9,
+                   digest_size=32, digest_interval=4, quant=quant,
+                   refresh=refresh, admission="always")
+        n_req = n_hit = 0
+        for round_ in wl.stream(16, seed=1):
+            Bmax = max(len(ids) for _, _, ids, _ in round_)
+            Bmax = 1 << (Bmax - 1).bit_length()
+            q = np.zeros((3, 2, Bmax, 128), np.float32)
+            m = np.zeros((3, 2, Bmax), bool)
+            for k, n, ids, desc in round_:
+                q[k, n, :len(ids)] = desc
+                m[k, n, :len(ids)] = True
+            res = fed.lookup_grouped(q, m)
+            for k, n, ids, desc in round_:
+                t = res.tier[k, n, :len(ids)]
+                miss = t == TIER_MISS
+                if miss.any():
+                    fed.insert(k, n, desc[miss], wl.payloads[ids[miss]])
+                n_req += len(ids)
+                n_hit += int((t != TIER_MISS).sum())
+        return n_hit / n_req, fed.digest_bytes_shipped
+
+    rate_base, bytes_base = drive("fp32", "full")
+    rate_best, bytes_best = drive("int8", "delta")
+    assert abs(rate_best - rate_base) <= 0.01, (rate_base, rate_best)
+    assert bytes_base >= 4 * bytes_best, (bytes_base, bytes_best)
+
+
+# ---------------------------------------------------------------------------
+# region-aware eviction
+# ---------------------------------------------------------------------------
+
+
+class TestRegionAwareEviction:
+    def test_pin_mask_marks_last_hot_copy_only(self):
+        rng = np.random.default_rng(3)
+        d = 16
+        keys = _unit(rng, 3, d)
+        valid = np.ones((3,), bool)
+        peer_served = np.array([2, 0, 2])
+        # entry 2 is also advertised by another cluster; entry 0 is not
+        pin = region_pin_mask(keys, valid, peer_served, keys[2:3], 0.95)
+        np.testing.assert_array_equal(pin, [True, False, False])
+        # nobody else advertises anything: every hot entry is a last copy
+        pin = region_pin_mask(keys, valid, peer_served, None, 0.95)
+        np.testing.assert_array_equal(pin, [True, False, True])
+
+    def test_multiply_advertised_entry_keeps_one_pin(self):
+        """Both clusters hold and advertise the same region-hot entry: the
+        tie-break (defer only to lower-id advertisers) pins the copy in
+        the LOWEST advertising cluster, so at least one copy stays
+        protected — symmetric unpinning would leave none."""
+        import dataclasses
+
+        rng = np.random.default_rng(6)
+        d, p = 32, 4
+        key = _unit(rng, 1, d)
+        fed = _fed(clusters=2, nodes=1, cap=2, d=d, p=p, digest_interval=1,
+                   admission="never",
+                   policy=EvictionPolicy("lru", region_aware=True))
+        for k in (0, 1):
+            fed.insert(k, 0, jnp.asarray(key), jnp.zeros((1, p), jnp.float32))
+            # the copy earned remote demand earlier (e.g. before the other
+            # cluster admitted its replica)
+            st = fed.clusters[k].states[0]
+            fed.clusters[k].states[0] = dataclasses.replace(
+                st, peer_served=st.peer_served.at[0].add(2))
+        fed.lookup(0, 0, _unit(rng, 1, d))            # refresh tick
+        pin0 = bool(np.asarray(fed.clusters[0].states[0].region_pin)[0])
+        pin1 = bool(np.asarray(fed.clusters[1].states[0].region_pin)[0])
+        assert pin0 and not pin1, (pin0, pin1)
+
+    def test_hot_holder_pins_despite_cold_lower_replica(self):
+        """A cold (never remote-served) replica at a lower-id cluster must
+        NOT strip the region-hot holder's pin: deferral is only to copies
+        that are themselves pinned, so the entry is protected somewhere."""
+        import dataclasses
+
+        rng = np.random.default_rng(7)
+        d, p = 32, 4
+        key = _unit(rng, 1, d)
+        fed = _fed(clusters=2, nodes=1, cap=2, d=d, p=p, digest_interval=1,
+                   admission="never",
+                   policy=EvictionPolicy("lru", region_aware=True))
+        for k in (0, 1):
+            fed.insert(k, 0, jnp.asarray(key), jnp.zeros((1, p), jnp.float32))
+        st = fed.clusters[1].states[0]           # only cluster 1 is hot
+        fed.clusters[1].states[0] = dataclasses.replace(
+            st, peer_served=st.peer_served.at[0].add(2))
+        fed.lookup(0, 0, _unit(rng, 1, d))            # refresh tick
+        assert not bool(np.asarray(fed.clusters[0].states[0].region_pin)[0])
+        assert bool(np.asarray(fed.clusters[1].states[0].region_pin)[0])
+
+    def test_region_hot_last_copy_survives_eviction(self):
+        """FIFO ties: without region_aware the lower slot (A) is evicted;
+        with it, A — remote-served and advertised nowhere else — is pinned
+        and B goes instead."""
+        rng = np.random.default_rng(4)
+        d, p = 32, 4
+        pool = _unit(rng, 3, d)
+        for region_aware, survivor in ((True, 0), (False, 1)):
+            fed = _fed(clusters=2, nodes=1, cap=2, d=d, p=p,
+                       digest_interval=1, admission="never",
+                       policy=EvictionPolicy("fifo",
+                                             region_aware=region_aware))
+            fed.insert(0, 0, jnp.asarray(pool[:2]),       # A=0, B=1, same
+                       jnp.zeros((2, p), jnp.float32))    # insert clock
+            # remote-serve A for cluster 1 (touch -> peer_served), then a
+            # second lookup triggers the refresh that computes the pins
+            assert fed.lookup(1, 0, pool[:1]).tier[0] == TIER_REMOTE
+            fed.lookup(1, 0, pool[2:3])                   # refresh tick
+            if region_aware:
+                assert bool(np.asarray(
+                    fed.clusters[0].states[0].region_pin)[0])
+            fed.insert(0, 0, jnp.asarray(pool[2:]),
+                       jnp.ones((1, p), jnp.float32))
+            res = fed.lookup(0, 0, pool)
+            assert bool(res.hit[survivor]) and bool(res.hit[2]), \
+                (region_aware, res.tier)
+            assert not res.hit[1 - survivor], (region_aware, res.tier)
+
+
+# ---------------------------------------------------------------------------
+# stats plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_digest_stats_exposed_uniformly():
+    rng = np.random.default_rng(5)
+    fed = _fed(clusters=2, quant="int8", refresh="delta", d=16)
+    fed.insert(0, 0, jnp.asarray(_unit(rng, 2, 16)),
+               jnp.zeros((2, 4), jnp.float32))
+    fed.lookup(1, 0, _unit(rng, 1, 16))
+    s = fed.stats()
+    dig = s["digest"]
+    assert dig["mode"] == "delta_int8"
+    assert dig["bytes_shipped"] > 0
+    assert dig["refreshes"] == fed.digest_refreshes
+    assert set(dig) >= {"mode", "size", "bytes_shipped", "rows_shipped",
+                        "updates_applied", "refreshes", "false_hits",
+                        "interval"}
+    assert s["ladder"]["max_ladder_dispatches"] <= 4

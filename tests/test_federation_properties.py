@@ -1,6 +1,6 @@
 """Property-based federation-tier invariants (hypothesis).
 
-The two digest-staleness contracts from the design:
+The digest contracts from the design:
 
 1. **Fresh-digest equivalence** — with ``digest_interval=1`` and a digest
    wide enough to carry every live entry, the remote rung is hit-for-hit
@@ -9,10 +9,18 @@ The two digest-staleness contracts from the design:
    interval, every payload served from the remote tier is a genuine
    above-threshold entry (never a phantom from a dead digest row), and the
    set of remote hits is a subset of what brute force would have served.
+3. **Quantization only under-reports** — int8 digest probing serves a
+   hit-for-hit subset of fp32 digest probing on identical state (the
+   full-precision confirm gates both; rounding can only demote a
+   near-threshold candidate to a recoverable miss).
+4. **Delta refresh is exact** — after any interleaving of updates, the
+   region replica reconstructed from push-on-delta messages is
+   bit-identical to a full refresh of the current digest.
 
-Seeded deterministic versions of (1) run in ``test_federation.py`` so the
-invariant is always exercised; this module widens the input space when
-``hypothesis`` is available."""
+Seeded deterministic versions of (1), (3), (4) run in
+``test_federation.py`` / ``test_digest.py`` so the invariants are always
+exercised; this module widens the input space when ``hypothesis`` is
+available."""
 import numpy as np
 import pytest
 
@@ -22,6 +30,8 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cluster import ClusterConfig
+from repro.core.digest import (DigestConfig, DigestPublisher,
+                               RegionDigestBoard)
 from repro.core.federation import (TIER_MISS, TIER_REMOTE, FederatedEdgeTier,
                                    FederationConfig)
 
@@ -143,3 +153,86 @@ def test_stale_digests_only_under_report(data):
     # must absorb them silently (no exception, no phantom serve)
     assert fed.digest_false_hits >= 0
     assert fed.stats()["tier_counts"]["remote"] == n_remote
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.data())
+def test_int8_digest_probing_subset_of_fp32(data):
+    """Contract (3): on identical shard contents with fresh full-width
+    digests, every request the int8-digest tier serves remotely is served
+    remotely by the fp32 tier too (same payload); int8 demotions are plain
+    misses, never wrong payloads."""
+    K = data.draw(st.integers(2, 3), label="clusters")
+    N = data.draw(st.integers(1, 2), label="nodes")
+    cap = data.draw(st.integers(2, 6), label="capacity")
+    d = 24
+    pool = _pool(data.draw(st.integers(0, 9), label="pool_seed"), 12, d)
+    pay = np.arange(12, dtype=np.float32)[:, None].repeat(3, axis=1)
+    feds = {q: _mk_quant(K, N, cap, d, 3, q) for q in ("fp32", "int8")}
+    for k in range(K):
+        for n in range(N):
+            ids = np.array(data.draw(st.lists(
+                st.integers(0, 11), min_size=1, max_size=cap),
+                label=f"fill_{k}_{n}"))
+            for fed in feds.values():
+                fed.insert(k, n, jnp.asarray(pool[ids]),
+                           jnp.asarray(pay[ids]))
+    for _ in range(data.draw(st.integers(1, 3), label="rounds")):
+        qids = np.array(data.draw(st.lists(
+            st.integers(0, 11), min_size=K * N, max_size=K * N),
+            label="qids")).reshape(K, N, 1)
+        queries = pool[qids]
+        res = {q: fed.lookup_grouped(queries) for q, fed in feds.items()}
+        remote8 = res["int8"].tier == TIER_REMOTE
+        remote32 = res["fp32"].tier == TIER_REMOTE
+        assert (remote32 | ~remote8).all()
+        if remote8.any():
+            np.testing.assert_allclose(res["int8"].value[remote8],
+                                       pay[qids[remote8]], rtol=1e-5)
+        demoted = remote32 & ~remote8
+        if demoted.any():
+            assert (res["int8"].tier[demoted] == TIER_MISS).all()
+            assert (res["int8"].value[demoted] == 0).all()
+
+
+def _mk_quant(K, N, cap, d, p, quant):
+    return FederatedEdgeTier(FederationConfig(
+        num_clusters=K, digest_size=N * cap, digest_interval=1,
+        digest_quant=quant,
+        cluster=ClusterConfig(num_nodes=N, node_capacity=cap, key_dim=d,
+                              payload_dim=p, threshold=TAU,
+                              admission="never")))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_delta_refresh_reconstructs_full_state(data):
+    """Contract (4): after any interleaving of row mutations, validity
+    flips, and no-op refreshes, the delta-reconstructed region replica is
+    bit-identical to the full-refresh replica, and never ships more."""
+    quant = data.draw(st.sampled_from(["fp32", "int8"]), label="quant")
+    M = data.draw(st.integers(1, 8), label="M")
+    D = data.draw(st.sampled_from([4, 16]), label="D")
+    pub_f = DigestPublisher(DigestConfig(M, quant, "full"), D)
+    board_f = RegionDigestBoard(DigestConfig(M, quant, "full"), 1, D)
+    pub_d = DigestPublisher(DigestConfig(M, quant, "delta"), D)
+    board_d = RegionDigestBoard(DigestConfig(M, quant, "delta"), 1, D)
+    rng = np.random.default_rng(data.draw(st.integers(0, 99), label="seed"))
+    keys = np.zeros((M, D), np.float32)
+    valid = np.zeros((M,), bool)
+    for step in range(data.draw(st.integers(1, 8), label="steps")):
+        action = data.draw(st.sampled_from(["mutate", "flip", "noop"]),
+                           label=f"a{step}")
+        if action == "mutate":
+            rows = rng.random(M) < 0.6
+            keys[rows] = rng.standard_normal(
+                (int(rows.sum()), D)).astype(np.float32)
+            valid[rows] = True
+        elif action == "flip":
+            valid ^= rng.random(M) < 0.5
+        board_f.apply(0, pub_f.publish(keys.copy(), valid.copy()))
+        board_d.apply(0, pub_d.publish(keys.copy(), valid.copy()))
+        np.testing.assert_array_equal(board_d.valid, board_f.valid)
+        np.testing.assert_array_equal(board_d.probe_keys(),
+                                      board_f.probe_keys())
+    assert board_d.bytes_shipped <= board_f.bytes_shipped

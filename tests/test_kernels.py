@@ -1,7 +1,6 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs the ref.py
 pure-jnp oracle.  interpret mode executes the kernel body in Python on CPU,
 validating BlockSpec indexing, online-softmax math and masking."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

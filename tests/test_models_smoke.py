@@ -1,7 +1,6 @@
 """Per-arch smoke tests (deliverable f): reduced same-family config, one
 forward/train step on CPU, asserting output shapes + no NaNs."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,6 +1,4 @@
 """Two-tier router latency accounting (paper Fig-1 flow)."""
-import numpy as np
-
 from repro.core.network import Link, NetworkModel
 from repro.core.router import PayloadSizes, TwoTierRouter
 

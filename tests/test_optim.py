@@ -6,7 +6,7 @@ import pytest
 
 from repro.optim.adamw import AdamW, AdamWConfig
 from repro.optim.grad_compress import (ef_int8_compress, ef_int8_decompress,
-                                       init_compression_state, topk_compress)
+                                       topk_compress)
 from repro.optim.schedule import cosine_with_warmup
 
 

@@ -1,5 +1,4 @@
 """Property-based tests of the CoIC semantic cache invariants (hypothesis)."""
-import dataclasses
 
 import jax.numpy as jnp
 import numpy as np

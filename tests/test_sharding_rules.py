@@ -1,9 +1,5 @@
 """Sharding-rule resolution: divisibility, axis conflicts, fallbacks."""
-import subprocess
-import sys
-
 import jax
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

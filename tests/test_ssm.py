@@ -1,6 +1,5 @@
 """Mamba-2 SSD: the chunked scan must equal the naive per-step recurrence,
 for any chunk size, and the decode step must continue the state exactly."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -61,13 +60,15 @@ def test_chunk_size_invariance(nprng):
 def test_initial_state_continuation(nprng):
     """ssd(x, h0=ssd(x1).h) == ssd([x1; x2]) on the second half."""
     B_, L, H, P, G, N = 1, 16, 2, 4, 1, 4
-    mk = lambda *s: nprng.standard_normal(s).astype(np.float32)
+    def mk(*s):
+        return nprng.standard_normal(s).astype(np.float32)
     x = mk(B_, L, H, P)
     dt = np.abs(mk(B_, L, H)) * 0.4
     a = -np.abs(mk(H))
     b = mk(B_, L, G, N)
     c = mk(B_, L, G, N)
-    j = lambda v: jnp.asarray(v)
+    def j(v):
+        return jnp.asarray(v)
     y_full, h_full = ssd_chunked(j(x), j(dt), j(a), j(b), j(c), 8)
     half = L // 2
     y1, h1 = ssd_chunked(j(x[:, :half]), j(dt[:, :half]), j(a),

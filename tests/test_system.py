@@ -8,7 +8,6 @@ The claims under test:
         (Fig 2b).
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

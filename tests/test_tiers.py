@@ -1,0 +1,187 @@
+"""Unified tier-ladder protocol: canonical codes, the ≤4-dispatch bound
+pinned through ``TierLadder`` counters, org-level CacheTier composition,
+and the uniform per-tier stats shape across solo / cluster / federation
+configs in both engines."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.cluster import ClusterConfig, CooperativeEdgeCluster
+from repro.core.coic import CoICConfig, CoICEngine, recognition_cloud_fn
+from repro.core.federation import FederatedEdgeTier, FederationConfig
+from repro.core.tiers import (TIER_LOCAL, TIER_MISS, TIER_NAMES, TIER_PEER,
+                              TIER_REMOTE, TierLadder, route_flat)
+from repro.serving.engine import ServingConfig, ServingEngine
+
+
+def _unit(rng, n, d):
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+LADDER_KEYS = {"tier_counts", "rung_dispatches", "probe_dispatches",
+               "last_ladder_dispatches", "max_ladder_dispatches"}
+
+
+def test_canonical_tier_codes_shared_across_layers():
+    from repro.core import cluster as cl, federation as fed
+    assert (TIER_LOCAL, TIER_PEER, TIER_REMOTE, TIER_MISS) == (0, 1, 2, 3)
+    assert TIER_NAMES == ("local", "peer", "remote", "miss")
+    assert (cl.TIER_LOCAL, cl.TIER_PEER, cl.TIER_MISS) == (0, 1, 3)
+    assert (fed.TIER_LOCAL, fed.TIER_PEER, fed.TIER_REMOTE,
+            fed.TIER_MISS) == (0, 1, 2, 3)
+
+
+def test_ladder_bound_pinned_through_tierladder():
+    """Regression for the ≤4 federation bound, now read off the shared
+    TierLadder rather than bespoke per-layer counters: every rung is one
+    batched dispatch (remote: probe + confirm) whatever K is."""
+    rng = np.random.default_rng(0)
+    d, p = 32, 4
+    pool = _unit(rng, 16, d)
+    for K in (2, 4):
+        fed = FederatedEdgeTier(FederationConfig(
+            num_clusters=K, digest_interval=1,
+            cluster=ClusterConfig(num_nodes=2, node_capacity=8, key_dim=d,
+                                  payload_dim=p, threshold=0.9)))
+        for k in range(K):
+            fed.insert(k, 0, jnp.asarray(pool[k:k + 4]),
+                       jnp.zeros((4, p), jnp.float32))
+        B = 4
+        queries = pool[rng.integers(0, 16, size=(K, 2, B))]
+        fed.lookup_grouped(queries)
+        lad = fed.ladder.stats()
+        assert lad["last_ladder_dispatches"] <= 4
+        assert lad["max_ladder_dispatches"] <= 4
+        assert set(lad["rung_dispatches"]) == {"local", "peer", "remote"}
+        # every rung is at most one probe except remote's probe+confirm
+        assert lad["rung_dispatches"]["local"] == 1
+        assert lad["rung_dispatches"]["peer"] <= 1
+        assert lad["rung_dispatches"]["remote"] <= 2
+        assert set(lad["tier_counts"]) == set(TIER_NAMES)
+        assert sum(lad["tier_counts"].values()) == K * 2 * B
+
+
+def test_cluster_ladder_two_dispatch_bound():
+    rng = np.random.default_rng(1)
+    d = 32
+    cl = CooperativeEdgeCluster(ClusterConfig(
+        num_nodes=4, node_capacity=8, key_dim=d, payload_dim=2,
+        threshold=0.9))
+    cl.insert(0, jnp.asarray(_unit(rng, 4, d)),
+              jnp.zeros((4, 2), jnp.float32))
+    cl.lookup_grouped(jnp.asarray(_unit(rng, 4 * 3, d).reshape(4, 3, d)))
+    assert cl.ladder.stats()["last_ladder_dispatches"] <= 2
+
+
+def test_org_probe_is_a_cache_tier():
+    """Org-level composition: an outer TierLadder can walk a cluster org
+    directly (the CoICEngine shape, minus the cloud)."""
+    rng = np.random.default_rng(2)
+    d = 16
+    cl = CooperativeEdgeCluster(ClusterConfig(
+        num_nodes=2, node_capacity=8, key_dim=d, payload_dim=2,
+        threshold=0.9))
+    keys = _unit(rng, 4, d)
+    cl.insert(0, jnp.asarray(keys), jnp.ones((4, 2), jnp.float32))
+    outer = TierLadder([cl])
+    queries = np.zeros((1, 2, 4, d), np.float32)
+    queries[0, 1] = keys                              # node 1 asks: peer hits
+    res = outer.probe(queries, np.ones((1, 2, 4), bool), None, 2, "float32")
+    assert (res.tier[0, 1] == TIER_PEER).all()
+    assert outer.stats()["rung_dispatches"]["edge"] <= 2
+
+
+def test_route_flat_matches_grouped():
+    """route_flat (pack -> probe -> unpack) returns exactly the grouped
+    ladder's rows in submission order, mixed nodes included."""
+    rng = np.random.default_rng(3)
+    d = 32
+    mk = ClusterConfig(num_nodes=3, node_capacity=16, key_dim=d,
+                       payload_dim=2, threshold=0.9, admission="never")
+    pool = _unit(rng, 8, d)
+    cl_a, cl_b = CooperativeEdgeCluster(mk), CooperativeEdgeCluster(mk)
+    for cl in (cl_a, cl_b):
+        cl.insert(2, jnp.asarray(pool), jnp.ones((8, 2), jnp.float32))
+    nodes = [0, 2, 1, 0, 2]
+    desc = pool[[0, 1, 2, 3, 4]]
+    flat = route_flat(cl_a, desc, nodes, [0] * 5)
+    # oracle: group manually, call lookup_grouped on the twin
+    queries = np.zeros((3, 2, d), np.float32)
+    mask = np.zeros((3, 2), bool)
+    slots = {0: 0, 1: 0, 2: 0}
+    pos = {}
+    for i, g in enumerate(nodes):
+        queries[g, slots[g]] = desc[i]
+        mask[g, slots[g]] = True
+        pos[i] = (g, slots[g])
+        slots[g] += 1
+    res = cl_b.lookup_grouped(jnp.asarray(queries), mask)
+    for i, (g, b) in pos.items():
+        assert flat.tier[i] == res.tier[g, b]
+        assert flat.hit[i] == res.hit[g, b]
+        np.testing.assert_array_equal(flat.value[i], res.value[g, b])
+
+
+# ---------------------------------------------------------------------------
+# uniform stats across configs (the satellite)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("conf", [
+    dict(),                                          # solo cache
+    dict(num_nodes=2),                               # cooperative cluster
+    dict(num_nodes=2, num_clusters=2),               # federation
+])
+def test_coic_engine_ladder_stats_uniform(tiny_model, nprng, conf):
+    model, params = tiny_model
+    cloud = recognition_cloud_fn(model, params, num_classes=8)
+    eng = CoICEngine(model, params,
+                     CoICConfig(capacity=16, threshold=0.98, payload_dim=8,
+                                descriptor="sketch", descriptor_dim=64,
+                                **conf),
+                     cloud_fn=cloud)
+    toks = nprng.integers(0, model.cfg.vocab_size,
+                          size=(3, 12)).astype(np.int32)
+    eng.process_batch(toks)
+    res = eng.process_batch(toks)                     # second pass: hits
+    assert {r.source for r in res} == {"edge"}
+    s = eng.stats()
+    assert set(s["ladder"]) == LADDER_KEYS
+    assert set(s["ladder"]["tier_counts"]) == set(TIER_NAMES)
+    assert s["ladder"]["rung_dispatches"]["cloud"] == 1   # one cloud batch
+    assert s["ladder"]["max_ladder_dispatches"] <= 4
+    assert set(s["digest"]) >= {"mode", "bytes_shipped", "refreshes",
+                                "false_hits"}
+    if conf.get("num_clusters", 1) == 1:
+        assert s["digest"]["mode"] == "off"
+    assert s["deadline"]["observed"] == 0
+
+
+@pytest.mark.parametrize("conf", [
+    dict(),
+    dict(num_nodes=2),
+    dict(num_nodes=2, num_clusters=2),
+])
+def test_serving_engine_ladder_stats_uniform(tiny_model, nprng, conf):
+    model, params = tiny_model
+    eng = ServingEngine(model, params, ServingConfig(
+        max_batch=4, max_len=64, max_new_tokens=4,
+        coic=CoICConfig(capacity=16, threshold=0.98, descriptor="sketch",
+                        descriptor_dim=64, **conf)))
+    prompt = nprng.integers(0, model.cfg.vocab_size,
+                            size=(12,)).astype(np.int32)
+    eng.submit(prompt)
+    eng.run_until_drained()
+    eng.submit(prompt)
+    eng.run_until_drained()
+    assert eng.results[-1].source == "edge"
+    s = eng.stats()
+    assert set(s["ladder"]) == LADDER_KEYS
+    assert set(s["ladder"]["tier_counts"]) == set(TIER_NAMES)
+    assert s["ladder"]["max_ladder_dispatches"] <= 4
+    assert s["digest"]["mode"] == ("full_fp32"
+                                   if conf.get("num_clusters", 1) > 1
+                                   else "off")
+    assert s["semantic"]["hits"] >= 1
