@@ -14,7 +14,8 @@ import traceback
 def main() -> None:
     from benchmarks import (block_reuse, cache_lookup, cooperative_hit_rate,
                             federated_hit_rate, frame_deadline, hit_rate,
-                            load_latency, recognition_latency, roofline)
+                            kv_reuse, load_latency, recognition_latency,
+                            roofline)
 
     suites = [
         ("fig2a", recognition_latency.run),
@@ -25,6 +26,8 @@ def main() -> None:
         ("cooperative_batched", cooperative_hit_rate.run_batched),
         ("federated_hit_rate", federated_hit_rate.run_smoke),
         ("frame_deadline", frame_deadline.run_smoke),
+        # also writes the BENCH_kv_reuse.json perf record to the cwd
+        ("kv_reuse", kv_reuse.run_smoke),
         ("block_reuse", block_reuse.run),
         ("roofline", roofline.run),
     ]

@@ -23,7 +23,7 @@ their block KV for future requests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +33,26 @@ from repro.core.descriptor import NgramSketchDescriptor
 from repro.core.hash_cache import HashCache, content_hash
 from repro.core.policies import EvictionPolicy
 from repro.core.semantic_cache import SemanticCache
+
+
+@dataclasses.dataclass
+class SemOffsetEntry:
+    """One per-offset approximate index: a ``SemanticCache`` and its
+    current functional state, updated together in a single
+    read-modify-write (``lookup``/``insert`` reassign ``state`` before
+    returning, so no caller ever holds a stale state alongside a fresh
+    one).  Shared by ``BlockReuseCache`` and the paged KV prefix index
+    (``serving/kv_cache.py``)."""
+
+    cache: SemanticCache
+    state: object
+
+    def lookup(self, desc: jax.Array):
+        self.state, res = self.cache.lookup(self.state, desc)
+        return res
+
+    def insert(self, desc: jax.Array, payload: jax.Array) -> None:
+        self.state = self.cache.insert(self.state, desc, payload)
 
 
 @dataclasses.dataclass
@@ -67,7 +87,7 @@ class BlockReuseCache:
         self.sketch = NgramSketchDescriptor(dim=descriptor_dim)
         self.exact = HashCache(capacity_bytes=2 << 30)
         self._values: List[dict] = []                 # handle -> KV block pytree
-        self._sem: Dict[int, Tuple[SemanticCache, object]] = {}
+        self._sem: Dict[int, SemOffsetEntry] = {}
         self._sem_capacity = capacity_per_offset
         self._descriptor_dim = descriptor_dim
         self.stats = BlockReuseStats()
@@ -75,14 +95,14 @@ class BlockReuseCache:
         self._chunk_fn = jax.jit(model.prefill_chunk, donate_argnums=(2,))
 
     # ------------------------------------------------------------------
-    def _sem_cache(self, offset: int):
+    def _sem_cache(self, offset: int) -> SemOffsetEntry:
         if offset not in self._sem:
             cache = SemanticCache(capacity=self._sem_capacity,
                                   key_dim=self._descriptor_dim, payload_dim=1,
                                   threshold=self.threshold,
                                   payload_dtype="int32",
                                   policy=EvictionPolicy("lru"))
-            self._sem[offset] = [cache, cache.init()]
+            self._sem[offset] = SemOffsetEntry(cache, cache.init())
         return self._sem[offset]
 
     # ------------------------------------------------------------------
@@ -129,9 +149,8 @@ class BlockReuseCache:
                 if reused is not None:
                     req.blocks_exact += 1
                 elif self.semantic_enabled:
-                    sem, state = self._sem_cache(i)
                     desc = self.sketch(jnp.asarray(block_toks[None, :]))
-                    self._sem_cache(i)[1], res = sem.lookup(state, desc)
+                    res = self._sem_cache(i).lookup(desc)
                     if bool(res.hit[0]):
                         handle = int(res.value[0, 0])
                         reused = self._values[handle]
@@ -151,11 +170,9 @@ class BlockReuseCache:
                     if self.semantic_enabled:
                         handle = len(self._values)
                         self._values.append(block_kv)
-                        sem, state = self._sem_cache(i)
                         desc = self.sketch(jnp.asarray(block_toks[None, :]))
-                        self._sem_cache(i)[1] = sem.insert(
-                            state, desc,
-                            jnp.full((1, 1), handle, jnp.int32))
+                        self._sem_cache(i).insert(
+                            desc, jnp.full((1, 1), handle, jnp.int32))
 
         self.stats.blocks_exact += req.blocks_exact
         self.stats.blocks_semantic += req.blocks_semantic

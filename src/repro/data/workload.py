@@ -210,6 +210,56 @@ class RoamingWorkload:
             yield self.step_requests(rng)
 
 
+@dataclasses.dataclass
+class SharedPrefixWorkload:
+    """Token-level multi-user workload with shared prompt HEADS — the
+    traffic shape paged prefix sharing is built for.
+
+    Co-located AR users ground their requests in the same scene context
+    (eCAR: one physical space, many headsets), so at the token level their
+    prompts share a long session prefix — the serialized scene/context
+    block — followed by a short per-request suffix (the user's own query).
+    Sessions are Zipf-popular: a hot session's prefix KV is admitted once
+    and then MAPPED by every follow-up request (``PagedKVCache``), so the
+    cacheable fraction of prefill compute is roughly
+    ``prefix_len / (prefix_len + E[suffix])`` times the repeat rate.
+
+    Prompts are deterministic in ``seed``; the request stream in the
+    ``stream``'s own seed — same split as the other workloads here.
+    """
+
+    num_sessions: int = 8
+    prefix_len: int = 64             # shared head tokens per session
+    suffix_min: int = 4              # per-request private tail (inclusive)
+    suffix_max: int = 24
+    vocab_size: int = 256
+    zipf_s: float = 1.1
+    seed: int = 0
+
+    def __post_init__(self):
+        assert 1 <= self.suffix_min <= self.suffix_max
+        rng = np.random.default_rng(self.seed)
+        self.prefixes = rng.integers(
+            0, self.vocab_size,
+            size=(self.num_sessions, self.prefix_len)).astype(np.int32)
+        self._probs = _rotated_zipf(self.num_sessions, self.zipf_s, 1)[0]
+
+    # ------------------------------------------------------------------
+    def sample(self, rng: np.random.Generator) -> Tuple[int, np.ndarray]:
+        """One request: (session id, prompt (prefix_len + suffix,) int32)."""
+        sess = int(rng.choice(self.num_sessions, p=self._probs))
+        n = int(rng.integers(self.suffix_min, self.suffix_max + 1))
+        suffix = rng.integers(0, self.vocab_size, size=(n,)).astype(np.int32)
+        return sess, np.concatenate([self.prefixes[sess], suffix])
+
+    def stream(self, n_requests: int, seed: int = 1
+               ) -> Iterator[Tuple[int, np.ndarray]]:
+        """Yields ``n_requests`` (session, prompt) pairs."""
+        rng = np.random.default_rng(seed)
+        for _ in range(n_requests):
+            yield self.sample(rng)
+
+
 @dataclasses.dataclass(frozen=True)
 class FrameRequest:
     """One request of a frame-paced stream round.

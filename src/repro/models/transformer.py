@@ -424,6 +424,44 @@ class DecoderLM:
         return {k: jnp.zeros(v.shape, v.dtype)
                 for k, v in self.cache_specs(batch, max_len).items()}
 
+    def paged_cache_specs(self, num_pages: int, page_size: int
+                          ) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStructs for the PAGED decode cache: every seq-indexed
+        leaf becomes a physical page pool ``(layers, num_pages, page_size,
+        ...)`` shared by all batch rows through a per-row block table (see
+        ``serving/kv_cache.py::PagedKVCache``).  Page ``num_pages`` is the
+        out-of-bounds sink: scatters to it drop, gathers clamp — so an
+        INVALID block-table entry can never corrupt a live page.
+
+        Only linear attention-family caches page (the same restriction as
+        chunked prefill): a sliding-window ring rotates by position and a
+        recurrent SSM state is not seq-indexed, so those models raise.
+        """
+        cfg = self.cfg
+        if cfg.sliding_window > 0:
+            raise ValueError("paged KV needs linear caches (no SWA ring)")
+        specs: Dict[str, jax.ShapeDtypeStruct] = {}
+        for seg in self.plan:
+            R = seg.repeats
+            for pos, sl in enumerate(seg.pattern):
+                base = f"{seg.name}/{pos}"
+                if sl.kind == "attn":
+                    shp = (R, num_pages, page_size, cfg.num_kv_heads,
+                           cfg.head_dim)
+                    specs[f"{base}/k"] = jax.ShapeDtypeStruct(shp, self.dtype)
+                    specs[f"{base}/v"] = jax.ShapeDtypeStruct(shp, self.dtype)
+                elif sl.kind == "mla":
+                    m = cfg.mla
+                    specs[f"{base}/c_kv"] = jax.ShapeDtypeStruct(
+                        (R, num_pages, page_size, m.kv_lora_rank), self.dtype)
+                    specs[f"{base}/k_rope"] = jax.ShapeDtypeStruct(
+                        (R, num_pages, page_size, m.qk_rope_head_dim),
+                        self.dtype)
+                else:
+                    raise ValueError("paged KV needs attention-family caches "
+                                     f"(got {sl.kind} sub-layer)")
+        return specs
+
     # ------------------------------------------------------------------
     # Prefill
     # ------------------------------------------------------------------
@@ -555,22 +593,74 @@ class DecoderLM:
     # Powers (a) paged/low-memory prefill and (b) per-layer KV-block reuse
     # (core/layer_reuse.py — the paper's §4 "result of a specific DNN layer").
     # ------------------------------------------------------------------
+    @staticmethod
+    def _paged_view(pool: jax.Array, block_table: jax.Array) -> jax.Array:
+        """Gather a dense per-row view ``(B, n_pages*page, ...)`` of a page
+        pool ``(P, page, ...)`` through ``block_table`` (B, n_pages) int32.
+        INVALID entries (== P, out of bounds) clamp to junk that every
+        caller masks by position."""
+        view = pool[block_table]                   # (B, n_pages, page, ...)
+        B, n_pages, page = view.shape[:3]
+        return view.reshape((B, n_pages * page) + view.shape[3:])
+
+    @staticmethod
+    def _page_targets(block_table: jax.Array, positions: jax.Array,
+                      valid: Optional[jax.Array], page: int):
+        """Physical (page, offset) scatter targets for token ``positions``
+        (B, C) through ``block_table`` (B, n_pages).  Invalid positions are
+        redirected out of bounds so ``mode="drop"`` discards them."""
+        n_pages = block_table.shape[1]
+        lp = jnp.clip(positions // page, 0, n_pages - 1)
+        pp = jnp.take_along_axis(block_table, lp, axis=1)          # (B, C)
+        oob = positions // page >= n_pages
+        if valid is not None:
+            oob = oob | ~valid
+        # any OOB page index drops the write (pool has no physical page P)
+        pp = jnp.where(oob, jnp.asarray(block_table.dtype.type(2 ** 30)), pp)
+        return pp, positions % page
+
     def _sublayer_chunk(self, sl: SubLayer, p: dict, prefix: str, x, lengths,
-                        layer_cache: dict, base: str):
-        """x: (B, C, D) chunk; lengths: (B,) cache fill before this chunk."""
+                        layer_cache: dict, base: str, *,
+                        valid: Optional[jax.Array] = None,
+                        block_table: Optional[jax.Array] = None):
+        """x: (B, C, D) chunk; lengths: (B,) cache fill before this chunk.
+
+        ``valid`` (B, C) bool marks real tokens of a width-padded chunk
+        (None == all valid): invalid positions never write the cache and
+        their activations are discarded by the caller's per-row logit
+        gather.  ``block_table`` (B, n_pages) switches the cache leaves to
+        the paged pool layout (``paged_cache_specs``): writes scatter into
+        physical pages, attention reads a gathered dense view."""
         cfg = self.cfg
         Bsz, C, _ = x.shape
         new_cache = {}
         positions = lengths[:, None] + jnp.arange(C)[None, :]      # (B, C)
         rows = jnp.arange(Bsz)[:, None]
+
+        def write(leaf, vals):
+            if block_table is not None:
+                page = leaf.shape[1]
+                pp, off = self._page_targets(block_table, positions, valid,
+                                             page)
+                return leaf.at[pp, off].set(vals, mode="drop")
+            S = leaf.shape[1]
+            wpos = positions if valid is None else \
+                jnp.where(valid, positions, S)     # OOB rows drop
+            return leaf.at[rows, wpos].set(vals, mode="drop")
+
+        def view(leaf):
+            return (self._paged_view(leaf, block_table)
+                    if block_table is not None else leaf)
+
         if sl.kind == "attn":
             if cfg.sliding_window > 0:
                 raise NotImplementedError("chunked prefill with SWA ring caches")
             h = L.rms_norm(x, p[f"{prefix}/attn_norm"], cfg.norm_eps)
             q, k, v = L.attention_qkv(cfg, p, f"{prefix}/attn", h, positions)
-            ck = layer_cache[f"{base}/k"].at[rows, positions].set(k)
-            cv = layer_cache[f"{base}/v"].at[rows, positions].set(v)
+            ck = write(layer_cache[f"{base}/k"], k)
+            cv = write(layer_cache[f"{base}/v"], v)
             new_cache[f"{base}/k"], new_cache[f"{base}/v"] = ck, cv
+            ck, cv = view(ck), view(cv)
             Sk = ck.shape[1]
             kpos = jnp.broadcast_to(jnp.arange(Sk)[None, :], (Bsz, Sk))
             mask = L.attention_mask(positions, kpos, causal=True)
@@ -579,15 +669,23 @@ class DecoderLM:
         elif sl.kind == "mla":
             h = L.rms_norm(x, p[f"{prefix}/attn_norm"], cfg.norm_eps)
             c_kv, k_rope = L.mla_latent(cfg, p, f"{prefix}/attn", h, positions)
-            ckv = layer_cache[f"{base}/c_kv"].at[rows, positions].set(c_kv)
-            krope = layer_cache[f"{base}/k_rope"].at[rows, positions].set(k_rope)
+            ckv = write(layer_cache[f"{base}/c_kv"], c_kv)
+            krope = write(layer_cache[f"{base}/k_rope"], k_rope)
             new_cache[f"{base}/c_kv"], new_cache[f"{base}/k_rope"] = ckv, krope
+            ckv, krope = view(ckv), view(krope)
             Sk = ckv.shape[1]
             kpos = jnp.broadcast_to(jnp.arange(Sk)[None, :], (Bsz, Sk))
             mask = L.attention_mask(positions, kpos, causal=True)
             x = x + L.mla_attention(cfg, p, f"{prefix}/attn", h, ckv, krope,
                                     positions, mask=mask)
         elif sl.kind == "ssm":
+            if block_table is not None:
+                raise NotImplementedError("paged KV with recurrent caches")
+            if valid is not None:
+                # a recurrent state would absorb the pad tokens — the
+                # serving engine only chunk-pads attention-family models
+                raise NotImplementedError("width-padded chunks with "
+                                          "recurrent caches")
             h = L.rms_norm(x, p[f"{prefix}/ssm_norm"], cfg.norm_eps)
             y, (conv_state, ssd_state) = S.ssm_apply(
                 cfg, p, f"{prefix}/ssm", h,
@@ -607,15 +705,35 @@ class DecoderLM:
         return x, new_cache
 
     def prefill_chunk(self, params: dict, tokens: jax.Array, cache: dict,
-                      lengths: jax.Array):
+                      lengths: jax.Array, widths: Optional[jax.Array] = None,
+                      *, block_table: Optional[jax.Array] = None):
         """Run one chunk of prompt tokens against an existing cache.
 
         tokens: (B, C); lengths: (B,) cache fill per row (the chunk occupies
         positions lengths..lengths+C-1).  Returns (last logits (B,V),
         new_cache, new_lengths).  Requires linear caches (no SWA ring).
+
+        ``widths`` (B,) int32 <= C: number of VALID leading tokens per row
+        of a width-padded chunk.  Pad tokens never write the cache (their
+        scatters drop out of bounds) and the returned logits are gathered
+        at each row's TRUE last token (``widths - 1``) instead of position
+        C-1 — so ONE static (B, C) trace serves every tail-chunk remainder
+        (the serving engine's tail-retrace fix) and every row of a mixed
+        continuous-batching chunk dispatch.  ``widths=None`` keeps the
+        legacy all-valid contract (logits at C-1, lengths + C) bit-exactly.
+
+        ``block_table`` (B, n_pages) int32 switches ``cache`` to the paged
+        pool layout of ``paged_cache_specs``: per-token writes scatter into
+        physical pages, attention reads a per-row gathered dense view, and
+        INVALID entries (>= num_pages) make a row inert (writes drop,
+        reads are position-masked junk) — how pad rows and decode-phase
+        rows coexist in one dispatch.
         """
         cfg = self.cfg
+        Bsz, C = tokens.shape
         x = params["embed/tokens"][tokens]
+        valid = (None if widths is None else
+                 jnp.arange(C)[None, :] < widths[:, None])         # (B, C)
         new_cache = dict(cache)
         for seg in self.plan:
             seg_params = self._segment_params(params, seg)
@@ -629,7 +747,7 @@ class DecoderLM:
                     x, c = self._sublayer_chunk(
                         sl, layer_params, base, x, lengths,
                         {k: v for k, v in layer_cache.items() if k.startswith(base)},
-                        base)
+                        base, valid=valid, block_table=block_table)
                     nc.update(c)
                 return x, nc
 
@@ -651,31 +769,58 @@ class DecoderLM:
                         outs[k].append(v)
                 new_cache.update({k: jnp.stack(v) for k, v in outs.items()})
 
-        logits = self.unembed(params, x[:, -1:])[:, 0]
-        return logits, new_cache, lengths + tokens.shape[1]
+        if widths is None:
+            logits = self.unembed(params, x[:, -1:])[:, 0]
+            return logits, new_cache, lengths + C
+        rows = jnp.arange(Bsz)
+        x_last = x[rows, jnp.maximum(widths - 1, 0)][:, None, :]
+        logits = self.unembed(params, x_last)[:, 0]                # (B, V)
+        return logits, new_cache, lengths + widths
 
     # ------------------------------------------------------------------
     # Decode step
     # ------------------------------------------------------------------
     def _sublayer_decode(self, sl: SubLayer, p: dict, prefix: str, x, lengths,
-                         layer_cache: dict, base: str):
+                         layer_cache: dict, base: str,
+                         block_table: Optional[jax.Array] = None):
         """x: (B,1,D); lengths: (B,) current cache fill (also the position of
-        the incoming token).  Returns (x, new_layer_cache)."""
+        the incoming token).  Returns (x, new_layer_cache).
+
+        ``block_table`` (B, n_pages) switches the cache leaves to the paged
+        pool layout: the new token scatters into its row's physical page
+        (INVALID entries drop the write — how prefilling/idle rows ride a
+        decode dispatch unharmed) and attention reads a gathered view."""
         cfg = self.cfg
         Bsz = x.shape[0]
         new_cache = {}
         positions = lengths[:, None]                               # (B,1)
+
+        def write(leaf, vals):                     # vals: (B, ...) one token
+            if block_table is not None:
+                page = leaf.shape[1]
+                pp, off = self._page_targets(block_table, positions,
+                                             None, page)
+                return leaf.at[pp[:, 0], off[:, 0]].set(vals, mode="drop")
+            Sk = leaf.shape[1]
+            return leaf.at[jnp.arange(Bsz), lengths % Sk].set(vals,
+                                                              mode="drop")
+
+        def view(leaf):
+            return (self._paged_view(leaf, block_table)
+                    if block_table is not None else leaf)
+
         if sl.kind == "attn":
             h = L.rms_norm(x, p[f"{prefix}/attn_norm"], cfg.norm_eps)
             q, k, v = L.attention_qkv(cfg, p, f"{prefix}/attn", h, positions)
-            ck, cv = layer_cache[f"{base}/k"], layer_cache[f"{base}/v"]
-            Sk = ck.shape[1]
-            slot = lengths % Sk                                    # ring for SWA
-            ck = ck.at[jnp.arange(Bsz), slot].set(k[:, 0])
-            cv = cv.at[jnp.arange(Bsz), slot].set(v[:, 0])
+            ck = write(layer_cache[f"{base}/k"], k[:, 0])
+            cv = write(layer_cache[f"{base}/v"], v[:, 0])
             new_cache[f"{base}/k"], new_cache[f"{base}/v"] = ck, cv
+            ck, cv = view(ck), view(cv)
+            Sk = ck.shape[1]
             # key absolute position per slot: for ring buffers the slot j holds
-            # position p with p % Sk == j and p <= lengths; reconstruct:
+            # position p with p % Sk == j and p <= lengths; reconstruct (for
+            # linear/paged caches Sk covers every position, so this reduces
+            # to kpos == slot and the plain causal mask kpos <= lengths):
             slots = jnp.arange(Sk)[None, :]
             cur = lengths[:, None]
             kpos = cur - ((cur - slots) % Sk)                      # (B, Sk) absolute pos
@@ -688,9 +833,10 @@ class DecoderLM:
         elif sl.kind == "mla":
             h = L.rms_norm(x, p[f"{prefix}/attn_norm"], cfg.norm_eps)
             c_kv_new, k_rope_new = L.mla_latent(cfg, p, f"{prefix}/attn", h, positions)
-            ckv = layer_cache[f"{base}/c_kv"].at[jnp.arange(Bsz), lengths].set(c_kv_new[:, 0])
-            krope = layer_cache[f"{base}/k_rope"].at[jnp.arange(Bsz), lengths].set(k_rope_new[:, 0])
+            ckv = write(layer_cache[f"{base}/c_kv"], c_kv_new[:, 0])
+            krope = write(layer_cache[f"{base}/k_rope"], k_rope_new[:, 0])
             new_cache[f"{base}/c_kv"], new_cache[f"{base}/k_rope"] = ckv, krope
+            ckv, krope = view(ckv), view(krope)
             Sk = ckv.shape[1]
             kpos = jnp.arange(Sk)[None, :]
             mask = (kpos <= lengths[:, None])[:, None, :]          # (B,1,Sk)
@@ -714,9 +860,13 @@ class DecoderLM:
         return x, new_cache
 
     def decode_step(self, params: dict, cache: dict, tokens: jax.Array,
-                    lengths: jax.Array):
+                    lengths: jax.Array, *,
+                    block_table: Optional[jax.Array] = None):
         """One decode step.  tokens: (B,) int32; lengths: (B,) int32 cache
-        fill per row.  Returns (logits (B,V), new_cache, new_lengths)."""
+        fill per row.  Returns (logits (B,V), new_cache, new_lengths).
+
+        ``block_table`` (B, n_pages) int32 switches ``cache`` to the paged
+        pool layout of ``paged_cache_specs`` (see ``_sublayer_decode``)."""
         cfg = self.cfg
         x = params["embed/tokens"][tokens][:, None, :]             # (B,1,D)
 
@@ -733,7 +883,7 @@ class DecoderLM:
                     x, c = self._sublayer_decode(
                         sl, layer_params, base, x, lengths,
                         {k: v for k, v in layer_cache.items() if k.startswith(base)},
-                        base)
+                        base, block_table=block_table)
                     nc.update(c)
                 return x, nc
 

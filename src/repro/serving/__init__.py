@@ -1,2 +1,5 @@
-from repro.serving.engine import ServingConfig, ServingEngine
-from repro.serving.kv_cache import batch_cache_insert, init_batch_cache
+from repro.serving.engine import (PromptTooLongError, ServingConfig,
+                                  ServingEngine)
+from repro.serving.kv_cache import (PagedKVCache, batch_cache_insert,
+                                    batch_cache_scatter, init_batch_cache,
+                                    init_paged_pool)

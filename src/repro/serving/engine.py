@@ -45,6 +45,16 @@ served — and counted as a miss — never dropped.
 bucketed machinery — the per-request-ladder baseline the batched mode is
 measured against (benchmarks/cooperative_hit_rate.py --batched).
 
+``kv_page > 0`` swaps the slotted batch cache for a PAGED one
+(``kv_cache.PagedKVCache``): per-slot block tables over a refcounted
+physical page pool, vLLM-style.  Admission becomes continuous batching —
+every queued request maps its index-resident prompt-prefix pages
+(cross-user KV sharing, CoIC's workload redundancy one layer below the
+descriptor cache) and joins a single batched ``prefill_chunk`` dispatch
+that advances ALL mid-prefill rows together, interleaved with the batched
+decode over the active rows.  The lookup-ladder bound is untouched: paged
+mode changes how misses compute, not how the ladder routes.
+
 All device work has static shapes (B slots, max_len cache, pow2 buckets);
 scheduling is host-side, as in vLLM-class systems.  The CoIC front is a
 ladder org from ``core/tiers.py`` — a ``CooperativeEdgeCluster`` (1-node
@@ -80,7 +90,17 @@ from repro.core.router import (DeadlineStats, LatencyBreakdown, PayloadSizes,
                                TwoTierRouter)
 from repro.core.tiers import (TIER_LOCAL, TIER_MISS, TIER_NAMES, TIER_PEER,
                               TIER_REMOTE, pow2 as _pow2, route_flat)
-from repro.serving.kv_cache import batch_cache_scatter, init_batch_cache
+from repro.serving.kv_cache import (PagedKVCache, batch_cache_scatter,
+                                    init_batch_cache, init_paged_pool)
+
+
+class PromptTooLongError(ValueError):
+    """Raised by ``submit()`` when a prompt exceeds the engine's per-slot
+    cache capacity (``max_len``) and ``on_overflow="reject"``.  The old
+    behavior — silently truncating in ``_pad_prompts``/the chunked path and
+    returning tokens conditioned on a prompt the caller never sent — is
+    gone: overflow is either an error at the door or an explicit
+    ``ServedResult.truncated`` flag."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,12 +134,31 @@ class ServingConfig:
     # accounting in paced simulations (frame workloads); 0 uses measured
     # wall time for the cloud path and modeled-latency-only for hits
     step_ms: float = 0.0
+    # paged KV cache: page size in tokens (0 = the original slotted
+    # layout).  With kv_page > 0 every admission takes the chunked path
+    # against a refcounted physical page pool, and cross-request prompt
+    # prefixes are SHARED page-granular through a descriptor-keyed prefix
+    # index instead of re-prefilled (kv_cache.PagedKVCache)
+    kv_page: int = 0
+    kv_pages: int = 0                # pool size (0 = 2x max_batch span)
+    prefix_share: bool = True        # probe/publish the prefix index
+    prefix_mode: str = "exact"       # exact | semantic (n-gram sketch)
+    # prompts longer than max_len: "reject" raises PromptTooLongError at
+    # submit(); "truncate" serves the max_len head and stamps
+    # ServedResult.truncated
+    on_overflow: str = "reject"
 
     def __post_init__(self):
         assert self.scheduling in ("batched", "sequential"), self.scheduling
         assert self.queue_policy in ("edf", "fifo"), self.queue_policy
         assert self.prefill_chunk >= 0, self.prefill_chunk
         assert self.chunk_pacing >= 1, self.chunk_pacing
+        assert self.on_overflow in ("reject", "truncate"), self.on_overflow
+        assert self.kv_page >= 0, self.kv_page
+        if self.kv_page:
+            assert self.max_len % self.kv_page == 0, \
+                (self.max_len, self.kv_page)
+            assert self.prefix_mode in ("exact", "semantic"), self.prefix_mode
 
 
 @dataclasses.dataclass
@@ -132,14 +171,18 @@ class _Active:
 
 @dataclasses.dataclass
 class _Chunking:
-    """A long prompt mid chunked prefill: owns a reserved slot and a B=1
-    prefill cache that is scattered into the batch cache once the last
-    chunk lands."""
+    """A prompt mid chunked prefill.  Dense path: owns a reserved slot and
+    a B=1 prefill cache that is scattered into the batch cache once the
+    last chunk lands.  Paged path: ``cache`` is None (chunks write the
+    shared pool through the slot's block table) and ``filled`` starts at
+    the prefix-shared token count — mapped pages are prefill the row never
+    runs."""
     req_id: int
     slot: int
     prompt: np.ndarray
-    cache: dict
+    cache: Optional[dict]
     filled: int = 0                  # prompt tokens consumed so far
+    shared_pages: int = 0            # prefix pages mapped, not computed
 
 
 @dataclasses.dataclass
@@ -156,6 +199,7 @@ class ServedResult:
     deadline_miss: bool = False      # completion_ms > deadline_ms (if set)
     submit_step: int = 0             # engine step count at submit()
     finish_step: int = 0             # engine step count at completion
+    truncated: bool = False          # prompt cut to max_len (on_overflow)
 
 
 class ServingEngine:
@@ -193,7 +237,6 @@ class ServingEngine:
         self.max_step_ladder = 0
 
         B = cfg.max_batch
-        self.cache = init_batch_cache(model, B, cfg.max_len)
         # recurrent (SSM/conv) prefill states absorb right-pad tokens, and
         # sliding-window ring caches rotate by the PADDED length, so those
         # models only batch admissions of identical prompt length with no
@@ -201,15 +244,53 @@ class ServingEngine:
         self._exact_prefill = (
             getattr(getattr(model, "cfg", None), "sliding_window", 0) > 0
             or any(k.endswith("/conv") or k.endswith("/state")
-                   for k in self.cache))
+                   for k in model.cache_specs(1, cfg.max_len)))
+        # paged KV: block-table batch cache over a refcounted page pool.
+        # Needs the linear-cache chunked path (pages are written through
+        # valid-masked chunk scatters), so SWA/recurrent models must keep
+        # the slotted layout
+        self._paged = cfg.kv_page > 0
+        if self._paged and (self._exact_prefill
+                            or not hasattr(model, "paged_cache_specs")):
+            raise ValueError("kv_page > 0 needs linear attention caches "
+                             "(no SWA ring / recurrent state) and a model "
+                             "with paged_cache_specs")
+        self.kv: Optional[PagedKVCache] = None
+        if self._paged:
+            self.kv = PagedKVCache(model, B, cfg.max_len, cfg.kv_page,
+                                   num_pages=cfg.kv_pages,
+                                   prefix_share=cfg.prefix_share,
+                                   prefix_mode=cfg.prefix_mode)
+            self.cache = init_paged_pool(model, self.kv.num_pages,
+                                         cfg.kv_page)
+            # every paged admission is chunked; without an explicit chunk
+            # width one max_len-wide chunk covers any prompt in one step
+            self._chunk_width = cfg.prefill_chunk or cfg.max_len
+        else:
+            self.cache = init_batch_cache(model, B, cfg.max_len)
         self.lengths = jnp.zeros((B,), jnp.int32)
         self.tokens = jnp.zeros((B,), jnp.int32)
         self.row_active = np.zeros((B,), bool)
+        # prefill-token accounting for the KV-reuse benchmark: computed =
+        # tokens that ran the model, shared = page-aligned prompt tokens
+        # served by mapping another request's pages
+        self.prefill_tokens_computed = 0
+        self.prefill_tokens_shared = 0
+        self._truncated: set = set()
 
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
         self._prefill = jax.jit(
             lambda p, t, ln: model.prefill(p, t, max_len=cfg.max_len,
                                            lengths=ln))
+        if self._paged:
+            self._chunk_paged = jax.jit(
+                lambda p, t, c, ln, w, bt: model.prefill_chunk(
+                    p, t, c, ln, w, block_table=bt),
+                donate_argnums=(2,))
+            self._decode_paged = jax.jit(
+                lambda p, c, t, ln, bt: model.decode_step(
+                    p, c, t, ln, block_table=bt),
+                donate_argnums=(1,))
         # chunked prefill needs linear caches: SWA rings rotate by padded
         # length and recurrent conv/state prefill absorbs pads, so those
         # models keep the exact one-shot path (prefill_chunk is ignored)
@@ -217,8 +298,13 @@ class ServingEngine:
                            and hasattr(model, "prefill_chunk")
                            and not self._exact_prefill)
         if self._can_chunk:
-            self._chunk_fn = jax.jit(model.prefill_chunk,
-                                     donate_argnums=(2,))
+            # widths-carrying wrapper: every chunk dispatch is the STATIC
+            # (1, prefill_chunk) shape with the true width passed as data,
+            # so the tail chunk of any prompt length reuses one compile
+            # instead of retracing per remainder width
+            self._chunk_fn = jax.jit(
+                lambda p, t, c, ln, w: model.prefill_chunk(p, t, c, ln, w),
+                donate_argnums=(2,))
 
         # CoIC front: one ladder org (core/tiers.py) — a cooperative
         # cluster (1-node for the solo cache) or a cross-cluster federation
@@ -289,9 +375,26 @@ class ServingEngine:
         earliest-deadline-first ahead of all bulk requests; ``priority``
         breaks ties within a class (higher first), submission order breaks
         the rest.  An expired deadline is still served (and counted as a
-        miss), never dropped."""
+        miss), never dropped.
+
+        Prompts longer than ``max_len`` overflow the per-slot cache:
+        ``on_overflow="reject"`` raises ``PromptTooLongError`` here (no rid
+        is consumed), ``"truncate"`` serves the ``max_len`` head and stamps
+        ``ServedResult.truncated``."""
+        prompt = np.asarray(prompt, np.int32)
+        truncated = False
+        if len(prompt) > self.cfg.max_len:
+            if self.cfg.on_overflow == "reject":
+                raise PromptTooLongError(
+                    f"prompt length {len(prompt)} exceeds max_len "
+                    f"{self.cfg.max_len}; truncating would silently change "
+                    "the request (set on_overflow='truncate' to opt in)")
+            prompt = prompt[:self.cfg.max_len]
+            truncated = True
         rid = self._req_counter
         self._req_counter += 1
+        if truncated:
+            self._truncated.add(rid)
         self._t_submit[rid] = time.perf_counter()
         self._priority[rid] = priority
         if priority:
@@ -303,8 +406,7 @@ class ServingEngine:
             # the relative budget, which still orders same-step arrivals)
             self._abs_deadline[rid] = (self.step_count * self.cfg.step_ms
                                        + deadline_ms)
-        self.pending.append((rid, np.asarray(prompt, np.int32), node_id,
-                             cluster_id))
+        self.pending.append((rid, prompt, node_id, cluster_id))
         return rid
 
     # ------------------------------------------------------------------
@@ -363,7 +465,9 @@ class ServingEngine:
             deadline_ms=self._deadline.pop(rid, None),
             completion_ms=completion_ms, deadline_miss=missed,
             submit_step=self._submit_step.pop(rid, self.step_count),
-            finish_step=self.step_count))
+            finish_step=self.step_count,
+            truncated=rid in self._truncated))
+        self._truncated.discard(rid)
         self._abs_deadline.pop(rid, None)
 
     # ------------------------------------------------------------------
@@ -474,7 +578,18 @@ class ServingEngine:
         deadline), then drained front-to-back — long prompts peel off into
         the chunked path (one reserved slot, one ``prefill_chunk``-token
         dispatch per step), everything else joins ONE bucketed batched
-        prefill dispatch (sequential mode: one request per step)."""
+        prefill dispatch (sequential mode: one request per step).
+
+        Paged mode (``kv_page > 0``) replaces all of that with continuous
+        batching against the page pool: every queued request with a free
+        slot maps its shareable prefix pages and joins the chunking set,
+        then ONE batched ``prefill_chunk`` dispatch advances every
+        mid-prefill row together — newly admitted rows ride the same
+        dispatch as rows admitted steps ago, and their remainders land
+        while other rows decode."""
+        if self._paged:
+            self._admit_paged()
+            return
         self._advance_chunks()
         self._order_queue()
         # sequential mode is the per-request one-shot baseline: chunking
@@ -523,6 +638,7 @@ class ServingEngine:
             logits, many_cache, _ = self._prefill(
                 self.params, jnp.asarray(toks), jnp.asarray(lens_pad))
             self.dispatches["prefill"] += 1
+            self.prefill_tokens_computed += int(lens.sum())
             slots = [self.free_slots.pop() for _ in range(m)]
             self.cache = batch_cache_scatter(
                 self.cache, {k: v[:, :m] for k, v in many_cache.items()},
@@ -539,6 +655,78 @@ class ServingEngine:
                                             generated=[int(nxt[i])],
                                             t_admit=now)
                 self._prompts[rid] = prompt
+
+    # ------------------------------------------------------------------
+    def _admit_paged(self) -> None:
+        """Continuous-batching admission against the paged pool: EDF-drain
+        the queue into the chunking set (each admission probes the prefix
+        index — mapped pages start ``filled`` past zero), then advance
+        every mid-prefill row in ONE batched chunk dispatch.  Admitting
+        before advancing means a request's first chunk rides the step it
+        was admitted on."""
+        self._order_queue()
+        while self.queue and self.free_slots:
+            rid, prompt = self.queue.popleft()
+            slot = self.free_slots.pop()
+            shared_tok = self.kv.admit(slot, prompt)
+            self.prefill_tokens_shared += shared_tok
+            self.chunking[rid] = _Chunking(
+                req_id=rid, slot=slot, prompt=prompt, cache=None,
+                filled=shared_tok,
+                shared_pages=shared_tok // self.cfg.kv_page)
+        self._advance_chunks_paged()
+        for _ in range(self.cfg.chunk_pacing - 1):
+            # idle pacing, as in the dense path: extra batched advances
+            # only when no admission or decode slot is waiting on us
+            if not self.chunking or self.queue or not self.free_slots:
+                break
+            self._advance_chunks_paged()
+
+    def _advance_chunks_paged(self) -> None:
+        """ONE (pow2 rows, chunk_width) ``prefill_chunk`` dispatch over
+        every mid-prefill row: per-row lengths, true widths, and
+        block-table rows; pad rows carry width 0 and an all-INVALID table,
+        so their writes drop.  Rows whose last chunk lands activate for
+        decode and publish their computed full pages to the prefix
+        index."""
+        if not self.chunking:
+            return
+        sts = sorted(self.chunking.values(),
+                     key=lambda st: self._queue_key((st.req_id,)))
+        C = self._chunk_width
+        Bb = _pow2(len(sts))
+        toks = np.zeros((Bb, C), np.int32)
+        lens = np.zeros((Bb,), np.int32)
+        widths = np.zeros((Bb,), np.int32)
+        bt = np.full((Bb, self.kv.pages_per_slot), PagedKVCache.INVALID,
+                     np.int32)
+        for i, st in enumerate(sts):
+            n = min(C, len(st.prompt) - st.filled)
+            toks[i, :n] = st.prompt[st.filled:st.filled + n]
+            lens[i] = st.filled
+            widths[i] = n
+            bt[i] = self.kv.block_table[st.slot]
+        logits, self.cache, _ = self._chunk_paged(
+            self.params, jnp.asarray(toks), self.cache, jnp.asarray(lens),
+            jnp.asarray(widths), jnp.asarray(bt))
+        self.dispatches["prefill_chunk"] += 1
+        self.prefill_tokens_computed += int(widths.sum())
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        now = time.perf_counter()
+        for i, st in enumerate(sts):
+            st.filled += int(widths[i])
+            if st.filled < len(st.prompt):
+                continue
+            rid, slot = st.req_id, st.slot
+            del self.chunking[rid]
+            self.kv.register(slot, st.prompt, from_page=st.shared_pages)
+            self.lengths = self.lengths.at[slot].set(len(st.prompt))
+            self.tokens = self.tokens.at[slot].set(int(nxt[i]))
+            self.row_active[slot] = True
+            self.active[slot] = _Active(req_id=rid, slot=slot,
+                                        generated=[int(nxt[i])],
+                                        t_admit=now)
+            self._prompts[rid] = st.prompt
 
     # ------------------------------------------------------------------
     def _advance_chunks(self) -> None:
@@ -568,14 +756,22 @@ class ServingEngine:
         ``model.prefill_chunk``; on the last chunk, scatter the B=1 cache
         into the reserved slot and activate the row (bit-identical state to
         the one-shot prefill — the chunk path writes the same positions
-        with the same values, just across steps)."""
-        n = min(self.cfg.prefill_chunk, len(st.prompt) - st.filled)
-        chunk = np.asarray(st.prompt[st.filled:st.filled + n],
-                           np.int32)[None, :]
+        with the same values, just across steps).
+
+        The dispatch shape is the STATIC (1, prefill_chunk): a short tail
+        chunk is zero-padded and its true width passed as data, so the
+        model masks the pad instead of the engine retracing the jit once
+        per distinct remainder length."""
+        C = self.cfg.prefill_chunk
+        n = min(C, len(st.prompt) - st.filled)
+        chunk = np.zeros((1, C), np.int32)
+        chunk[0, :n] = st.prompt[st.filled:st.filled + n]
         logits, st.cache, _ = self._chunk_fn(
             self.params, jnp.asarray(chunk), st.cache,
-            jnp.asarray([st.filled], jnp.int32))
+            jnp.asarray([st.filled], jnp.int32),
+            jnp.asarray([n], jnp.int32))
         self.dispatches["prefill_chunk"] += 1
+        self.prefill_tokens_computed += n
         st.filled += n
         if st.filled < len(st.prompt):
             return
@@ -607,6 +803,11 @@ class ServingEngine:
                        modeled_ms=modeled_ms, wall_s=wall_s)
         self.row_active[slot] = False
         self.free_slots.append(slot)
+        if self._paged:
+            # refcount-- on every mapped page; pages at zero join the free
+            # list but stay probe-able until recycled, so this request's
+            # prefix keeps serving future admissions
+            self.kv.free_slot(slot)
         node = self._req_node.pop(a.req_id, 0)
         clu = self._req_cluster.pop(a.req_id, 0)
         prompt = self._prompts.pop(a.req_id, None)
@@ -633,8 +834,16 @@ class ServingEngine:
         self._admit()
         if not self.active:
             return
-        logits, self.cache, self.lengths = self._decode(
-            self.params, self.cache, self.tokens, self.lengths)
+        if self._paged:
+            # mid-prefill and free rows ride the batched decode with an
+            # all-INVALID table row: their junk write drops instead of
+            # landing in a live or half-filled page
+            logits, self.cache, self.lengths = self._decode_paged(
+                self.params, self.cache, self.tokens, self.lengths,
+                jnp.asarray(self.kv.decode_table(self.row_active)))
+        else:
+            logits, self.cache, self.lengths = self._decode(
+                self.params, self.cache, self.tokens, self.lengths)
         self.dispatches["decode"] += 1
         nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
         for slot in list(self.active):
@@ -666,7 +875,11 @@ class ServingEngine:
             "dispatches": dict(self.dispatches),
             "max_step_ladder": self.max_step_ladder,
             "deadline": self.deadline.as_dict(),
+            "prefill_tokens": {"computed": self.prefill_tokens_computed,
+                               "shared": self.prefill_tokens_shared},
         }
+        if self._paged:
+            out["kv"] = self.kv.stats_dict()
         if self.sem_fed is not None:
             out["semantic"] = self.sem_fed.stats()
         elif self.sem_cluster is not None and self.coic_cfg.num_nodes > 1:

@@ -1,16 +1,56 @@
-"""Slotted KV-cache management for continuous batching.
+"""KV-cache management for continuous batching: slotted and paged.
 
-The model's cache is a flat dict of stacked leaves with a batch dim at index
-1 (decoder LMs: (layers, B, S, ...); whisper: same).  The engine owns a
-B-slot batch cache; per-request prefill caches (B=1) are scattered into a
-slot on admission and slots are recycled on retirement.
+Two layouts, one engine:
+
+* **Slotted** (the original path): the model's cache is a flat dict of
+  stacked leaves with a batch dim at index 1 (decoder LMs: (layers, B, S,
+  ...)).  The engine owns a B-slot batch cache; per-request prefill caches
+  are scattered into a slot on admission and slots are recycled on
+  retirement.  Every slot pays a full ``max_len`` of KV memory and every
+  prompt pays full prefill compute.
+
+* **Paged** (``PagedKVCache``): every seq-indexed leaf becomes a physical
+  page pool ``(layers, P, page, ...)`` shared by all slots through per-slot
+  block tables — the vLLM layout.  Pages are REFCOUNTED, so N slots can map
+  the same physical page; a descriptor-keyed per-offset prefix index
+  (exact content hash + optional n-gram-sketch approximate path, the same
+  two lookup paths as ``core/layer_reuse.py``) lets a newly admitted prompt
+  map the already-computed KV pages of a shared head copy-on-write instead
+  of recomputing prefill for it.  This is CoIC's "IC tasks among different
+  users might be similar or redundant" pushed one layer below the
+  descriptor cache: co-located AR users (eCAR) share scene-context prompt
+  heads, so their prefill KV is largely the same bytes.
+
+Safety invariants of the paged layout:
+
+* Sharing is PAGE-granular and capped at ``(len(prompt) - 1) // page``
+  full pages, so every request computes at least its last prompt token —
+  next-token logits always reflect the true suffix (the same rule as
+  ``BlockReuseCache``'s always-computed final block) and no slot ever
+  WRITES a page another slot maps (decode and remainder prefill both start
+  at or after the shared boundary).  ``ensure_private`` is the
+  copy-on-write guard behind that invariant: any write aimed at a page
+  with refcount > 1 first remaps the writer to a fresh copy.
+* The prefix index holds NO references: a page is freed the moment its
+  last slot retires (refcount 0) and its index entries die lazily when the
+  page is recycled for a new allocation — so freed prefix pages keep
+  converting future admissions into shared maps for as long as capacity
+  allows, and refcounts always drain to zero with the engine.
+* Block-table entry ``P`` (== num_pages) is the INVALID sink: the model's
+  paged gather clamps (masked junk) and its scatter drops, so idle or
+  mid-prefill rows ride a shared dispatch without corrupting live pages.
 """
 from __future__ import annotations
 
-from typing import Dict
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hash_cache import content_hash
 
 
 def init_batch_cache(model, batch: int, max_len: int, **kw) -> Dict[str, jax.Array]:
@@ -49,13 +89,22 @@ def batch_cache_scatter(batch_cache: Dict[str, jax.Array],
     ``batch_cache_insert`` (one scatter for the whole admitted bucket
     instead of R dynamic-update dispatches).
 
-    ``slots``: (R,) int32 target slots, one per prefill row; pass duplicate
-    slots for pad rows pointing at a real slot's value is NOT allowed — the
-    caller masks pad rows by scattering them to a recycled dummy slot or by
-    trimming ``many_cache`` first.  Seq dims shorter than the batch cache's
-    are zero-padded (masked out by per-row lengths).
+    ``slots``: (R,) int32 target slots, one per prefill row.  Slots must be
+    UNIQUE — with duplicates, XLA keeps an arbitrary one of the colliding
+    rows, which silently corrupts a live request's cache.  The check is a
+    cheap host-side pass over the (R,) array; callers mask pad rows by
+    trimming ``many_cache`` first, never by aliasing a real slot.  Seq dims
+    shorter than the batch cache's are zero-padded (masked out by per-row
+    lengths).
     """
-    slots = jnp.asarray(slots, jnp.int32)
+    slots_np = np.asarray(slots, np.int32)
+    uniq, counts = np.unique(slots_np, return_counts=True)
+    if (counts > 1).any():
+        raise ValueError("batch_cache_scatter: duplicate target slots "
+                         f"{uniq[counts > 1].tolist()} in {slots_np.tolist()}"
+                         " — colliding rows would silently overwrite each "
+                         "other")
+    slots = jnp.asarray(slots_np)
     out = {}
     for k, dst in batch_cache.items():
         src = many_cache[k]
@@ -65,3 +114,272 @@ def batch_cache_scatter(batch_cache: Dict[str, jax.Array],
             src = jnp.pad(src, ((0, 0), (0, 0)) + tuple(pads))
         out[k] = dst.at[:, slots].set(src.astype(dst.dtype))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_paged_pool(model, num_pages: int, page_size: int
+                    ) -> Dict[str, jax.Array]:
+    """Zero-initialized physical page pools for every seq-indexed leaf."""
+    return {k: jnp.zeros(v.shape, v.dtype)
+            for k, v in model.paged_cache_specs(num_pages, page_size).items()}
+
+
+@dataclasses.dataclass
+class PagedStats:
+    shared_maps: int = 0             # admissions that mapped >= 1 page
+    pages_shared: int = 0            # total pages mapped instead of computed
+    tokens_shared: int = 0           # page-aligned prompt tokens not computed
+    pages_registered: int = 0        # full pages published to the index
+    cow_copies: int = 0              # copy-on-write page duplications
+    sem_maps: int = 0                # pages mapped via the sketch path
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class PagedKVCache:
+    """Host-side manager of the paged KV pool: block tables, page
+    refcounts, the free list, and the per-offset prefix index.
+
+    The device state (the pool dict) is owned by the engine and flows
+    through jitted dispatches; this class only decides WHICH physical page
+    every (slot, logical page) maps to.  All bookkeeping is numpy.
+
+    ``prefix_mode``: ``"exact"`` probes a content hash of the FULL prefix
+    through each page boundary (hash-chain, so a map is bit-identical by
+    construction); ``"semantic"`` additionally probes a per-offset n-gram
+    sketch of the prefix at ``threshold`` — the approximate path of
+    ``core/layer_reuse.py``, with the same accuracy contract as the
+    paper's DNN-feature reuse (close-enough prefixes share KV).  Stale
+    semantic entries are fenced by a per-page generation counter bumped on
+    every recycle, so a recycled page can never be served for its old
+    content.
+    """
+
+    INVALID = np.int32(2 ** 30)      # out-of-bounds sink (drop/clamp)
+
+    def __init__(self, model, max_batch: int, max_len: int, page_size: int,
+                 *, num_pages: int = 0, prefix_share: bool = True,
+                 prefix_mode: str = "exact", threshold: float = 0.98,
+                 descriptor_dim: int = 64, sem_capacity_per_offset: int = 128):
+        assert max_len % page_size == 0, (max_len, page_size)
+        assert prefix_mode in ("exact", "semantic"), prefix_mode
+        self.page = page_size
+        self.pages_per_slot = max_len // page_size
+        need = max_batch * self.pages_per_slot
+        # headroom so freed prefix pages linger in the index before recycle
+        self.num_pages = num_pages or 2 * need
+        assert self.num_pages >= need, (self.num_pages, need)
+        self.max_batch = max_batch
+        self.prefix_share = prefix_share
+        self.prefix_mode = prefix_mode
+
+        self.block_table = np.full((max_batch, self.pages_per_slot),
+                                   self.INVALID, np.int32)
+        self.refcount = np.zeros((self.num_pages,), np.int32)
+        self._free: deque = deque(range(self.num_pages))
+        self._in_free = np.ones((self.num_pages,), bool)
+        self._gen = np.zeros((self.num_pages,), np.int64)
+
+        # exact per-offset prefix index: (logical page, hash of the FULL
+        # prefix through the page's end) -> physical page; reverse map for
+        # lazy invalidation on recycle
+        self._exact: Dict[Tuple[int, str], int] = {}
+        self._keys_of: Dict[int, List[Tuple[int, str]]] = {}
+        self._sem: Dict[int, object] = {}
+        self._sketch = None
+        if prefix_mode == "semantic":
+            from repro.core.descriptor import NgramSketchDescriptor
+            self._sketch = NgramSketchDescriptor(dim=descriptor_dim)
+            self._sem_capacity = sem_capacity_per_offset
+            self._descriptor_dim = descriptor_dim
+            self._threshold = threshold
+        self.stats = PagedStats()
+
+    # ------------------------------------------------------------------
+    # free-list plumbing
+    # ------------------------------------------------------------------
+    def _release(self, pid: int) -> None:
+        if not self._in_free[pid]:
+            self._free.append(pid)
+            self._in_free[pid] = True
+
+    def _acquire(self) -> int:
+        while self._free:
+            pid = self._free.popleft()
+            self._in_free[pid] = False
+            if self.refcount[pid] == 0:
+                self._invalidate(pid)
+                return pid
+            # page was re-shared out of the free list; drop the stale entry
+        raise RuntimeError("paged KV pool exhausted — size the pool at "
+                           ">= max_batch * pages_per_slot physical pages")
+
+    def _invalidate(self, pid: int) -> None:
+        """Forget every index entry naming ``pid`` (it is being recycled
+        for new content).  Semantic entries are fenced by the generation
+        bump instead of eager deletion."""
+        for key in self._keys_of.pop(pid, ()):
+            if self._exact.get(key) == pid:
+                del self._exact[key]
+        self._gen[pid] += 1
+
+    # ------------------------------------------------------------------
+    # admission / retirement
+    # ------------------------------------------------------------------
+    def admit(self, slot: int, prompt: np.ndarray) -> int:
+        """Build ``slot``'s block table for ``prompt``: probe the prefix
+        index for shareable full pages (mapped with a refcount bump, never
+        recomputed), then allocate fresh private pages for the rest of the
+        slot's ``max_len`` span.  Returns the number of prompt tokens
+        covered by shared pages — the prefill compute the engine skips."""
+        assert (self.block_table[slot] == self.INVALID).all(), \
+            f"slot {slot} already mapped"
+        shared = self._probe(prompt) if self.prefix_share else []
+        for j, pid in enumerate(shared):
+            self.block_table[slot, j] = pid
+            self.refcount[pid] += 1
+        for j in range(len(shared), self.pages_per_slot):
+            pid = self._acquire()
+            self.block_table[slot, j] = pid
+            self.refcount[pid] += 1
+        if shared:
+            self.stats.shared_maps += 1
+            self.stats.pages_shared += len(shared)
+            self.stats.tokens_shared += len(shared) * self.page
+        return len(shared) * self.page
+
+    def free_slot(self, slot: int) -> None:
+        """Drop ``slot``'s references; pages at refcount 0 join the free
+        list but stay probe-able until recycled."""
+        for pid in self.block_table[slot]:
+            if pid == self.INVALID:
+                continue
+            pid = int(pid)
+            self.refcount[pid] -= 1
+            assert self.refcount[pid] >= 0, pid
+            if self.refcount[pid] == 0:
+                self._release(pid)
+        self.block_table[slot, :] = self.INVALID
+
+    # ------------------------------------------------------------------
+    # prefix index
+    # ------------------------------------------------------------------
+    def _max_shareable(self, prompt_len: int) -> int:
+        """Full pages a prompt may map: at least the last token is always
+        computed, so logits reflect the true suffix."""
+        return max(0, (prompt_len - 1) // self.page)
+
+    def _probe(self, prompt: np.ndarray) -> List[int]:
+        """Longest run of index-resident full pages from offset 0."""
+        out: List[int] = []
+        for j in range(self._max_shareable(len(prompt))):
+            end = (j + 1) * self.page
+            pid = self._exact.get((j, content_hash(prompt[:end].tobytes())))
+            if pid is None and self._sketch is not None:
+                pid = self._probe_semantic(j, prompt[:end])
+                if pid is not None:
+                    self.stats.sem_maps += 1
+            if pid is None:
+                break
+            out.append(pid)
+        return out
+
+    def _sem_entry(self, offset: int):
+        from repro.core.layer_reuse import SemOffsetEntry
+        from repro.core.policies import EvictionPolicy
+        from repro.core.semantic_cache import SemanticCache
+        if offset not in self._sem:
+            cache = SemanticCache(capacity=self._sem_capacity,
+                                  key_dim=self._descriptor_dim,
+                                  payload_dim=2, threshold=self._threshold,
+                                  payload_dtype="int32",
+                                  policy=EvictionPolicy("lru"))
+            self._sem[offset] = SemOffsetEntry(cache, cache.init())
+        return self._sem[offset]
+
+    def _probe_semantic(self, offset: int, prefix: np.ndarray) -> Optional[int]:
+        desc = self._sketch(jnp.asarray(prefix[None, :]))
+        res = self._sem_entry(offset).lookup(desc)
+        if not bool(res.hit[0]):
+            return None
+        pid, gen = int(res.value[0, 0]), int(res.value[0, 1])
+        # generation fence: a recycled page must never serve old content
+        if self._gen[pid] != gen:
+            return None
+        return pid
+
+    def register(self, slot: int, prompt: np.ndarray, from_page: int = 0
+                 ) -> int:
+        """Publish ``slot``'s COMPUTED full pages (logical pages
+        ``from_page``..) to the prefix index so future admissions can map
+        them.  Shared pages the slot itself mapped are already indexed by
+        their original owner — pass ``from_page`` to skip them.  Holds no
+        refcount: the index rides free pages until they are recycled."""
+        n = 0
+        for j in range(from_page, len(prompt) // self.page):
+            pid = int(self.block_table[slot, j])
+            key = (j, content_hash(prompt[:(j + 1) * self.page].tobytes()))
+            if key in self._exact:
+                continue
+            self._exact[key] = pid
+            self._keys_of.setdefault(pid, []).append(key)
+            if self._sketch is not None:
+                desc = self._sketch(jnp.asarray(prompt[None,
+                                                       :(j + 1) * self.page]))
+                self._sem_entry(j).insert(
+                    desc, jnp.asarray([[pid, int(self._gen[pid])]],
+                                      jnp.int32))
+            n += 1
+        self.stats.pages_registered += n
+        return n
+
+    # ------------------------------------------------------------------
+    # copy-on-write
+    # ------------------------------------------------------------------
+    def ensure_private(self, pool: Dict[str, jax.Array], slot: int,
+                       logical_page: int) -> Dict[str, jax.Array]:
+        """Copy-on-write guard: if ``slot``'s ``logical_page`` maps a page
+        other slots also reference, remap it to a fresh copy so the coming
+        write cannot leak into the sharers.  Returns the (possibly updated)
+        pool.  By the sharing cap this is a no-op on the engine's hot path
+        — it exists so the invariant is enforced, not assumed."""
+        pid = int(self.block_table[slot, logical_page])
+        if pid == self.INVALID or self.refcount[pid] <= 1:
+            return pool
+        new = self._acquire()
+        pool = {k: v.at[:, new].set(v[:, pid]) for k, v in pool.items()}
+        self.refcount[pid] -= 1
+        self.refcount[new] += 1
+        self.block_table[slot, logical_page] = new
+        self.stats.cow_copies += 1
+        return pool
+
+    # ------------------------------------------------------------------
+    # dispatch views
+    # ------------------------------------------------------------------
+    def table_rows(self, slots: List[int]) -> np.ndarray:
+        """(len(slots), pages_per_slot) block-table rows for a dispatch."""
+        return self.block_table[np.asarray(slots, np.int32)].copy()
+
+    def decode_table(self, row_active: np.ndarray) -> np.ndarray:
+        """(B, pages_per_slot) table for the batched decode dispatch:
+        inactive rows (free slots and rows still mid prefill) are masked
+        INVALID so their junk decode write drops instead of landing in a
+        page that is live or being prefilled."""
+        bt = self.block_table.copy()
+        bt[~np.asarray(row_active, bool), :] = self.INVALID
+        return bt
+
+    # ------------------------------------------------------------------
+    def stats_dict(self) -> dict:
+        out = self.stats.as_dict()
+        out.update(num_pages=int(self.num_pages), page_size=int(self.page),
+                   pages_in_use=int((self.refcount > 0).sum()),
+                   refcount_max=int(self.refcount.max(initial=0)),
+                   index_entries=len(self._exact))
+        return out

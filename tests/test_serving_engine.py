@@ -95,3 +95,36 @@ def test_slots_recycled(served_model, nprng):
     eng.run_until_drained()
     assert len(eng.results) == 5
     assert sorted(eng.free_slots) == [0, 1]
+
+
+def test_overflow_reject_raises_without_consuming_rid(served_model):
+    """Prompts longer than max_len must fail loudly at submit() — the old
+    behavior silently truncated in _pad_prompts and served tokens
+    conditioned on a prompt the caller never sent."""
+    from repro.serving.engine import PromptTooLongError
+
+    cfg, model, params = served_model
+    eng = ServingEngine(model, params, ServingConfig(
+        max_batch=2, max_len=64, max_new_tokens=4))
+    with pytest.raises(PromptTooLongError, match="exceeds max_len"):
+        eng.submit(np.zeros((65,), np.int32))
+    rid = eng.submit(np.zeros((64,), np.int32))    # at capacity: accepted
+    assert rid == 0                                # reject consumed no rid
+    eng.run_until_drained()
+    assert not eng.results[0].truncated
+
+
+def test_overflow_truncate_serves_head_and_flags(served_model, nprng):
+    """on_overflow="truncate" serves the max_len head and stamps the
+    result — the same tokens an in-bounds submission of that head gets."""
+    cfg, model, params = served_model
+    head = nprng.integers(0, cfg.vocab_size, size=(64,)).astype(np.int32)
+    long = np.concatenate([head, head])
+    eng = ServingEngine(model, params, ServingConfig(
+        max_batch=2, max_len=64, max_new_tokens=4, on_overflow="truncate"))
+    r_long = eng.submit(long)
+    r_head = eng.submit(head)
+    eng.run_until_drained()
+    by = {r.req_id: r for r in eng.results}
+    assert by[r_long].truncated and not by[r_head].truncated
+    np.testing.assert_array_equal(by[r_long].tokens, by[r_head].tokens)
