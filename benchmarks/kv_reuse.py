@@ -27,6 +27,14 @@ bound survives paged continuous batching: at most 1 descriptor + 1
 grouped-lookup dispatch per engine step (<= 2) and <= 4 dispatches inside
 the federated ladder, with paged chunked prefill active.
 
+``kv_attn_gathered`` vs ``kv_attn_paged_kernel`` drive the same stream
+with the only difference being how attention reads the page pool: the
+dense ``_paged_view`` copy vs the in-place ``kernels/paged_attention``
+op.  Each row reports steps/s and the modeled per-layer attention HBM
+bytes/step (``attention_kv_bytes_per_step`` over the observed per-step
+row fills); ``kv_attn_accept`` asserts the kernel row moves strictly
+fewer bytes at bit-identical decoded tokens — nightly CI gates on it.
+
 Emitted JSON record (``--json PATH`` / ``run(json_path=...)``): prefill
 dispatches per computed token, prefix-share rate, p99 motion-to-photon
 completion (paced steps), and the reduction ratio — the repo's benchmark
@@ -45,25 +53,35 @@ from repro.data.workload import SharedPrefixWorkload
 def _drive(model, params, wl: SharedPrefixWorkload, *, share: bool,
            n_requests: int, seed: int, coic=None, max_batch: int = 4,
            max_len: int = 96, page: int = 16, chunk: int = 32,
-           step_ms: float = 2.0):
+           step_ms: float = 2.0, attn_impl: str = "gather"):
     """Serve ``n_requests`` of ``wl`` through a fresh paged engine.
-    Returns (engine, {rid: tokens}, wall_s)."""
+    Returns (engine, {rid: tokens}, wall_s, length_snaps) where
+    ``length_snaps`` is one (max_batch,) row-fill vector per engine step
+    (idle rows 0) — the input of the attention HBM byte model."""
     from repro.serving.engine import ServingConfig, ServingEngine
 
     eng = ServingEngine(model, params, ServingConfig(
         max_batch=max_batch, max_len=max_len, max_new_tokens=4,
         kv_page=page, prefill_chunk=chunk, prefix_share=share,
-        step_ms=step_ms, coic=coic))
+        step_ms=step_ms, coic=coic, attn_impl=attn_impl))
     rids = []
+    snaps = []
+
+    def _snap():
+        snaps.append(np.where(eng.row_active, np.asarray(eng.lengths), 0))
+
     t0 = time.perf_counter()
     for i, (sess, prompt) in enumerate(wl.stream(n_requests, seed=seed + 1)):
         rids.append(eng.submit(prompt, node_id=i % 2, cluster_id=sess % 2
                                if coic is not None else 0))
         eng.step()
-    eng.run_until_drained()
+        _snap()
+    while eng.pending or eng.queue or eng.chunking or eng.active:
+        eng.step()
+        _snap()
     wall = time.perf_counter() - t0
     by = {r.req_id: r for r in eng.results}
-    return eng, {rid: by[rid] for rid in rids}, wall
+    return eng, {rid: by[rid] for rid in rids}, wall, snaps
 
 
 def run(seed: int = 0, n_requests: int = 32, smoke: bool = False,
@@ -92,8 +110,8 @@ def run(seed: int = 0, n_requests: int = 32, smoke: bool = False,
     rows = []
     res = {}
     for share in (False, True):
-        eng, by, wall = _drive(model, params, wl, share=share,
-                               n_requests=n_requests, seed=seed)
+        eng, by, wall, _ = _drive(model, params, wl, share=share,
+                                  n_requests=n_requests, seed=seed)
         pt = eng.stats()["prefill_tokens"]
         p99 = float(np.percentile([r.completion_ms for r in by.values()], 99))
         res[share] = (eng, by, pt, p99)
@@ -121,6 +139,45 @@ def run(seed: int = 0, n_requests: int = 32, smoke: bool = False,
                  f"tokens_match={match};refcounts_drained={bool(drained)};"
                  f"ok={ok}"))
 
+    # gathered-view vs in-place paged-attention kernel: the same stream
+    # through the same paged+shared engine, differing only in attn_impl.
+    # Off-TPU the kernel runs interpreted (Python-speed — steps/s is NOT
+    # comparable there; the modeled HBM bytes/step and the token match
+    # are), so the pair uses a smaller slice of the stream.
+    import jax as _jax
+
+    from repro.kernels.paged_attention import attention_kv_bytes_per_step
+
+    on_tpu = _jax.default_backend() == "tpu"
+    kimpl = "paged" if on_tpu else "paged_interpret"
+    n_attn = n_requests if on_tpu else max(6, n_requests // 4)
+    attn_res = {}
+    for name, impl, model_impl in (
+            ("kv_attn_gathered", "gather", "gather"),
+            ("kv_attn_paged_kernel", kimpl, "paged")):
+        eng, by, wall, snaps = _drive(model, params, wl, share=True,
+                                      n_requests=n_attn, seed=seed,
+                                      attn_impl=impl)
+        per_layer = float(np.mean([attention_kv_bytes_per_step(
+            s, page_size=16, max_len=96, kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, dtype_bytes=np.dtype(cfg.dtype).itemsize,
+            impl=model_impl) for s in snaps]))
+        steps_per_s = eng.step_count / max(wall, 1e-9)
+        attn_res[name] = (by, per_layer)
+        rows.append((name, wall / max(1, eng.step_count) * 1e6,
+                     f"steps_per_s={steps_per_s:.2f};"
+                     f"hbm_bytes_per_step_per_layer={per_layer:.0f};"
+                     f"attn_impl={impl}"))
+    by_g, bytes_g = attn_res["kv_attn_gathered"]
+    by_k, bytes_k = attn_res["kv_attn_paged_kernel"]
+    attn_match = all(np.array_equal(by_g[r].tokens, by_k[r].tokens)
+                     for r in by_g)
+    attn_ok = attn_match and bytes_k < bytes_g
+    rows.append(("kv_attn_accept", 0.0,
+                 f"bytes_gathered={bytes_g:.0f};bytes_paged={bytes_k:.0f};"
+                 f"bytes_ratio={bytes_k / max(bytes_g, 1e-9):.3f};"
+                 f"tokens_match={attn_match};ok={attn_ok}"))
+
     # ladder bound under paged continuous batching: a federated CoIC front
     # in front of the paged engine must keep the per-step ladder at <= 2
     # engine dispatches (1 descriptor + 1 grouped lookup) and <= 4 inside
@@ -128,9 +185,9 @@ def run(seed: int = 0, n_requests: int = 32, smoke: bool = False,
     coic = CoICConfig(capacity=32, threshold=0.98, descriptor="sketch",
                       descriptor_dim=64, num_nodes=2, num_clusters=2,
                       digest_size=16, digest_interval=4)
-    eng_l, _, _ = _drive(model, params, wl, share=True,
-                         n_requests=max(12, n_requests // 2),
-                         seed=seed + 7, coic=coic)
+    eng_l, _, _, _ = _drive(model, params, wl, share=True,
+                            n_requests=max(12, n_requests // 2),
+                            seed=seed + 7, coic=coic)
     fed_max = eng_l.sem_fed.stats()["max_ladder_dispatches"]
     chunked = eng_l.dispatches["prefill_chunk"]
     bound_ok = eng_l.max_step_ladder <= 2 and fed_max <= 4 and chunked > 0
@@ -152,6 +209,10 @@ def run(seed: int = 0, n_requests: int = 32, smoke: bool = False,
                 "p99_mtp_ms_share_off": p99_off,
                 "tokens_match": bool(match),
                 "ok": bool(ok),
+                "attn_hbm_bytes_per_step_gathered": bytes_g,
+                "attn_hbm_bytes_per_step_paged_kernel": bytes_k,
+                "attn_tokens_match": bool(attn_match),
+                "attn_ok": bool(attn_ok),
             }, f, indent=2)
     return rows
 

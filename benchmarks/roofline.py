@@ -112,6 +112,30 @@ def load_all(mesh: str = "single"):
     return rows
 
 
+def paged_attention_row(arch: str = "coic-paper", batch: int = 8,
+                        max_len: int = 512, page: int = 16,
+                        fill_frac: float = 0.5):
+    """Closed-form memory roofline of ONE decode step's per-layer KV
+    attention read over the paged pool, gathered view vs in-place kernel
+    (kernels/paged_attention byte model).  Decode attention is memory
+    bound, so time-per-layer ~= bytes / HBM_bw; the ratio is the modeled
+    step-time cut the fused kernel buys on the serving path."""
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.kernels.paged_attention import attention_kv_bytes_per_step
+
+    cfg = get_config(arch)
+    kv_len = np.full((batch,), int(max_len * fill_frac), np.int64)
+    kw = dict(page_size=page, max_len=max_len, kv_heads=cfg.num_kv_heads,
+              head_dim=cfg.head_dim, dtype_bytes=2)
+    b_gather = attention_kv_bytes_per_step(kv_len, impl="gather", **kw)
+    b_paged = attention_kv_bytes_per_step(kv_len, impl="paged", **kw)
+    return {"t_gather_s": b_gather / HBM_BW, "t_paged_s": b_paged / HBM_BW,
+            "bytes_gather": b_gather, "bytes_paged": b_paged,
+            "ratio": b_paged / b_gather}
+
+
 def run(seed: int = 0):
     """benchmarks.run interface: one row per runnable cell."""
     rows = []
@@ -124,6 +148,11 @@ def run(seed: int = 0):
                      f"dominant={r['dominant']}"
                      f";roofline_frac={r['roofline_fraction']:.3f}"
                      f";useful={r['useful_ratio']:.2f}"))
+    pa = paged_attention_row()
+    rows.append(("roofline_paged_attention", pa["t_paged_s"] * 1e6,
+                 "dominant=memory"
+                 f";t_gather_us={pa['t_gather_s'] * 1e6:.2f}"
+                 f";bytes_ratio={pa['ratio']:.3f}"))
     return rows
 
 

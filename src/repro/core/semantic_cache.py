@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policies import EvictionPolicy
-from repro.kernels.similarity import similarity_lookup
+from repro.kernels.similarity import similarity_lookup, similarity_topk_touch
 
 
 @jax.tree_util.register_dataclass
@@ -59,6 +59,10 @@ class SemanticCache:
     payload_dtype: str = "float32"
     policy: EvictionPolicy = EvictionPolicy("lru")
     lookup_impl: str = "auto"        # kernels/similarity impl switch
+    # fold the LRU touch into the lookup kernel's epilogue (one HBM pass
+    # over the (C,) metadata instead of lookup + gather/scatter); the
+    # unfused apply_probe path stays as the oracle
+    fuse_touch: bool = False
 
     # ------------------------------------------------------------------
     def init(self) -> SemanticCacheState:
@@ -85,8 +89,32 @@ class SemanticCache:
                ) -> Tuple[SemanticCacheState, LookupResult]:
         """queries: (Q, D) unit descriptors.  Updates LRU/LFU/stat fields.
         ``mask`` (Q,) bool selects real rows — padding rows (batched engine
-        steps pad to fixed widths) never hit, touch, or count in stats."""
+        steps pad to fixed widths) never hit, touch, or count in stats.
+
+        ``fuse_touch=True`` routes through ``similarity_topk_touch``: the
+        kernel's epilogue writes the LRU touch in the same launch, and only
+        the counters/clock update host-side.  Identical state transition to
+        the unfused path (one cosmetic exception: an all-expired cache
+        reports score -1e30 instead of -inf)."""
         alive = self.policy.expire(state, state.clock)
+        if self.fuse_touch:
+            Q = queries.shape[0]
+            m = jnp.ones((Q,), bool) if mask is None else mask
+            idx, score, last_used, freq = similarity_topk_touch(
+                queries, state.keys, alive, 1, state.last_used, state.freq,
+                state.clock, threshold=self.threshold, mask=m,
+                impl=self.lookup_impl)
+            idx, score = idx[:, 0], score[:, 0]
+            hit = (score >= self.threshold) & jnp.take(alive, idx) & m
+            value = jnp.where(hit[:, None], state.values[idx], 0)
+            nhit = hit.sum(dtype=jnp.int32)
+            nreal = m.sum(dtype=jnp.int32)
+            new_state = dataclasses.replace(
+                state, valid=alive, last_used=last_used, freq=freq,
+                clock=state.clock + 1,
+                hits=state.hits + nhit,
+                misses=state.misses + (nreal - nhit))
+            return new_state, LookupResult(hit, idx, score, value)
         idx, score = similarity_lookup(queries, state.keys, alive,
                                        impl=self.lookup_impl)
         return self.apply_probe(state, idx, score, mask=mask, alive=alive)

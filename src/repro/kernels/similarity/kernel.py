@@ -18,6 +18,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
@@ -213,6 +214,114 @@ def similarity_topk_batched_kernel(queries: jax.Array, keys: jax.Array,
         interpret=interpret,
     )(queries, keys, valid.astype(jnp.int8))
     return idx, score
+
+
+def _topk_touch_kernel(clock_ref, q_ref, qmask_ref, k_ref, valid_ref,
+                       lu_ref, fr_ref, idx_ref, score_ref, lu_out, fr_out, *,
+                       block_c: int, k: int, threshold: float):
+    """One (pass, c-block) grid step of the fused top-k + LRU-touch kernel.
+
+    Pass 0 is ``_topk_kernel`` verbatim (running top-k in the output
+    blocks).  Pass 1 re-walks the c-blocks once with the finished top-1 in
+    VMEM and writes the LRU epilogue in place: a slot's ``last_used``
+    raises to ``clock`` and its ``freq`` gains the number of above-
+    threshold queries whose best index landed in it — the scatter-max /
+    scatter-add of ``SemanticCache.apply_probe``, multiplicity included,
+    folded into the same launch so the (C,) metadata arrays make ONE
+    HBM round-trip instead of a separate gather/scatter dispatch.
+    ``qmask`` zeroes padded query rows so they can never touch a slot.
+    """
+    p = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((p == 0) & (j == 0))
+    def _init():
+        score_ref[...] = jnp.full_like(score_ref, NEG_INF)
+        idx_ref[...] = jax.lax.broadcasted_iota(jnp.int32, idx_ref.shape, 1)
+
+    @pl.when(p == 0)
+    def _scan():
+        s, i = _topk_tile(q_ref[...].astype(jnp.float32),
+                          k_ref[...].astype(jnp.float32),
+                          valid_ref[...], score_ref[...], idx_ref[...],
+                          block_c=block_c, k=k, c_block_index=j)
+        score_ref[...] = s
+        idx_ref[...] = i
+
+    @pl.when(p == 1)
+    def _touch():
+        best_i = idx_ref[:, 0]                              # (BQ,)
+        best_s = score_ref[:, 0]
+        # invalid slots score NEG_INF, so the threshold test subsumes the
+        # oracle's take(valid, idx) aliveness check
+        hit = (best_s >= threshold) & (qmask_ref[...] != 0)
+        slots = j * block_c + jax.lax.broadcasted_iota(
+            jnp.int32, (best_i.shape[0], block_c), 1)       # (BQ, BC)
+        match = hit[:, None] & (best_i[:, None] == slots)
+        counts = match.sum(axis=0).astype(jnp.int32)        # (BC,)
+        clock = clock_ref[0]
+        lu = lu_ref[...]
+        lu_out[...] = jnp.where(counts > 0, jnp.maximum(lu, clock), lu)
+        fr_out[...] = fr_ref[...] + counts
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_c", "threshold",
+                                             "interpret"))
+def similarity_topk_touch_kernel(queries: jax.Array, qmask: jax.Array,
+                                 keys: jax.Array, valid: jax.Array,
+                                 last_used: jax.Array, freq: jax.Array,
+                                 clock: jax.Array, *, k: int,
+                                 threshold: float, block_c: int = 512,
+                                 interpret: bool = False):
+    """queries: (Q, D) — ONE query block (ops.py pads Q whole); qmask: (Q,)
+    bool/int8, 0 for padded rows; keys: (C, D); valid: (C,) bool/int8;
+    last_used/freq: (C,) int32; clock: scalar int32 (rides SMEM).
+
+    Returns (idx (Q, k) int32, score (Q, k) f32, last_used (C,) int32,
+    freq (C,) int32).  Grid (2, C // block_c): the pass dim is outermost so
+    the top-k output blocks are final before the touch pass reads them; the
+    lu/fr blocks are only mapped on pass 1, so each is read+written exactly
+    once."""
+    Q, D = queries.shape
+    C = keys.shape[0]
+    assert C % block_c == 0, (C, block_c)
+    assert k <= block_c, (k, block_c)
+
+    kernel = functools.partial(_topk_touch_kernel, block_c=block_c, k=k,
+                               threshold=threshold)
+    # lu/fr in/out blocks advance only during the touch pass; pinning them
+    # to block 0 during pass 0 keeps Pallas from flushing half-done state
+    pass1 = lambda p, j: (jnp.where(p == 1, j, 0),)
+    idx, score, lu, fr = pl.pallas_call(
+        kernel,
+        grid=(2, C // block_c),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),              # clock (1,)
+            pl.BlockSpec((Q, D), lambda p, j: (0, 0)),
+            pl.BlockSpec((Q,), lambda p, j: (0,)),
+            pl.BlockSpec((block_c, D),
+                         lambda p, j: (jnp.where(p == 0, j, 0), 0)),
+            pl.BlockSpec((block_c,), lambda p, j: (jnp.where(p == 0, j, 0),)),
+            pl.BlockSpec((block_c,), pass1),
+            pl.BlockSpec((block_c,), pass1),
+        ],
+        out_specs=[
+            pl.BlockSpec((Q, k), lambda p, j: (0, 0)),
+            pl.BlockSpec((Q, k), lambda p, j: (0, 0)),
+            pl.BlockSpec((block_c,), pass1),
+            pl.BlockSpec((block_c,), pass1),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+            jax.ShapeDtypeStruct((Q, k), jnp.float32),
+            jax.ShapeDtypeStruct((C,), jnp.int32),
+            jax.ShapeDtypeStruct((C,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(clock.reshape(1).astype(jnp.int32), queries, qmask.astype(jnp.int8),
+      keys, valid.astype(jnp.int8), last_used.astype(jnp.int32),
+      freq.astype(jnp.int32))
+    return idx, score, lu, fr
 
 
 @functools.partial(jax.jit, static_argnames=("block_q", "block_c", "interpret"))

@@ -13,10 +13,12 @@ import jax.numpy as jnp
 
 from repro.kernels.similarity.kernel import (similarity_lookup_kernel,
                                              similarity_topk_batched_kernel,
-                                             similarity_topk_kernel)
+                                             similarity_topk_kernel,
+                                             similarity_topk_touch_kernel)
 from repro.kernels.similarity.ref import (similarity_lookup_ref,
                                           similarity_topk_batched_ref,
-                                          similarity_topk_ref)
+                                          similarity_topk_ref,
+                                          similarity_topk_touch_ref)
 
 
 def _backend_is_tpu() -> bool:
@@ -86,6 +88,53 @@ def similarity_topk(queries: jax.Array, keys: jax.Array, valid: jax.Array,
         qp, kp, vp, k=k, block_q=bq, block_c=bc,
         interpret=(impl == "pallas_interpret"))
     return idx[:Q], score[:Q]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "threshold", "impl", "block_c"))
+def similarity_topk_touch(queries: jax.Array, keys: jax.Array,
+                          valid: jax.Array, k: int, last_used: jax.Array,
+                          freq: jax.Array, clock: jax.Array, *,
+                          threshold: float, mask: jax.Array = None,
+                          impl: str = "auto", block_c: int = 512):
+    """Fused top-k lookup + LRU-touch epilogue (one HBM pass over the cache
+    metadata instead of lookup-then-gather/scatter).
+
+    queries: (Q, D) unit-norm descriptors; keys: (C, D); valid: (C,) bool;
+    last_used/freq: (C,) int32 LRU metadata; clock: scalar int32.  Returns
+    (idx (Q, k) int32, score (Q, k) f32, last_used (C,) int32, freq (C,)
+    int32): the top-k of ``similarity_topk`` plus the metadata with every
+    above-``threshold`` top-1 winner touched (``last_used`` scatter-maxed
+    to ``clock``, ``freq`` scatter-added with multiplicity) — exactly
+    ``SemanticCache.apply_probe``'s update.  k must be <= C.  ``mask``
+    (Q,) bool rows that are False never touch (the engine's padded rows).
+
+    impl: auto | pallas | pallas_interpret | ref
+    """
+    C = keys.shape[0]
+    assert k <= C, (k, C)
+    if impl == "auto":
+        impl = "pallas" if _backend_is_tpu() else "ref"
+    if impl == "ref":
+        return similarity_topk_touch_ref(queries, keys, valid, k, last_used,
+                                         freq, clock, threshold, mask=mask)
+
+    Q, D = queries.shape
+    bc = max(min(block_c, max(8, C)), k)     # kernel needs k <= block_c
+    pad_q = (-Q) % 8                         # single q-block: pad Q whole
+    pad_c = (-C) % bc
+    qp = jnp.pad(queries, ((0, pad_q), (0, 0)))
+    qmask = (jnp.ones((Q,), jnp.int8) if mask is None
+             else mask.astype(jnp.int8))
+    qmask = jnp.pad(qmask, (0, pad_q))
+    kp = jnp.pad(keys, ((0, pad_c), (0, 0)))
+    vp = jnp.pad(valid.astype(jnp.int8), (0, pad_c))
+    lup = jnp.pad(last_used.astype(jnp.int32), (0, pad_c))
+    frp = jnp.pad(freq.astype(jnp.int32), (0, pad_c))
+    idx, score, lu, fr = similarity_topk_touch_kernel(
+        qp, qmask, kp, vp, lup, frp, clock, k=k, threshold=threshold,
+        block_c=bc, interpret=(impl == "pallas_interpret"))
+    return idx[:Q], score[:Q], lu[:C], fr[:C]
 
 
 @functools.partial(jax.jit,

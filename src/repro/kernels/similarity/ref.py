@@ -46,6 +46,30 @@ def similarity_topk_ref(queries: jax.Array, keys: jax.Array,
     return top_idx.astype(jnp.int32), top_scores
 
 
+def similarity_topk_touch_ref(queries: jax.Array, keys: jax.Array,
+                              valid: jax.Array, k: int, last_used: jax.Array,
+                              freq: jax.Array, clock: jax.Array,
+                              threshold: float, mask=None):
+    """Unfused oracle for the fused top-k + LRU-touch kernel.
+
+    Runs ``similarity_topk_ref`` then replays ``SemanticCache.apply_probe``'s
+    metadata update: each query whose top-1 score clears ``threshold``
+    scatter-maxes ``clock`` into its winning slot's ``last_used`` and
+    scatter-adds 1 to its ``freq`` (duplicate winners accumulate).  ``mask``
+    (Q,) bool rows that are False never touch.  Returns (idx (Q, k),
+    score (Q, k), last_used (C,), freq (C,)).
+    """
+    idx, score = similarity_topk_ref(queries, keys, valid, k)
+    C = keys.shape[0]
+    hit = score[:, 0] >= threshold
+    if mask is not None:
+        hit = hit & mask
+    touched = jnp.where(hit, idx[:, 0], C)                 # C: dropped
+    last_used = last_used.at[touched].max(jnp.int32(clock), mode="drop")
+    freq = freq.at[touched].add(1, mode="drop")
+    return idx, score, last_used, freq
+
+
 def similarity_topk_batched_ref(queries: jax.Array, keys: jax.Array,
                                 valid: jax.Array, k: int):
     """Vmapped top-k oracle for the grouped-query path.

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels.paged_attention import paged_attention
 from repro.models import layers as L
 from repro.models import ssm as S
 from repro.parallel.sharding import constrain
@@ -622,7 +623,8 @@ class DecoderLM:
     def _sublayer_chunk(self, sl: SubLayer, p: dict, prefix: str, x, lengths,
                         layer_cache: dict, base: str, *,
                         valid: Optional[jax.Array] = None,
-                        block_table: Optional[jax.Array] = None):
+                        block_table: Optional[jax.Array] = None,
+                        attn_impl: str = "gather"):
         """x: (B, C, D) chunk; lengths: (B,) cache fill before this chunk.
 
         ``valid`` (B, C) bool marks real tokens of a width-padded chunk
@@ -630,7 +632,13 @@ class DecoderLM:
         their activations are discarded by the caller's per-row logit
         gather.  ``block_table`` (B, n_pages) switches the cache leaves to
         the paged pool layout (``paged_cache_specs``): writes scatter into
-        physical pages, attention reads a gathered dense view."""
+        physical pages, attention reads the pool — through the gathered
+        dense view (``attn_impl="gather"``, the bit-exactness oracle) or
+        in place via the Pallas paged-attention kernel (any
+        ``kernels/paged_attention`` impl: auto / pallas / pallas_interpret
+        / ref), which resolves the block table inside its grid and never
+        materializes the (B, max_len) copy.  MLA layers always gather (the
+        kernel is GQA-shaped; the latent cache stays on the oracle path)."""
         cfg = self.cfg
         Bsz, C, _ = x.shape
         new_cache = {}
@@ -660,11 +668,19 @@ class DecoderLM:
             ck = write(layer_cache[f"{base}/k"], k)
             cv = write(layer_cache[f"{base}/v"], v)
             new_cache[f"{base}/k"], new_cache[f"{base}/v"] = ck, cv
-            ck, cv = view(ck), view(cv)
-            Sk = ck.shape[1]
-            kpos = jnp.broadcast_to(jnp.arange(Sk)[None, :], (Bsz, Sk))
-            mask = L.attention_mask(positions, kpos, causal=True)
-            attn = L.gqa_attention(q, ck, cv, mask)
+            if block_table is not None and attn_impl != "gather":
+                # in-place page read: the kernel's causal mask
+                # k_pos <= lengths + c matches attention_mask over the
+                # gathered view (pad-query rows read junk either way —
+                # the caller's logit gather discards them)
+                attn = paged_attention(q, ck, cv, block_table, lengths,
+                                       impl=attn_impl)
+            else:
+                ck, cv = view(ck), view(cv)
+                Sk = ck.shape[1]
+                kpos = jnp.broadcast_to(jnp.arange(Sk)[None, :], (Bsz, Sk))
+                mask = L.attention_mask(positions, kpos, causal=True)
+                attn = L.gqa_attention(q, ck, cv, mask)
             x = x + L.attention_out(p, f"{prefix}/attn", attn)
         elif sl.kind == "mla":
             h = L.rms_norm(x, p[f"{prefix}/attn_norm"], cfg.norm_eps)
@@ -706,7 +722,8 @@ class DecoderLM:
 
     def prefill_chunk(self, params: dict, tokens: jax.Array, cache: dict,
                       lengths: jax.Array, widths: Optional[jax.Array] = None,
-                      *, block_table: Optional[jax.Array] = None):
+                      *, block_table: Optional[jax.Array] = None,
+                      attn_impl: str = "gather"):
         """Run one chunk of prompt tokens against an existing cache.
 
         tokens: (B, C); lengths: (B,) cache fill per row (the chunk occupies
@@ -728,6 +745,13 @@ class DecoderLM:
         INVALID entries (>= num_pages) make a row inert (writes drop,
         reads are position-masked junk) — how pad rows and decode-phase
         rows coexist in one dispatch.
+
+        ``attn_impl`` selects how paged attention reads the pool:
+        ``"gather"`` (default) materializes the per-row dense view
+        (``_paged_view``, the bit-exactness oracle); any
+        ``kernels/paged_attention`` impl (``"auto"`` / ``"pallas"`` /
+        ``"pallas_interpret"`` / ``"ref"``) reads pages in place through
+        the fused Pallas kernel.  Ignored without a block table.
         """
         cfg = self.cfg
         Bsz, C = tokens.shape
@@ -747,7 +771,8 @@ class DecoderLM:
                     x, c = self._sublayer_chunk(
                         sl, layer_params, base, x, lengths,
                         {k: v for k, v in layer_cache.items() if k.startswith(base)},
-                        base, valid=valid, block_table=block_table)
+                        base, valid=valid, block_table=block_table,
+                        attn_impl=attn_impl)
                     nc.update(c)
                 return x, nc
 
@@ -782,14 +807,19 @@ class DecoderLM:
     # ------------------------------------------------------------------
     def _sublayer_decode(self, sl: SubLayer, p: dict, prefix: str, x, lengths,
                          layer_cache: dict, base: str,
-                         block_table: Optional[jax.Array] = None):
+                         block_table: Optional[jax.Array] = None,
+                         attn_impl: str = "gather"):
         """x: (B,1,D); lengths: (B,) current cache fill (also the position of
         the incoming token).  Returns (x, new_layer_cache).
 
         ``block_table`` (B, n_pages) switches the cache leaves to the paged
         pool layout: the new token scatters into its row's physical page
         (INVALID entries drop the write — how prefilling/idle rows ride a
-        decode dispatch unharmed) and attention reads a gathered view."""
+        decode dispatch unharmed) and attention reads the pool — gathered
+        (``attn_impl="gather"``) or in place via the paged-attention
+        kernel (any ``kernels/paged_attention`` impl), whose INVALID-page
+        skip makes idle rows finalize to zeros just as the gather path's
+        position mask does.  MLA layers always gather."""
         cfg = self.cfg
         Bsz = x.shape[0]
         new_cache = {}
@@ -815,20 +845,26 @@ class DecoderLM:
             ck = write(layer_cache[f"{base}/k"], k[:, 0])
             cv = write(layer_cache[f"{base}/v"], v[:, 0])
             new_cache[f"{base}/k"], new_cache[f"{base}/v"] = ck, cv
-            ck, cv = view(ck), view(cv)
-            Sk = ck.shape[1]
-            # key absolute position per slot: for ring buffers the slot j holds
-            # position p with p % Sk == j and p <= lengths; reconstruct (for
-            # linear/paged caches Sk covers every position, so this reduces
-            # to kpos == slot and the plain causal mask kpos <= lengths):
-            slots = jnp.arange(Sk)[None, :]
-            cur = lengths[:, None]
-            kpos = cur - ((cur - slots) % Sk)                      # (B, Sk) absolute pos
-            valid = (kpos >= 0) & (kpos <= cur)
-            if cfg.sliding_window > 0:
-                valid &= kpos > cur - cfg.sliding_window
-            mask = valid[:, None, :]                               # (B,1,Sk)
-            attn = L.gqa_attention(q, ck, cv, mask)
+            if (block_table is not None and attn_impl != "gather"
+                    and cfg.sliding_window == 0):
+                attn = paged_attention(q, ck, cv, block_table, lengths,
+                                       impl=attn_impl)
+            else:
+                ck, cv = view(ck), view(cv)
+                Sk = ck.shape[1]
+                # key absolute position per slot: for ring buffers the slot j
+                # holds position p with p % Sk == j and p <= lengths;
+                # reconstruct (for linear/paged caches Sk covers every
+                # position, so this reduces to kpos == slot and the plain
+                # causal mask kpos <= lengths):
+                slots = jnp.arange(Sk)[None, :]
+                cur = lengths[:, None]
+                kpos = cur - ((cur - slots) % Sk)              # (B, Sk) abs pos
+                valid = (kpos >= 0) & (kpos <= cur)
+                if cfg.sliding_window > 0:
+                    valid &= kpos > cur - cfg.sliding_window
+                mask = valid[:, None, :]                       # (B,1,Sk)
+                attn = L.gqa_attention(q, ck, cv, mask)
             x = x + L.attention_out(p, f"{prefix}/attn", attn)
         elif sl.kind == "mla":
             h = L.rms_norm(x, p[f"{prefix}/attn_norm"], cfg.norm_eps)
@@ -861,12 +897,15 @@ class DecoderLM:
 
     def decode_step(self, params: dict, cache: dict, tokens: jax.Array,
                     lengths: jax.Array, *,
-                    block_table: Optional[jax.Array] = None):
+                    block_table: Optional[jax.Array] = None,
+                    attn_impl: str = "gather"):
         """One decode step.  tokens: (B,) int32; lengths: (B,) int32 cache
         fill per row.  Returns (logits (B,V), new_cache, new_lengths).
 
         ``block_table`` (B, n_pages) int32 switches ``cache`` to the paged
-        pool layout of ``paged_cache_specs`` (see ``_sublayer_decode``)."""
+        pool layout of ``paged_cache_specs`` (see ``_sublayer_decode``);
+        ``attn_impl`` != "gather" additionally routes attention through the
+        in-place ``kernels/paged_attention`` op with that impl string."""
         cfg = self.cfg
         x = params["embed/tokens"][tokens][:, None, :]             # (B,1,D)
 
@@ -883,7 +922,7 @@ class DecoderLM:
                     x, c = self._sublayer_decode(
                         sl, layer_params, base, x, lengths,
                         {k: v for k, v in layer_cache.items() if k.startswith(base)},
-                        base, block_table=block_table)
+                        base, block_table=block_table, attn_impl=attn_impl)
                     nc.update(c)
                 return x, nc
 

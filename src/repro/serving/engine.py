@@ -141,6 +141,12 @@ class ServingConfig:
     # index instead of re-prefilled (kv_cache.PagedKVCache)
     kv_page: int = 0
     kv_pages: int = 0                # pool size (0 = 2x max_batch span)
+    # attention read over the paged pool: "gather" materializes the dense
+    # per-row view (_paged_view — the bytes-hungry oracle), "paged" reads
+    # KV pages in place via the fused kernels/paged_attention op (Pallas
+    # on TPU, jnp oracle elsewhere), "paged_interpret" forces the Pallas
+    # interpreter (CI bit-exactness).  Requires kv_page > 0.
+    attn_impl: str = "gather"        # gather | paged | paged_interpret
     prefix_share: bool = True        # probe/publish the prefix index
     prefix_mode: str = "exact"       # exact | semantic (n-gram sketch)
     # prompts longer than max_len: "reject" raises PromptTooLongError at
@@ -155,6 +161,11 @@ class ServingConfig:
         assert self.chunk_pacing >= 1, self.chunk_pacing
         assert self.on_overflow in ("reject", "truncate"), self.on_overflow
         assert self.kv_page >= 0, self.kv_page
+        assert self.attn_impl in ("gather", "paged", "paged_interpret"), \
+            self.attn_impl
+        if self.attn_impl != "gather":
+            assert self.kv_page > 0, \
+                "attn_impl=%r needs a paged cache (kv_page > 0)" % self.attn_impl
         if self.kv_page:
             assert self.max_len % self.kv_page == 0, \
                 (self.max_len, self.kv_page)
@@ -283,13 +294,17 @@ class ServingEngine:
             lambda p, t, ln: model.prefill(p, t, max_len=cfg.max_len,
                                            lengths=ln))
         if self._paged:
+            # map the serving-level knob onto the kernel wrapper's impl
+            # strings; "gather" keeps the dense-view oracle path
+            _impl = {"gather": "gather", "paged": "auto",
+                     "paged_interpret": "pallas_interpret"}[cfg.attn_impl]
             self._chunk_paged = jax.jit(
                 lambda p, t, c, ln, w, bt: model.prefill_chunk(
-                    p, t, c, ln, w, block_table=bt),
+                    p, t, c, ln, w, block_table=bt, attn_impl=_impl),
                 donate_argnums=(2,))
             self._decode_paged = jax.jit(
                 lambda p, c, t, ln, bt: model.decode_step(
-                    p, c, t, ln, block_table=bt),
+                    p, c, t, ln, block_table=bt, attn_impl=_impl),
                 donate_argnums=(1,))
         # chunked prefill needs linear caches: SWA rings rotate by padded
         # length and recurrent conv/state prefill absorbs pads, so those

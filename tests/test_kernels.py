@@ -1,13 +1,25 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs the ref.py
 pure-jnp oracle.  interpret mode executes the kernel body in Python on CPU,
-validating BlockSpec indexing, online-softmax math and masking."""
+validating BlockSpec indexing, online-softmax math and masking.
+
+This file is the line of defense for every decode-path kernel: the ops.py
+wrappers route ``impl="auto"`` to the jnp ref off-TPU, so CI never executes
+a Pallas body through the serving path — only the explicit
+``pallas_interpret`` cases here (and the engine-level ones in
+test_kv_paged.py) do."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.similarity import similarity_lookup
+from repro.kernels.paged_attention import (attention_kv_bytes_per_step,
+                                           paged_attention,
+                                           paged_attention_ref)
+from repro.kernels.similarity import (similarity_lookup, similarity_topk_touch,
+                                      similarity_topk_touch_ref)
+from repro.serving.kv_cache import PagedKVCache
 
 
 def _unit(rng, *shape):
@@ -101,6 +113,247 @@ class TestDecodeAttention:
         out = decode_attention(q, kk, v, np.zeros((b,), np.int32),
                                impl="pallas_interpret", block_kv=16)
         assert np.all(np.isfinite(np.asarray(out)))
+
+
+def _paged_case(rng, *, B, page, n_pages, K, D, H=None, C=1, lengths=None,
+                shared_pages=0, dtype=np.float32):
+    """Build a pool + block tables the way PagedKVCache lays them out:
+    rows map ceil(len / page) pages (first ``shared_pages`` of them shared
+    across all rows — the prefix-index case), everything else INVALID."""
+    H = H or K
+    P = n_pages * B + 1                  # headroom: distinct pages per row
+    if lengths is None:
+        lengths = rng.integers(0, n_pages * page - C + 1, size=(B,))
+    lengths = np.asarray(lengths, np.int32)
+    kp = rng.normal(size=(P, page, K, D)).astype(dtype)
+    vp = rng.normal(size=(P, page, K, D)).astype(dtype)
+    bt = np.full((B, n_pages), PagedKVCache.INVALID, np.int32)
+    nxt = shared_pages
+    for b in range(B):
+        used = -(-int(lengths[b] + C) // page)       # pages the row touches
+        for j in range(min(used, n_pages)):
+            if j < shared_pages:
+                bt[b, j] = j
+            else:
+                bt[b, j] = nxt
+                nxt += 1
+    q = rng.normal(size=(B, C, H, D)).astype(dtype)
+    return (jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp),
+            jnp.asarray(bt), jnp.asarray(lengths))
+
+
+class TestPagedAttention:
+    """Fused in-place paged attention vs the gather-path oracle (ref.py
+    replicates ``_paged_view`` + the model's fp32-softmax GQA bit for bit,
+    so ref-vs-interpret closeness here transfers to the serving path)."""
+
+    @pytest.mark.parametrize("B,page,n_pages,K,H,D,C", [
+        (3, 16, 4, 2, 4, 16, 1),       # GQA decode
+        (2, 8, 6, 4, 4, 32, 1),        # MHA decode, ragged
+        (2, 16, 4, 2, 8, 16, 8),       # chunked prefill, 4 q heads/group
+        (1, 32, 2, 1, 2, 64, 16),      # single row, wide chunk
+    ])
+    def test_matches_gather_oracle(self, B, page, n_pages, K, H, D, C, nprng):
+        q, kp, vp, bt, ln = _paged_case(nprng, B=B, page=page,
+                                        n_pages=n_pages, K=K, H=H, D=D, C=C)
+        o_ref = paged_attention(q, kp, vp, bt, ln, impl="ref")
+        o_pal = paged_attention(q, kp, vp, bt, ln, impl="pallas_interpret")
+        np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_pal),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_partial_last_page_and_page_boundary(self, nprng):
+        """Rows sitting mid-page, exactly on a page boundary, and at 0."""
+        q, kp, vp, bt, ln = _paged_case(nprng, B=4, page=16, n_pages=4, K=2,
+                                        H=4, D=16, lengths=[5, 16, 32, 0])
+        o_ref = paged_attention(q, kp, vp, bt, ln, impl="ref")
+        o_pal = paged_attention(q, kp, vp, bt, ln, impl="pallas_interpret")
+        np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_pal),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_idle_all_invalid_row_is_finite(self, nprng):
+        """An idle decode slot rides the dispatch with an all-INVALID table
+        row; the kernel must finalize it to exact zeros, not NaN."""
+        q, kp, vp, bt, ln = _paged_case(nprng, B=3, page=16, n_pages=3, K=2,
+                                        H=4, D=16, lengths=[20, 0, 7])
+        bt = bt.at[1].set(PagedKVCache.INVALID)
+        out = np.asarray(paged_attention(q, kp, vp, bt, ln,
+                                         impl="pallas_interpret"))
+        assert np.all(np.isfinite(out))
+        np.testing.assert_array_equal(out[1], 0.0)
+
+    def test_shared_prefix_pages(self, nprng):
+        """Cross-user shared prefix pages: rows alias physical pages."""
+        q, kp, vp, bt, ln = _paged_case(nprng, B=4, page=8, n_pages=6, K=2,
+                                        H=4, D=16, shared_pages=2,
+                                        lengths=[30, 22, 17, 40])
+        assert np.array_equal(np.asarray(bt)[:, :2],
+                              np.tile([[0, 1]], (4, 1)))
+        o_ref = paged_attention(q, kp, vp, bt, ln, impl="ref")
+        o_pal = paged_attention(q, kp, vp, bt, ln, impl="pallas_interpret")
+        np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_pal),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_bf16(self, nprng):
+        q, kp, vp, bt, ln = _paged_case(nprng, B=2, page=16, n_pages=3, K=2,
+                                        H=4, D=32, dtype=np.float32)
+        q, kp, vp = (x.astype(jnp.bfloat16) for x in (q, kp, vp))
+        o_ref = paged_attention(q, kp, vp, bt, ln, impl="ref")
+        o_pal = paged_attention(q, kp, vp, bt, ln, impl="pallas_interpret")
+        np.testing.assert_allclose(np.asarray(o_ref, np.float32),
+                                   np.asarray(o_pal, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+    def test_auto_routes_to_ref_off_tpu(self, nprng):
+        """CI has no TPU: auto must be the jnp oracle, bit for bit."""
+        q, kp, vp, bt, ln = _paged_case(nprng, B=2, page=16, n_pages=3, K=2,
+                                        H=4, D=16)
+        if jax.default_backend() == "tpu":
+            pytest.skip("auto routes to the real kernel on TPU")
+        np.testing.assert_array_equal(
+            np.asarray(paged_attention(q, kp, vp, bt, ln, impl="auto")),
+            np.asarray(paged_attention(q, kp, vp, bt, ln, impl="ref")))
+
+    def test_seeded_property_sweep(self, nprng):
+        """Seeded stand-in for the hypothesis sweep: random ragged lengths,
+        INVALID rows, shared prefixes, chunk widths."""
+        for trial in range(8):
+            B = int(nprng.integers(1, 5))
+            page = int(nprng.choice([8, 16]))
+            n_pages = int(nprng.integers(2, 6))
+            K = int(nprng.choice([1, 2, 4]))
+            H = K * int(nprng.choice([1, 2, 4]))
+            C = int(nprng.choice([1, 1, 4, 8]))
+            q, kp, vp, bt, ln = _paged_case(
+                nprng, B=B, page=page, n_pages=n_pages, K=K, H=H, D=16, C=C,
+                shared_pages=int(nprng.integers(0, 2)))
+            o_ref = paged_attention(q, kp, vp, bt, ln, impl="ref")
+            o_pal = paged_attention(q, kp, vp, bt, ln,
+                                    impl="pallas_interpret")
+            np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_pal),
+                                       rtol=2e-3, atol=2e-3,
+                                       err_msg=f"trial {trial}")
+
+    def test_hypothesis_sweep(self, nprng):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=15, deadline=None)
+        @given(B=st.integers(1, 4), page=st.sampled_from([8, 16]),
+               n_pages=st.integers(2, 5), K=st.sampled_from([1, 2, 4]),
+               G=st.sampled_from([1, 2, 4]), C=st.sampled_from([1, 4, 8]),
+               seed=st.integers(0, 2**31 - 1))
+        def check(B, page, n_pages, K, G, C, seed):
+            rng = np.random.default_rng(seed)
+            q, kp, vp, bt, ln = _paged_case(rng, B=B, page=page,
+                                            n_pages=n_pages, K=K, H=K * G,
+                                            D=16, C=C)
+            o_ref = paged_attention(q, kp, vp, bt, ln, impl="ref")
+            o_pal = paged_attention(q, kp, vp, bt, ln,
+                                    impl="pallas_interpret")
+            np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_pal),
+                                       rtol=2e-3, atol=2e-3)
+
+        check()
+
+    def test_byte_model(self):
+        """The benchmark/docs byte model: in-place strictly below gather for
+        any non-empty batch, and exactly the mapped-page traffic."""
+        kv = np.array([100, 0, 17, 512])
+        kw = dict(page_size=16, max_len=512, kv_heads=8, head_dim=32,
+                  dtype_bytes=4)
+        g = attention_kv_bytes_per_step(kv, impl="gather", **kw)
+        p = attention_kv_bytes_per_step(kv, impl="paged", **kw)
+        mapped = sum(-(-int(x) // 16) * 16 for x in kv)
+        row = 2 * 8 * 32 * 4
+        assert p == mapped * row
+        assert g == (mapped + 2 * 4 * 512) * row
+        assert p < g
+        with pytest.raises(ValueError):
+            attention_kv_bytes_per_step(kv, impl="nope", **kw)
+
+
+class TestFusedTopkTouch:
+    """Fused top-k + LRU-touch epilogue vs the unfused oracle."""
+
+    def _case(self, rng, Q, C, D):
+        q = _unit(rng, Q, D)
+        ks = _unit(rng, C, D)
+        # exact hits incl. two queries hitting the SAME slot (multiplicity)
+        ks[3] = q[0]
+        ks[11 % C] = q[1]
+        if Q > 2:
+            q[2] = q[0]
+        valid = rng.random(C) > 0.3
+        valid[[3, 11 % C]] = True
+        lu = rng.integers(0, 50, C).astype(np.int32)
+        fr = rng.integers(0, 50, C).astype(np.int32)
+        return (jnp.asarray(q), jnp.asarray(ks), jnp.asarray(valid),
+                jnp.asarray(lu), jnp.asarray(fr), jnp.asarray(np.int32(99)))
+
+    @pytest.mark.parametrize("Q,C,D,k", [(8, 64, 16, 4), (5, 100, 32, 1),
+                                         (16, 48, 16, 8)])
+    def test_matches_unfused_oracle(self, Q, C, D, k, nprng):
+        q, ks, valid, lu, fr, clock = self._case(nprng, Q, C, D)
+        r_ref = similarity_topk_touch(q, ks, valid, k, lu, fr, clock,
+                                      threshold=0.98, impl="ref")
+        r_pal = similarity_topk_touch(q, ks, valid, k, lu, fr, clock,
+                                      threshold=0.98, impl="pallas_interpret",
+                                      block_c=16)
+        for a, b, name in zip(r_ref, r_pal, ("idx", "score", "lu", "fr")):
+            if name == "score":
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=2e-2, atol=2e-2)
+            else:
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                              err_msg=name)
+
+    def test_mask_rows_never_touch(self, nprng):
+        q, ks, valid, lu, fr, clock = self._case(nprng, 8, 64, 16)
+        mask = jnp.asarray(np.array([1, 0, 1, 1, 0, 1, 1, 1], bool))
+        for impl in ("ref", "pallas_interpret"):
+            _, _, lu2, fr2 = similarity_topk_touch(
+                q, ks, valid, 2, lu, fr, clock, threshold=0.98, mask=mask,
+                impl=impl, block_c=16)
+            # query 1's exact hit is masked: its slot must be untouched
+            assert int(fr2[11 % 64]) == int(fr[11 % 64]), impl
+            # query 0 and its duplicate query 2 both touch slot 3
+            assert int(fr2[3]) == int(fr[3]) + 2, impl
+
+    def test_touch_semantics_match_apply_probe(self, nprng):
+        """End-to-end: SemanticCache with fuse_touch=True transitions state
+        exactly like the unfused lookup + apply_probe path."""
+        import dataclasses
+
+        from repro.core.semantic_cache import SemanticCache
+
+        C, D, P, Q = 48, 16, 4, 8
+        base = SemanticCache(capacity=C, key_dim=D, payload_dim=P,
+                             threshold=0.9)
+        st0 = base.init()
+        ks = _unit(nprng, C, D)
+        st0 = base.insert(st0, jnp.asarray(ks[:30]),
+                          jnp.asarray(nprng.normal(size=(30, P)),
+                                      jnp.float32))
+        q = _unit(nprng, Q, D)
+        q[0] = ks[3]
+        q[1] = ks[3]
+        q[2] = ks[7]
+        mask = np.ones(Q, bool)
+        mask[5] = False
+        for impl in ("ref", "pallas_interpret"):
+            fused = dataclasses.replace(base, fuse_touch=True,
+                                        lookup_impl=impl)
+            s1, r1 = base.lookup(st0, jnp.asarray(q), mask=jnp.asarray(mask))
+            s2, r2 = fused.lookup(st0, jnp.asarray(q), mask=jnp.asarray(mask))
+            np.testing.assert_array_equal(np.asarray(r1.hit),
+                                          np.asarray(r2.hit), err_msg=impl)
+            np.testing.assert_array_equal(np.asarray(r1.value),
+                                          np.asarray(r2.value), err_msg=impl)
+            for f in ("last_used", "freq", "clock", "hits", "misses",
+                      "valid"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(s1, f)), np.asarray(getattr(s2, f)),
+                    err_msg=f"{impl}:{f}")
 
 
 class TestKernelVsModelAttention:
