@@ -44,10 +44,13 @@ from __future__ import annotations
 
 import json
 import time
+from pathlib import Path
 
 import numpy as np
 
 from repro.data.workload import SharedPrefixWorkload
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
 
 
 def _drive(model, params, wl: SharedPrefixWorkload, *, share: bool,
@@ -218,7 +221,9 @@ def run(seed: int = 0, n_requests: int = 32, smoke: bool = False,
 
 
 def run_smoke():
-    return run(smoke=True, json_path="BENCH_kv_reuse.json")
+    # anchor the perf record at the repo root so it lands in the same
+    # place no matter where run.py is invoked from
+    return run(smoke=True, json_path=str(REPO_ROOT / "BENCH_kv_reuse.json"))
 
 
 if __name__ == "__main__":

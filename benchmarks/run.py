@@ -5,17 +5,33 @@
 #   cache_lookup  edge-lookup throughput                        (paper §2 hot spot)
 #   hit_rate      hit rate vs threshold tau                     (paper §2 threshold)
 #   roofline      per-(arch x shape) roofline terms             (scale requirement)
+#   obs_overhead  traced-vs-untraced serving throughput         (docs/observability.md)
+#
+# --trace-out / --metrics-out route the obs_overhead suite's traced run
+# into a Chrome trace-event JSON (load in Perfetto / chrome://tracing)
+# and a metrics-registry snapshot.
 from __future__ import annotations
 
+import argparse
+import functools
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
     from benchmarks import (block_reuse, cache_lookup, cooperative_hit_rate,
                             federated_hit_rate, frame_deadline, hit_rate,
-                            kv_reuse, load_latency, recognition_latency,
-                            roofline)
+                            kv_reuse, load_latency, obs_overhead,
+                            recognition_latency, roofline)
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace-out", default="",
+                    help="export the obs_overhead traced run's Chrome "
+                         "trace-event JSON here")
+    ap.add_argument("--metrics-out", default="",
+                    help="export the obs_overhead traced run's metrics "
+                         "registry snapshot here")
+    args = ap.parse_args(argv)
 
     suites = [
         ("fig2a", recognition_latency.run),
@@ -26,10 +42,14 @@ def main() -> None:
         ("cooperative_batched", cooperative_hit_rate.run_batched),
         ("federated_hit_rate", federated_hit_rate.run_smoke),
         ("frame_deadline", frame_deadline.run_smoke),
-        # also writes the BENCH_kv_reuse.json perf record to the cwd
+        # also writes the BENCH_kv_reuse.json perf record to the repo root
         ("kv_reuse", kv_reuse.run_smoke),
         ("block_reuse", block_reuse.run),
         ("roofline", roofline.run),
+        # also writes BENCH_obs_overhead.json (+ optional trace/metrics)
+        ("obs_overhead", functools.partial(obs_overhead.run_smoke,
+                                           trace_path=args.trace_out,
+                                           metrics_path=args.metrics_out)),
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -1,0 +1,152 @@
+#!/usr/bin/env python
+"""Validate a Chrome trace-event JSON exported by ``repro.obs.trace``.
+
+Structural contract (what Perfetto / chrome://tracing needs to render it,
+plus this repo's span taxonomy — see docs/observability.md):
+
+  * top level is ``{"traceEvents": [...]}``;
+  * every duration-begin ``B`` has a matching ``E`` on the same
+    (pid, tid) track, properly nested (checked with a per-track stack),
+    and nothing is left open at the end;
+  * complete ``X`` events carry numeric ``ts`` and ``dur >= 0``;
+  * engine-track request markers (``cat == "request"``) occur INSIDE an
+    open ``step`` span — retirement always happens within an engine step;
+  * on the modeled-requests track each outer ``request`` span's duration
+    equals the sum of its ``request_term`` children, and the children
+    tile it end-to-end (each term starts where the previous ended) —
+    i.e. the trace reconstructs ``ServedResult.completion_ms`` per tier.
+
+``--metrics registry.json`` additionally re-pins the dispatch bounds from
+the metrics snapshot: ``engine/max_step_ladder <= 2`` and
+``ladder/max_ladder_dispatches <= 4``.
+
+Importable: ``validate(trace_dict)`` / ``check_metrics(snapshot_dict)``
+raise ``TraceError`` on the first violation (tests/test_obs.py reuses
+them); the CLI exits non-zero with the message.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# one µs of slack: term durations are float ms * 1e3 sums
+TOL_US = 1.0
+
+
+class TraceError(AssertionError):
+    pass
+
+
+def _check(cond, msg):
+    if not cond:
+        raise TraceError(msg)
+
+
+def validate(trace: dict) -> dict:
+    """Raise TraceError on the first structural violation.  Returns
+    summary stats (span counts per name, request count) for reporting."""
+    _check(isinstance(trace, dict) and isinstance(
+        trace.get("traceEvents"), list), "top level must be {traceEvents: []}")
+    events = trace["traceEvents"]
+    _check(len(events) > 0, "empty trace")
+
+    stacks: dict[tuple, list] = {}          # (pid, tid) -> open B names
+    spans: dict[str, int] = {}
+    requests = 0
+    for i, e in enumerate(events):
+        ph = e.get("ph")
+        _check(ph in ("B", "E", "X", "M", "i"), f"event {i}: bad ph {ph!r}")
+        key = (e.get("pid"), e.get("tid"))
+        if ph == "B":
+            _check(isinstance(e.get("ts"), (int, float)),
+                   f"event {i}: B without numeric ts")
+            if e.get("cat") == "request":
+                # retire-time marker: must sit inside an open step span
+                _check("step" in stacks.get(key, []),
+                       f"event {i}: request marker outside a step span")
+            stacks.setdefault(key, []).append(e["name"])
+            spans[e["name"]] = spans.get(e["name"], 0) + 1
+        elif ph == "E":
+            _check(stacks.get(key),
+                   f"event {i}: E with no open B on track {key}")
+            stacks[key].pop()
+        elif ph == "X":
+            _check(isinstance(e.get("ts"), (int, float))
+                   and isinstance(e.get("dur"), (int, float))
+                   and e["dur"] >= 0, f"event {i}: X needs ts and dur >= 0")
+    for key, open_names in stacks.items():
+        _check(not open_names,
+               f"unclosed spans {open_names} on track {key}")
+
+    # modeled-request reconstruction: outer dur == sum(child durs), tiled
+    outers = {}       # (pid, tid) -> outer X event
+    terms: dict[tuple, list] = {}
+    for e in events:
+        if e.get("ph") != "X":
+            continue
+        key = (e.get("pid"), e.get("tid"))
+        if e.get("cat") == "request_model":
+            _check(key not in outers,
+                   f"two request spans on one request track {key}")
+            outers[key] = e
+        elif e.get("cat") == "request_term":
+            terms.setdefault(key, []).append(e)
+    for key, outer in outers.items():
+        requests += 1
+        kids = sorted(terms.get(key, []), key=lambda e: e["ts"])
+        _check(kids, f"request on track {key} has no term children")
+        total = sum(k["dur"] for k in kids)
+        _check(abs(total - outer["dur"]) <= TOL_US,
+               f"track {key}: term sum {total} != request dur "
+               f"{outer['dur']}")
+        cursor = outer["ts"]
+        for k in kids:
+            _check(abs(k["ts"] - cursor) <= TOL_US,
+                   f"track {key}: term {k['name']!r} at {k['ts']} leaves a "
+                   f"gap (expected {cursor})")
+            cursor = k["ts"] + k["dur"]
+    for key in terms:
+        _check(key in outers, f"orphan request_term events on track {key}")
+    _check(requests > 0, "no modeled request spans in trace")
+    return {"events": len(events), "requests": requests, "spans": spans}
+
+
+def check_metrics(snapshot: dict, *, max_step_ladder: int = 2,
+                  max_fed_ladder: int = 4) -> None:
+    """Re-pin the per-step dispatch bounds from a registry snapshot."""
+    step = snapshot.get("engine/max_step_ladder")
+    _check(step is not None, "snapshot missing engine/max_step_ladder")
+    _check(step <= max_step_ladder,
+           f"engine/max_step_ladder {step} > {max_step_ladder}")
+    fed = snapshot.get("ladder/max_ladder_dispatches")
+    _check(fed is not None, "snapshot missing ladder/max_ladder_dispatches")
+    _check(fed <= max_fed_ladder,
+           f"ladder/max_ladder_dispatches {fed} > {max_fed_ladder}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="Chrome trace-event JSON to validate")
+    ap.add_argument("--metrics", default="",
+                    help="metrics registry snapshot JSON: also assert the "
+                         "ladder dispatch bounds")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.trace) as f:
+            stats = validate(json.load(f))
+        if args.metrics:
+            with open(args.metrics) as f:
+                check_metrics(json.load(f))
+    except TraceError as e:
+        print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    top = sorted(stats["spans"].items(), key=lambda kv: -kv[1])[:8]
+    print(f"OK: {stats['events']} events, {stats['requests']} request "
+          f"timelines, top spans: "
+          + ", ".join(f"{n}={c}" for n, c in top))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

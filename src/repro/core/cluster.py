@@ -148,7 +148,8 @@ class CooperativeEdgeCluster:
 
     name, code = "edge", TIER_LOCAL      # CacheTier identity (org-level)
 
-    def __init__(self, cfg: ClusterConfig, mesh=None, cache_axis: str = "cache"):
+    def __init__(self, cfg: ClusterConfig, mesh=None, cache_axis: str = "cache",
+                 metrics=None, tracer=None):
         self.cfg = cfg
         self.mesh = mesh
         self.cache_axis = cache_axis
@@ -169,7 +170,9 @@ class CooperativeEdgeCluster:
         # incarnation (owner, slot, inserted_at)
         self._peer_seen: List[Dict[Tuple[int, int, int], int]] = [
             {} for _ in range(cfg.num_nodes)]
-        self.ladder = TierLadder([LocalRung(), PeerRung()])
+        self.ladder = TierLadder([LocalRung(), PeerRung()],
+                                 metrics=metrics, tracer=tracer)
+        self.metrics = self.ladder.metrics
 
     # ------------------------------------------------------------------
     @property

@@ -41,6 +41,14 @@ from repro.core.tiers import (TIER_LOCAL, TIER_MISS, TIER_NAMES, TIER_PEER,
                               TIER_REMOTE, TierLadder, TierProbeResult,
                               empty_probe_arrays, org_grid, pack_flat)
 from repro.core.descriptor import NgramSketchDescriptor, PrefixDescriptor
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
+from repro.obs.views import (EMPTY_DIGEST_STATS, digest_block, ladder_block,
+                             org_stats)
+
+__all__ = ["CoICConfig", "CoICEngine", "RequestResult", "SOURCE_OF",
+           "EMPTY_DIGEST_STATS", "recognition_cloud_fn",
+           "generation_cloud_fn"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +125,7 @@ class CloudRung:
         out = np.asarray(eng.cloud_fn(padded))[:n_real]
         dt = (time.perf_counter() - t0) * 1e3
         eng._timings["cloud_ms"].append(dt)
+        eng._timing_hist["cloud_ms"].observe(dt)
         ctx.cloud_ms[kk, nn, bb] = dt / max(1, n_real)
 
         hit, tier, cluster, owner, score, value = empty_probe_arrays(
@@ -141,13 +150,18 @@ class CoICEngine:
                  cloud_fn: Callable[[np.ndarray], np.ndarray],
                  network: Optional[NetworkModel] = None,
                  sizes: Optional[PayloadSizes] = None,
-                 miss_bucket: Optional[int] = None):
+                 miss_bucket: Optional[int] = None,
+                 tracer=None, metrics: Optional[MetricsRegistry] = None):
         self.model = model
         self.params = params
         self.cfg = cfg
         self.cloud_fn = cloud_fn
         self.network = network or NetworkModel()
         self.miss_bucket = miss_bucket
+        # telemetry: ONE registry for every counter this engine and its
+        # cache org mutate; NULL_TRACER costs one attribute check per span
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.trace = tracer if tracer is not None else NULL_TRACER
 
         if cfg.descriptor == "prefix":
             self._descriptor = PrefixDescriptor(model, k_layers=cfg.k_layers)
@@ -178,26 +192,42 @@ class CoICEngine:
                 digest_size=cfg.digest_size,
                 digest_interval=cfg.digest_interval,
                 digest_quant=cfg.digest_quant,
-                digest_refresh=cfg.digest_refresh, share=cfg.federate))
+                digest_refresh=cfg.digest_refresh, share=cfg.federate),
+                metrics=self.metrics, tracer=self.trace)
             self.edge = self.federation
             self.cache = self.federation.clusters[0].cache
         else:
             # a 1-node cluster IS the single isolated edge cache
-            self.cluster = CooperativeEdgeCluster(cluster_cfg)
+            self.cluster = CooperativeEdgeCluster(
+                cluster_cfg, metrics=self.metrics, tracer=self.trace)
             self.edge = self.cluster
             self.cache = self.cluster.cache
-        self.ladder = TierLadder([self.edge, CloudRung(self)])
+        # the serve ladder gets its own registry prefix so its counters
+        # (edge-org rung + cloud rung) don't collide with the org ladder's
+        self.ladder = TierLadder([self.edge, CloudRung(self)],
+                                 metrics=self.metrics,
+                                 prefix="engine_ladder", tracer=self.trace)
         self.asset_cache = HashCache()
-        self.deadline = DeadlineStats()   # per-tier frame-budget accounting
+        # per-tier frame-budget accounting, on the same registry
+        self.deadline = DeadlineStats(self.metrics)
         self._timings = {"descriptor_ms": [], "lookup_ms": [], "cloud_ms": []}
+        self._timing_hist = {k: self.metrics.histogram(f"timings/{k}")
+                             for k in self._timings}
 
     # ------------------------------------------------------------------
     def _descriptors(self, tokens: np.ndarray) -> jax.Array:
+        tr = self.trace
+        if tr.enabled:
+            tr.begin("descriptor", cat="engine",
+                     args={"batch": int(tokens.shape[0])})
         t0 = time.perf_counter()
         d = self._desc_fn(self.params, jnp.asarray(tokens))
         d.block_until_ready()
         dt = (time.perf_counter() - t0) * 1e3
+        if tr.enabled:
+            tr.end()
         self._timings["descriptor_ms"].append(dt)
+        self._timing_hist["descriptor_ms"].observe(dt)
         return d
 
     # ------------------------------------------------------------------
@@ -242,6 +272,7 @@ class CoICEngine:
                                 self.cfg.payload_dtype)
         lookup_ms = self.ladder.last_probe_ms.get(self.edge.name, 0.0) / B
         self._timings["lookup_ms"].append(lookup_ms * B)
+        self._timing_hist["lookup_ms"].observe(lookup_ms * B)
 
         # gather back to flat submission order
         kk, nn, bb = np.nonzero(mask)
@@ -318,29 +349,14 @@ class CoICEngine:
         return value, load_ms, "cloud"
 
     def stats(self) -> dict:
-        if self.federation is not None:
-            s = self.federation.stats()
-        elif self.cfg.num_nodes > 1:
-            s = self.cluster.stats()
-        else:
-            # solo cache: the flat per-shard stats shape, as ever
-            s = self.cache.stats(self.cluster.states[0])
-        # the uniform per-tier dispatch/digest block, whatever the config
-        lad = self.edge.ladder.stats()
-        lad["rung_dispatches"]["cloud"] = \
-            self.ladder.rung_dispatches.get("cloud", 0)
-        s["ladder"] = lad
-        s["digest"] = (self.federation.digest_stats()
-                       if self.federation is not None else EMPTY_DIGEST_STATS)
+        # one shared formatter (obs/views.py) assembles the org + ladder +
+        # digest blocks for this engine and serving/engine.py alike
+        s = org_stats(self.federation, self.cluster, self.cache)
+        s["ladder"] = ladder_block(self.edge, engine_ladder=self.ladder)
+        s["digest"] = digest_block(self.federation)
         s["asset_cache"] = self.asset_cache.stats()
         s["deadline"] = self.deadline.as_dict()
         return s
-
-
-# the uniform digest-stats shape for configs without a federation tier
-EMPTY_DIGEST_STATS = {"mode": "off", "size": 0, "bytes_shipped": 0,
-                      "rows_shipped": 0, "updates_applied": 0,
-                      "refreshes": 0, "false_hits": 0, "interval": 0}
 
 
 # ---------------------------------------------------------------------------

@@ -39,6 +39,8 @@ from typing import NamedTuple, Optional
 
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry
+
 DIGEST_QUANTS = ("fp32", "int8")
 DIGEST_REFRESHES = ("full", "delta")
 
@@ -163,16 +165,34 @@ class RegionDigestBoard:
     updates, exposed as the tensors the grouped digest probe scans, plus
     the shipped-bytes ledger of the metro -> region link."""
 
-    def __init__(self, cfg: DigestConfig, num_clusters: int, key_dim: int):
+    def __init__(self, cfg: DigestConfig, num_clusters: int, key_dim: int,
+                 metrics: Optional[MetricsRegistry] = None,
+                 prefix: str = "digest"):
         self.cfg = cfg
         K, M, D = num_clusters, cfg.size, key_dim
         self.codes = np.zeros((K, M, D), np.int8)
         self.scales = np.zeros((K, M), np.float32)
         self.keys = np.zeros((K, M, D), np.float32)
         self.valid = np.zeros((K, M), bool)
-        self.bytes_shipped = 0
-        self.rows_shipped = 0
-        self.updates_applied = 0
+        # the shipped-bytes ledger lives in the metrics registry (a private
+        # one when the caller plumbs none); the legacy attribute names are
+        # read-only views
+        m = metrics if metrics is not None else MetricsRegistry()
+        self._bytes_shipped = m.counter(f"{prefix}/bytes_shipped")
+        self._rows_shipped = m.counter(f"{prefix}/rows_shipped")
+        self._updates_applied = m.counter(f"{prefix}/updates_applied")
+
+    @property
+    def bytes_shipped(self) -> int:
+        return self._bytes_shipped.value
+
+    @property
+    def rows_shipped(self) -> int:
+        return self._rows_shipped.value
+
+    @property
+    def updates_applied(self) -> int:
+        return self._updates_applied.value
 
     # ------------------------------------------------------------------
     def apply(self, cluster: int, update: DigestUpdate) -> None:
@@ -183,9 +203,9 @@ class RegionDigestBoard:
         else:
             self.keys[cluster, rows] = update.keys
         self.valid[cluster, rows] = update.valid
-        self.bytes_shipped += update.bytes
-        self.rows_shipped += len(rows)
-        self.updates_applied += 1
+        self._bytes_shipped.inc(update.bytes)
+        self._rows_shipped.inc(len(rows))
+        self._updates_applied.inc()
 
     # ------------------------------------------------------------------
     def probe_keys(self) -> np.ndarray:

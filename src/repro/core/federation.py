@@ -68,6 +68,7 @@ from repro.core.tiers import (TIER_LOCAL, TIER_MISS, TIER_PEER, TIER_NAMES,
                               TierProbeResult, build_probe_context,
                               empty_probe_arrays, route_flat)
 from repro.kernels.similarity import similarity_topk_batched
+from repro.obs.metrics import MetricsRegistry
 from repro.parallel.sharding import (federated_digest_lookup,
                                      federated_digest_lookup_quantized)
 
@@ -260,18 +261,23 @@ class FederatedEdgeTier:
 
     name, code = "edge", TIER_LOCAL      # CacheTier identity (org-level)
 
-    def __init__(self, cfg: FederationConfig):
+    def __init__(self, cfg: FederationConfig, metrics=None, tracer=None):
         self.cfg = cfg
+        # one registry for the ladder + digest control plane (a private one
+        # when the owning engine plumbs none); member clusters keep their
+        # own — their standalone ladders are bypassed by the federated walk
+        self.metrics = (metrics if metrics is not None
+                        else MetricsRegistry())
         self.clusters = [CooperativeEdgeCluster(cfg.cluster)
                          for _ in range(cfg.num_clusters)]
         K = cfg.num_clusters
         D = cfg.cluster.key_dim
         dcfg = cfg.digest
         self.publishers = [DigestPublisher(dcfg, D) for _ in range(K)]
-        self.board = RegionDigestBoard(dcfg, K, D)
+        self.board = RegionDigestBoard(dcfg, K, D, metrics=self.metrics)
         self.step_count = 0
-        self.digest_refreshes = 0
-        self.digest_false_hits = 0
+        self._digest_refreshes = self.metrics.counter("digest/refreshes")
+        self._digest_false_hits = self.metrics.counter("digest/false_hits")
         self.remote_hits = np.zeros((K,), np.int64)    # served BY cluster k
         self.remote_fills = np.zeros((K,), np.int64)   # admitted INTO cluster k
         # second-hit remote admission: per home cluster, count of remote
@@ -282,7 +288,26 @@ class FederatedEdgeTier:
         rungs = [LocalRung(), PeerRung()]
         if self._federating:
             rungs.append(RemoteDigestRung(self))
-        self.ladder = TierLadder(rungs)
+        self.ladder = TierLadder(rungs, metrics=self.metrics,
+                                 tracer=tracer)
+
+    # registry-backed legacy counters; the setters keep the seed's
+    # ``fed.digest_false_hits += 1`` call sites working verbatim
+    @property
+    def digest_refreshes(self) -> int:
+        return self._digest_refreshes.value
+
+    @digest_refreshes.setter
+    def digest_refreshes(self, v: int) -> None:
+        self._digest_refreshes.set(v)
+
+    @property
+    def digest_false_hits(self) -> int:
+        return self._digest_false_hits.value
+
+    @digest_false_hits.setter
+    def digest_false_hits(self, v: int) -> None:
+        self._digest_false_hits.set(v)
 
     # ------------------------------------------------------------------
     # ladder-counter views (the bound the tests/benchmarks pin)

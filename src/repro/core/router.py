@@ -22,6 +22,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.core.network import NetworkModel
+from repro.obs.metrics import LazyCounterGroup, MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -67,7 +68,6 @@ class LatencyBreakdown:
         return self.total_ms > self.deadline_ms
 
 
-@dataclasses.dataclass
 class DeadlineStats:
     """Per-tier deadline bookkeeping for frame-paced (immersive) traffic.
 
@@ -77,10 +77,26 @@ class DeadlineStats:
     distinguishes this from ``LatencyBreakdown.deadline_miss``.  Bulk
     requests (``deadline_ms=None``) are ignored, so ``miss_rate`` is over
     deadline-bearing traffic only.
+
+    Counters live in a ``MetricsRegistry`` under ``<prefix>/met/<tier>`` /
+    ``<prefix>/missed/<tier>`` (a private registry when none is plumbed);
+    ``met``/``missed`` remain the per-tier dicts of OBSERVED tiers, as the
+    seed's dataclass fields were (absent tier == zero, not a 0 entry).
     """
 
-    met: Dict[str, int] = dataclasses.field(default_factory=dict)
-    missed: Dict[str, int] = dataclasses.field(default_factory=dict)
+    def __init__(self, metrics: Optional[MetricsRegistry] = None,
+                 prefix: str = "deadline"):
+        m = metrics if metrics is not None else MetricsRegistry()
+        self._met = LazyCounterGroup(m, f"{prefix}/met")
+        self._missed = LazyCounterGroup(m, f"{prefix}/missed")
+
+    @property
+    def met(self) -> Dict[str, int]:
+        return self._met.as_dict()
+
+    @property
+    def missed(self) -> Dict[str, int]:
+        return self._missed.as_dict()
 
     def observe(self, tier: str, completion_ms: float,
                 deadline_ms: Optional[float]) -> bool:
@@ -89,13 +105,12 @@ class DeadlineStats:
         if deadline_ms is None:
             return False
         miss = completion_ms > deadline_ms
-        bucket = self.missed if miss else self.met
-        bucket[tier] = bucket.get(tier, 0) + 1
+        (self._missed if miss else self._met).inc(tier)
         return miss
 
     @property
     def observed(self) -> int:
-        return sum(self.met.values()) + sum(self.missed.values())
+        return self._met.total() + self._missed.total()
 
     def miss_rate(self) -> float:
         n = self.observed

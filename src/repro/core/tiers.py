@@ -45,6 +45,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.similarity import similarity_topk_batched
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
 
 TIER_LOCAL, TIER_PEER, TIER_REMOTE, TIER_MISS = 0, 1, 2, 3
 TIER_NAMES = ("local", "peer", "remote", "miss")
@@ -243,16 +245,56 @@ class TierLadder:
     ``rung_dispatches`` splits the total by rung, ``tier_counts`` counts
     served rows by final canonical tier, ``last_probe_ms`` holds each
     rung's wall time for the engines' latency amortization.
+
+    All counters live in a ``MetricsRegistry`` under ``prefix`` (a private
+    one when the caller plumbs none — back-compat for standalone ladders);
+    the legacy attribute names remain as read-only views.  ``tracer``
+    (default ``NULL_TRACER``) gets one ``probe:<rung>`` span per probed
+    rung, tagged with the canonical tier code and a running dispatch id.
     """
 
-    def __init__(self, rungs: Sequence[CacheTier]):
+    def __init__(self, rungs: Sequence[CacheTier],
+                 metrics: Optional[MetricsRegistry] = None,
+                 prefix: str = "ladder", tracer=None):
         self.rungs = list(rungs)
-        self.tier_counts = {n: 0 for n in TIER_NAMES}
-        self.rung_dispatches = {r.name: 0 for r in self.rungs}
-        self.probe_dispatches = 0       # total device dispatches, all steps
-        self.last_dispatches = 0        # dispatches in the latest walk
-        self.max_dispatches = 0
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.prefix = prefix
+        self.trace = tracer if tracer is not None else NULL_TRACER
+        m, p = self.metrics, prefix
+        self._tier_counts = {n: m.counter(f"{p}/tier_counts/{n}")
+                             for n in TIER_NAMES}
+        self._rung_dispatches = {
+            r.name: m.counter(f"{p}/rung_dispatches/{r.name}")
+            for r in self.rungs}
+        self._probe_dispatches = m.counter(f"{p}/probe_dispatches")
+        self._last_dispatches = m.gauge(f"{p}/last_ladder_dispatches")
+        self._max_dispatches = m.gauge(f"{p}/max_ladder_dispatches")
+        self._probe_ms = {r.name: m.histogram(f"{p}/probe_ms/{r.name}")
+                          for r in self.rungs}
         self.last_probe_ms = {r.name: 0.0 for r in self.rungs}
+
+    # ------------------------------------------------------------------
+    # legacy counter views (same names/shapes the seed exposed as plain
+    # attributes — now thin reads of the registry counters)
+    @property
+    def tier_counts(self) -> dict:
+        return {n: c.value for n, c in self._tier_counts.items()}
+
+    @property
+    def rung_dispatches(self) -> dict:
+        return {n: c.value for n, c in self._rung_dispatches.items()}
+
+    @property
+    def probe_dispatches(self) -> int:
+        return self._probe_dispatches.value
+
+    @property
+    def last_dispatches(self) -> int:
+        return self._last_dispatches.value
+
+    @property
+    def max_dispatches(self) -> int:
+        return self._max_dispatches.value
 
     # ------------------------------------------------------------------
     def probe(self, queries: np.ndarray, mask: np.ndarray, ctx: Any,
@@ -261,18 +303,28 @@ class TierLadder:
         hit, tier, cluster, owner, score, value = empty_probe_arrays(
             queries, payload_dim, payload_dtype)
         remaining = np.asarray(mask, bool).copy()
-        self.last_dispatches = 0
+        trace = self.trace
+        last = 0
         for rung in self.rungs:
             self.last_probe_ms[rung.name] = 0.0
             if not remaining.any():
                 break
+            if trace.enabled:
+                trace.begin(f"probe:{rung.name}", cat="ladder",
+                            args={"tier_code": rung.code,
+                                  "dispatch_id":
+                                      self._probe_dispatches.value + last})
             t0 = time.perf_counter()
             res = rung.probe(queries, remaining, ctx)
-            self.last_probe_ms[rung.name] = (time.perf_counter() - t0) * 1e3
+            dt = (time.perf_counter() - t0) * 1e3
+            if trace.enabled:
+                trace.end()
+            self.last_probe_ms[rung.name] = dt
             if res is None:
                 continue
-            self.rung_dispatches[rung.name] += res.dispatches
-            self.last_dispatches += res.dispatches
+            self._probe_ms[rung.name].observe(dt)
+            self._rung_dispatches[rung.name].inc(res.dispatches)
+            last += res.dispatches
             served = res.hit & remaining
             if served.any():
                 hit[served] = True
@@ -282,11 +334,14 @@ class TierLadder:
                 score[served] = res.score[served]
                 value[served] = res.value[served]
                 remaining &= ~served
-        self.probe_dispatches += self.last_dispatches
-        self.max_dispatches = max(self.max_dispatches, self.last_dispatches)
+        self._last_dispatches.set(last)
+        self._probe_dispatches.inc(last)
+        self._max_dispatches.max(last)
         mask_np = np.asarray(mask, bool)
         for code, name in enumerate(TIER_NAMES):
-            self.tier_counts[name] += int(((tier == code) & mask_np).sum())
+            n = int(((tier == code) & mask_np).sum())
+            if n:
+                self._tier_counts[name].inc(n)
         return LadderResult(hit, tier, cluster, owner, score, value)
 
     # ------------------------------------------------------------------

@@ -8,9 +8,9 @@ import jax.numpy as jnp
 
 from repro.kernels.decode_attention.kernel import decode_attention_kernel
 from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.obs.profile import active, decode_attention_bytes, record_op
 
 
-@functools.partial(jax.jit, static_argnames=("impl", "block_kv"))
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      kv_len: jax.Array, *, impl: str = "auto",
                      block_kv: int = 512) -> jax.Array:
@@ -20,6 +20,17 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     """
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    fn = functools.partial(_decode_attention, impl=impl, block_kv=block_kv)
+    if active() is None:
+        return fn(q, k, v, kv_len)
+    B, S, K, D = (int(s) for s in k.shape)
+    return record_op(
+        "decode_attention", impl, fn, (q, k, v, kv_len),
+        decode_attention_bytes(B, S, K, D, k.dtype.itemsize))
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_kv"))
+def _decode_attention(q, k, v, kv_len, *, impl, block_kv):
     if impl == "ref":
         return decode_attention_ref(q, k, v, kv_len)
 

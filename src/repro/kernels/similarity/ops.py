@@ -3,6 +3,12 @@
 Selects the Pallas TPU kernel on TPU backends and the jnp oracle elsewhere
 (this container is CPU-only; the kernel is exercised via interpret=True in
 tests).  Handles padding to block multiples.
+
+Each public entry point resolves ``impl="auto"`` host-side, then runs its
+jitted body through ``repro.obs.profile.record_op`` — when a profiler is
+installed (``enable_profiling``) every call records blocked wall ms plus
+modeled HBM bytes under ``kernel/<op>/<impl>/...``; disabled (default) the
+cost is one module-global None check per call.
 """
 from __future__ import annotations
 
@@ -19,13 +25,18 @@ from repro.kernels.similarity.ref import (similarity_lookup_ref,
                                           similarity_topk_batched_ref,
                                           similarity_topk_ref,
                                           similarity_topk_touch_ref)
+from repro.obs.profile import active, record_op, similarity_bytes
 
 
 def _backend_is_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("impl", "block_q", "block_c"))
+def _resolve(impl: str) -> str:
+    return ("pallas" if _backend_is_tpu() else "ref") if impl == "auto" \
+        else impl
+
+
 def similarity_lookup(queries: jax.Array, keys: jax.Array, valid: jax.Array,
                       *, impl: str = "auto", block_q: int = 128,
                       block_c: int = 512):
@@ -36,8 +47,19 @@ def similarity_lookup(queries: jax.Array, keys: jax.Array, valid: jax.Array,
 
     impl: auto | pallas | pallas_interpret | ref
     """
-    if impl == "auto":
-        impl = "pallas" if _backend_is_tpu() else "ref"
+    impl = _resolve(impl)
+    fn = functools.partial(_similarity_lookup, impl=impl, block_q=block_q,
+                           block_c=block_c)
+    if active() is None:
+        return fn(queries, keys, valid)
+    return record_op(
+        "similarity_lookup", impl, fn, (queries, keys, valid),
+        similarity_bytes(int(queries.shape[0]), int(keys.shape[0]),
+                         int(queries.shape[1])))
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_q", "block_c"))
+def _similarity_lookup(queries, keys, valid, *, impl, block_q, block_c):
     if impl == "ref":
         return similarity_lookup_ref(queries, keys, valid)
 
@@ -56,8 +78,6 @@ def similarity_lookup(queries: jax.Array, keys: jax.Array, valid: jax.Array,
     return idx[:Q], score[:Q]
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("k", "impl", "block_q", "block_c"))
 def similarity_topk(queries: jax.Array, keys: jax.Array, valid: jax.Array,
                     k: int, *, impl: str = "auto", block_q: int = 128,
                     block_c: int = 512):
@@ -69,10 +89,22 @@ def similarity_topk(queries: jax.Array, keys: jax.Array, valid: jax.Array,
 
     impl: auto | pallas | pallas_interpret | ref
     """
+    impl = _resolve(impl)
+    fn = functools.partial(_similarity_topk, k=k, impl=impl,
+                           block_q=block_q, block_c=block_c)
+    if active() is None:
+        return fn(queries, keys, valid)
+    return record_op(
+        "similarity_topk", impl, fn, (queries, keys, valid),
+        similarity_bytes(int(queries.shape[0]), int(keys.shape[0]),
+                         int(queries.shape[1])))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "impl", "block_q", "block_c"))
+def _similarity_topk(queries, keys, valid, *, k, impl, block_q, block_c):
     C = keys.shape[0]
     assert k <= C, (k, C)
-    if impl == "auto":
-        impl = "pallas" if _backend_is_tpu() else "ref"
     if impl == "ref":
         return similarity_topk_ref(queries, keys, valid, k)
 
@@ -90,8 +122,6 @@ def similarity_topk(queries: jax.Array, keys: jax.Array, valid: jax.Array,
     return idx[:Q], score[:Q]
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("k", "threshold", "impl", "block_c"))
 def similarity_topk_touch(queries: jax.Array, keys: jax.Array,
                           valid: jax.Array, k: int, last_used: jax.Array,
                           freq: jax.Array, clock: jax.Array, *,
@@ -111,10 +141,25 @@ def similarity_topk_touch(queries: jax.Array, keys: jax.Array,
 
     impl: auto | pallas | pallas_interpret | ref
     """
+    impl = _resolve(impl)
+    fn = functools.partial(_similarity_topk_touch, k=k, threshold=threshold,
+                           impl=impl, block_c=block_c)
+    if active() is None:
+        return fn(queries, keys, valid, last_used, freq, clock, mask)
+    C = int(keys.shape[0])
+    return record_op(
+        "similarity_topk_touch", impl, fn,
+        (queries, keys, valid, last_used, freq, clock, mask),
+        similarity_bytes(int(queries.shape[0]), C,
+                         int(queries.shape[1]), meta_rows=C))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "threshold", "impl", "block_c"))
+def _similarity_topk_touch(queries, keys, valid, last_used, freq, clock,
+                           mask, *, k, threshold, impl, block_c):
     C = keys.shape[0]
     assert k <= C, (k, C)
-    if impl == "auto":
-        impl = "pallas" if _backend_is_tpu() else "ref"
     if impl == "ref":
         return similarity_topk_touch_ref(queries, keys, valid, k, last_used,
                                          freq, clock, threshold, mask=mask)
@@ -137,8 +182,6 @@ def similarity_topk_touch(queries: jax.Array, keys: jax.Array,
     return idx[:Q], score[:Q], lu[:C], fr[:C]
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("k", "impl", "block_q", "block_c"))
 def similarity_topk_batched(queries: jax.Array, keys: jax.Array,
                             valid: jax.Array, k: int, *, impl: str = "auto",
                             block_q: int = 128, block_c: int = 512):
@@ -153,11 +196,24 @@ def similarity_topk_batched(queries: jax.Array, keys: jax.Array,
 
     impl: auto | pallas | pallas_interpret | ref
     """
+    impl = _resolve(impl)
+    fn = functools.partial(_similarity_topk_batched, k=k, impl=impl,
+                           block_q=block_q, block_c=block_c)
+    if active() is None:
+        return fn(queries, keys, valid)
+    N, Q, D = (int(s) for s in queries.shape)
+    return record_op(
+        "similarity_topk_batched", impl, fn, (queries, keys, valid),
+        similarity_bytes(N * Q, N * int(keys.shape[1]), D))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "impl", "block_q", "block_c"))
+def _similarity_topk_batched(queries, keys, valid, *, k, impl, block_q,
+                             block_c):
     N, Q, D = queries.shape
     C = keys.shape[1]
     assert k <= C, (k, C)
-    if impl == "auto":
-        impl = "pallas" if _backend_is_tpu() else "ref"
     if impl == "ref":
         return similarity_topk_batched_ref(queries, keys, valid, k)
 

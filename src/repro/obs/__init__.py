@@ -1,0 +1,18 @@
+"""Observability: tracing (Perfetto export), the unified metrics registry,
+and kernel profiling hooks.  See docs/observability.md."""
+from repro.obs.metrics import (Counter, CounterDict, Gauge, Histogram,
+                               LazyCounterGroup, MetricsRegistry)
+from repro.obs.profile import (KernelProfiler, active, disable_profiling,
+                               enable_profiling)
+from repro.obs.trace import (NULL_TRACER, PID_ENGINE, PID_REQUESTS,
+                             NullTracer, Tracer)
+from repro.obs.views import (EMPTY_DIGEST_STATS, digest_block, ladder_block,
+                             org_stats)
+
+__all__ = [
+    "Counter", "CounterDict", "Gauge", "Histogram", "LazyCounterGroup",
+    "MetricsRegistry",
+    "KernelProfiler", "active", "disable_profiling", "enable_profiling",
+    "NULL_TRACER", "PID_ENGINE", "PID_REQUESTS", "NullTracer", "Tracer",
+    "EMPTY_DIGEST_STATS", "digest_block", "ladder_block", "org_stats",
+]

@@ -82,7 +82,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cluster import ClusterConfig, CooperativeEdgeCluster
-from repro.core.coic import EMPTY_DIGEST_STATS, SOURCE_OF, CoICConfig
+from repro.core.coic import SOURCE_OF, CoICConfig
 from repro.core.descriptor import NgramSketchDescriptor, PrefixDescriptor
 from repro.core.federation import FederatedEdgeTier, FederationConfig
 from repro.core.network import NetworkModel
@@ -90,8 +90,24 @@ from repro.core.router import (DeadlineStats, LatencyBreakdown, PayloadSizes,
                                TwoTierRouter)
 from repro.core.tiers import (TIER_LOCAL, TIER_MISS, TIER_NAMES, TIER_PEER,
                               TIER_REMOTE, pow2 as _pow2, route_flat)
+from repro.obs.metrics import CounterDict, LazyCounterGroup, MetricsRegistry
+from repro.obs.trace import NULL_TRACER
+from repro.obs.views import digest_block, ladder_block, org_stats
 from repro.serving.kv_cache import (PagedKVCache, batch_cache_scatter,
                                     init_batch_cache, init_paged_pool)
+
+
+# modeled-latency term names for the trace's request track, in the same
+# order LatencyBreakdown.total_ms sums them
+_TERM_FIELDS = ("descriptor_ms", "uplink_ms", "lookup_ms", "peer_net_ms",
+                "remote_net_ms", "cloud_net_ms", "cloud_compute_ms",
+                "downlink_ms")
+
+
+def _latency_terms(lat: LatencyBreakdown, skip=()):
+    """(name, ms) pairs of a breakdown's nonstructural terms — the child
+    spans of one request's modeled timeline."""
+    return [(f[:-3], getattr(lat, f)) for f in _TERM_FIELDS if f not in skip]
 
 
 class PromptTooLongError(ValueError):
@@ -215,10 +231,15 @@ class ServedResult:
 
 class ServingEngine:
     def __init__(self, model, params, cfg: ServingConfig,
-                 network: Optional[NetworkModel] = None):
+                 network: Optional[NetworkModel] = None,
+                 tracer=None, metrics: Optional[MetricsRegistry] = None):
         self.model = model
         self.params = params
         self.cfg = cfg
+        # telemetry: ONE registry for every counter the engine and its
+        # cache org mutate; NULL_TRACER costs one attribute check per span
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.trace = tracer if tracer is not None else NULL_TRACER
         self.pending: deque = deque()    # (rid, prompt, node) — pre-lookup
         self.queue: deque = deque()      # (rid, prompt) — lookup missed
         self.active: Dict[int, _Active] = {}
@@ -236,16 +257,22 @@ class ServingEngine:
         self._abs_deadline: Dict[int, float] = {}     # EDF sort key (paced)
         self._submit_step: Dict[int, int] = {}
         self.step_count = 0
-        self.deadline = DeadlineStats()
+        self.deadline = DeadlineStats(self.metrics)
         # device dispatches by kind — the batching win is visible here:
         # one descriptor + one lookup per step regardless of batch size
-        # (prefill_chunk: per-chunk trickle dispatches of long prompts)
-        self.dispatches = {"descriptor": 0, "lookup": 0, "prefill": 0,
-                           "prefill_chunk": 0, "decode": 0}
+        # (prefill_chunk: per-chunk trickle dispatches of long prompts).
+        # The dict shape is a registry view: "descriptor" lives at
+        # engine/dispatches/descriptor etc., and += routes into the counter
+        self.dispatches = CounterDict(self.metrics, "engine/dispatches",
+                                      ("descriptor", "lookup", "prefill",
+                                       "prefill_chunk", "decode"))
+        self._completed = self.metrics.counter("engine/completed")
+        self._hits = LazyCounterGroup(self.metrics, "engine/hits")
+        self._decode_ms = self.metrics.histogram("engine/decode_ms")
         # per-step ladder bound: descriptor + lookup dispatches this step
         # (must stay <= 2 under any queue policy / chunking combination)
-        self.last_step_ladder = 0
-        self.max_step_ladder = 0
+        self._last_step_ladder = self.metrics.gauge("engine/last_step_ladder")
+        self._max_step_ladder = self.metrics.gauge("engine/max_step_ladder")
 
         B = cfg.max_batch
         # recurrent (SSM/conv) prefill states absorb right-pad tokens, and
@@ -271,7 +298,8 @@ class ServingEngine:
             self.kv = PagedKVCache(model, B, cfg.max_len, cfg.kv_page,
                                    num_pages=cfg.kv_pages,
                                    prefix_share=cfg.prefix_share,
-                                   prefix_mode=cfg.prefix_mode)
+                                   prefix_mode=cfg.prefix_mode,
+                                   metrics=self.metrics)
             self.cache = init_paged_pool(model, self.kv.num_pages,
                                          cfg.kv_page)
             # every paged admission is chunked; without an explicit chunk
@@ -284,9 +312,12 @@ class ServingEngine:
         self.row_active = np.zeros((B,), bool)
         # prefill-token accounting for the KV-reuse benchmark: computed =
         # tokens that ran the model, shared = page-aligned prompt tokens
-        # served by mapping another request's pages
-        self.prefill_tokens_computed = 0
-        self.prefill_tokens_shared = 0
+        # served by mapping another request's pages (registry counters
+        # behind the attribute API — see the class-level properties)
+        self._prefill_computed = self.metrics.counter(
+            "engine/prefill_tokens_computed")
+        self._prefill_shared = self.metrics.counter(
+            "engine/prefill_tokens_shared")
         self._truncated: set = set()
 
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
@@ -356,11 +387,13 @@ class ServingEngine:
                     digest_size=c.digest_size,
                     digest_interval=c.digest_interval,
                     digest_quant=c.digest_quant,
-                    digest_refresh=c.digest_refresh, share=c.federate))
+                    digest_refresh=c.digest_refresh, share=c.federate),
+                    metrics=self.metrics, tracer=self.trace)
                 self.sem_org = self.sem_fed
                 self.semantic = self.sem_fed.clusters[0].cache
             else:
-                self.sem_cluster = CooperativeEdgeCluster(cluster_cfg)
+                self.sem_cluster = CooperativeEdgeCluster(
+                    cluster_cfg, metrics=self.metrics, tracer=self.trace)
                 self.sem_org = self.sem_cluster
                 self.semantic = self.sem_cluster.cache
             self._peer_on = c.share and c.num_nodes > 1
@@ -373,6 +406,41 @@ class ServingEngine:
                 input_bytes=cfg.max_len * 4,
                 descriptor_bytes=key_dim * 4,
                 result_bytes=cfg.max_new_tokens * 4))
+
+    # ------------------------------------------------------------------
+    # registry-backed attribute API (the legacy names, mutated with +=/
+    # max() by the scheduling code and read by tests and benchmarks)
+    @property
+    def prefill_tokens_computed(self) -> int:
+        return self._prefill_computed.value
+
+    @prefill_tokens_computed.setter
+    def prefill_tokens_computed(self, v: int) -> None:
+        self._prefill_computed.set(int(v))
+
+    @property
+    def prefill_tokens_shared(self) -> int:
+        return self._prefill_shared.value
+
+    @prefill_tokens_shared.setter
+    def prefill_tokens_shared(self, v: int) -> None:
+        self._prefill_shared.set(int(v))
+
+    @property
+    def last_step_ladder(self) -> int:
+        return self._last_step_ladder.value
+
+    @last_step_ladder.setter
+    def last_step_ladder(self, v: int) -> None:
+        self._last_step_ladder.set(int(v))
+
+    @property
+    def max_step_ladder(self) -> int:
+        return self._max_step_ladder.value
+
+    @max_step_ladder.setter
+    def max_step_ladder(self, v: int) -> None:
+        self._max_step_ladder.set(int(v))
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, node_id: int = 0,
@@ -445,14 +513,12 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def _complete(self, rid: int, source: str, modeled_ms: float,
-                  wall_s: float) -> Tuple[float, bool]:
+                  wall_s: float, waited: int) -> Tuple[float, bool]:
         """Completion accounting for ``rid`` served by ``source``: queueing
-        delay (paced steps when ``step_ms`` > 0, else measured wall time)
-        plus the modeled per-tier terms; records the per-tier deadline
-        outcome.  Returns (completion_ms, deadline_miss)."""
+        delay (``waited`` paced steps when ``step_ms`` > 0, else measured
+        wall time) plus the modeled per-tier terms; records the per-tier
+        deadline outcome.  Returns (completion_ms, deadline_miss)."""
         if self.cfg.step_ms > 0:
-            waited = self.step_count - self._submit_step.get(rid,
-                                                             self.step_count)
             completion_ms = waited * self.cfg.step_ms + modeled_ms
         elif modeled_ms > 0:
             completion_ms = modeled_ms
@@ -465,25 +531,54 @@ class ServingEngine:
     def _finalize(self, rid: int, *, tokens: np.ndarray, source: str,
                   latency_s: float, decode_steps: int,
                   breakdown: Optional[LatencyBreakdown] = None,
-                  modeled_ms: float = 0.0, wall_s: float = 0.0) -> None:
+                  modeled_ms: float = 0.0, wall_s: float = 0.0,
+                  terms: Optional[list] = None) -> None:
         """Shared completion bookkeeping for the hit path and ``_retire``:
-        deadline outcome, priority-counter release, and the
-        ``ServedResult`` record."""
+        deadline outcome, priority-counter release, the ``ServedResult``
+        record, and — when tracing — the request's modeled timeline
+        (``terms``: (name, ms) spans that, with the queueing delay, sum to
+        ``completion_ms``)."""
+        sub_step = self._submit_step.pop(rid, self.step_count)
         completion_ms, missed = self._complete(rid, source, modeled_ms,
-                                               wall_s)
+                                               wall_s,
+                                               self.step_count - sub_step)
         prio = self._priority.pop(rid, 0)
         if prio:
             self._n_priority -= 1
+        self._completed.inc()
+        self._hits.inc(source)
         self.results.append(ServedResult(
             req_id=rid, tokens=tokens, source=source, latency_s=latency_s,
             decode_steps=decode_steps, breakdown=breakdown, priority=prio,
             deadline_ms=self._deadline.pop(rid, None),
             completion_ms=completion_ms, deadline_miss=missed,
-            submit_step=self._submit_step.pop(rid, self.step_count),
-            finish_step=self.step_count,
+            submit_step=sub_step, finish_step=self.step_count,
             truncated=rid in self._truncated))
         self._truncated.discard(rid)
         self._abs_deadline.pop(rid, None)
+        tr = self.trace
+        if tr.enabled:
+            # engine track: the serving step this request finished in
+            tr.begin(f"request:{rid}", cat="request",
+                     args={"tier": source, "completion_ms": completion_ms,
+                           "decode_steps": decode_steps})
+            tr.end()
+            # request track: modeled spans laid end-to-end on the paced
+            # clock, reconstructing completion_ms exactly
+            tl = list(terms or [])
+            wait_ms = ((self.step_count - sub_step) * self.cfg.step_ms
+                       if self.cfg.step_ms > 0 else 0.0)
+            if wait_ms > 0:
+                # cloud requests spend their steps computing, hits waiting
+                tl.insert(0, ("engine_steps" if source == "cloud"
+                              else "queue_wait", wait_ms))
+            resid = completion_ms - sum(t[1] for t in tl)
+            if resid > 1e-9:
+                tl.append(("serve_wall", resid))
+            tr.request_timeline(rid, ts_ms=sub_step * self.cfg.step_ms,
+                                tier=source, terms=tl,
+                                completion_ms=completion_ms,
+                                args={"deadline_miss": missed})
 
     # ------------------------------------------------------------------
     def _pad_prompts(self, prompts: List[np.ndarray], fill: int,
@@ -506,9 +601,15 @@ class ServingEngine:
         """ONE jitted descriptor extraction over the length-bucketed pad.
         Returns (n, D) np descriptors and the wall ms of the dispatch."""
         toks, _ = self._pad_prompts(prompts, fill=-1)
+        tr = self.trace
+        if tr.enabled:
+            tr.begin("descriptor", cat="engine",
+                     args={"batch": len(prompts)})
         t0 = time.perf_counter()
         desc = self._desc_fn(self.params, jnp.asarray(toks))
         desc.block_until_ready()
+        if tr.enabled:
+            tr.end()
         self.dispatches["descriptor"] += 1
         return np.asarray(desc)[:len(prompts)], (time.perf_counter() - t0) * 1e3
 
@@ -536,11 +637,18 @@ class ServingEngine:
         n = len(batch)
 
         # ONE route through the org's TierLadder, whatever the config
-        # (solo 1-node cluster / cooperative cluster / federation)
+        # (solo 1-node cluster / cooperative cluster / federation); the
+        # org ladder shares this engine's tracer, so per-rung probe spans
+        # nest under this lookup span
+        tr = self.trace
+        if tr.enabled:
+            tr.begin("lookup", cat="engine", args={"batch": n})
         t0 = time.perf_counter()
         res = route_flat(self.sem_org, desc, nodes, clusters)
         self.dispatches["lookup"] += 1
         lookup_ms = (time.perf_counter() - t0) * 1e3
+        if tr.enabled:
+            tr.end()
         tier, value = res.tier, res.value
         hit = tier != TIER_MISS
 
@@ -570,16 +678,20 @@ class ServingEngine:
                 self._t_submit.pop(rid, None)
                 lat.deadline_ms = self._deadline.get(rid)
                 modeled_ms = lat.total_ms
+                skip = ()
                 if self.cfg.step_ms > 0:
                     # paced simulation: device compute rides the step
                     # clock; keep only the modeled network terms — the
                     # measured desc/lookup wall time includes first-call
                     # jit compiles, which are not motion-to-photon signal
                     modeled_ms -= lat.descriptor_ms + lat.lookup_ms
+                    skip = ("descriptor_ms", "lookup_ms")
                 self._finalize(rid, tokens=toks, source=src,
                                latency_s=lat.total_ms / 1e3, decode_steps=0,
                                breakdown=lat, modeled_ms=modeled_ms,
-                               wall_s=lat.total_ms / 1e3)
+                               wall_s=lat.total_ms / 1e3,
+                               terms=(_latency_terms(lat, skip)
+                                      if tr.enabled else None))
             else:
                 self._req_node[rid] = node
                 self._req_cluster[rid] = clu
@@ -650,8 +762,14 @@ class ServingEngine:
             Bb = toks.shape[0]
             lens_pad = np.zeros((Bb,), np.int32)
             lens_pad[:m] = lens
+            tr = self.trace
+            if tr.enabled:
+                tr.begin("prefill", cat="engine",
+                         args={"rows": m, "bucket": int(toks.shape[1])})
             logits, many_cache, _ = self._prefill(
                 self.params, jnp.asarray(toks), jnp.asarray(lens_pad))
+            if tr.enabled:
+                tr.end()
             self.dispatches["prefill"] += 1
             self.prefill_tokens_computed += int(lens.sum())
             slots = [self.free_slots.pop() for _ in range(m)]
@@ -721,9 +839,15 @@ class ServingEngine:
             lens[i] = st.filled
             widths[i] = n
             bt[i] = self.kv.block_table[st.slot]
+        tr = self.trace
+        if tr.enabled:
+            tr.begin("prefill_chunk", cat="engine",
+                     args={"rows": len(sts), "width": C})
         logits, self.cache, _ = self._chunk_paged(
             self.params, jnp.asarray(toks), self.cache, jnp.asarray(lens),
             jnp.asarray(widths), jnp.asarray(bt))
+        if tr.enabled:
+            tr.end()
         self.dispatches["prefill_chunk"] += 1
         self.prefill_tokens_computed += int(widths.sum())
         nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
@@ -781,10 +905,16 @@ class ServingEngine:
         n = min(C, len(st.prompt) - st.filled)
         chunk = np.zeros((1, C), np.int32)
         chunk[0, :n] = st.prompt[st.filled:st.filled + n]
+        tr = self.trace
+        if tr.enabled:
+            tr.begin("prefill_chunk", cat="engine",
+                     args={"rid": st.req_id, "width": n})
         logits, st.cache, _ = self._chunk_fn(
             self.params, jnp.asarray(chunk), st.cache,
             jnp.asarray([st.filled], jnp.int32),
             jnp.asarray([n], jnp.int32))
+        if tr.enabled:
+            tr.end()
         self.dispatches["prefill_chunk"] += 1
         self.prefill_tokens_computed += n
         st.filled += n
@@ -805,17 +935,25 @@ class ServingEngine:
 
     def _retire(self, slot: int) -> None:
         a = self.active.pop(slot)
+        tr = self.trace
+        if tr.enabled:
+            tr.begin("retire", cat="engine",
+                     args={"rid": a.req_id, "slot": slot})
         toks = np.asarray(a.generated[:self.cfg.max_new_tokens], np.int32)
         t_sub = self._t_submit.pop(a.req_id, a.t_admit)
         wall_s = time.perf_counter() - t_sub
         modeled_ms = 0.0
+        terms = None
         if self.cfg.step_ms > 0 and self.semantic is not None:
             # paced simulation: the engine's own compute is counted in
             # steps; add only the modeled network terms around it
-            modeled_ms = self.router.miss_latency(0.0, 0.0, 0.0).total_ms
+            lat = self.router.miss_latency(0.0, 0.0, 0.0)
+            modeled_ms = lat.total_ms
+            if tr.enabled:
+                terms = _latency_terms(lat)
         self._finalize(a.req_id, tokens=toks, source="cloud",
                        latency_s=wall_s, decode_steps=len(a.generated),
-                       modeled_ms=modeled_ms, wall_s=wall_s)
+                       modeled_ms=modeled_ms, wall_s=wall_s, terms=terms)
         self.row_active[slot] = False
         self.free_slots.append(slot)
         if self._paged:
@@ -834,21 +972,48 @@ class ServingEngine:
             pad[:len(toks)] = toks
             self.sem_org.insert_home(clu, node, jnp.asarray(desc[None, :]),
                                      jnp.asarray(pad[None, :]))
+        if tr.enabled:
+            tr.end()
 
     # ------------------------------------------------------------------
     def step(self) -> None:
         """One engine iteration: schedule (batched lookup ladder) + admit
         (EDF-ordered bucketed/chunked prefill) + one batched decode step."""
         self.step_count += 1
+        tr = self.trace
+        if not tr.enabled:                  # the untraced hot path
+            self._step_inner()
+            return
+        tr.begin("step", cat="engine", args={"step": self.step_count})
+        try:
+            self._step_inner()
+        finally:
+            tr.end()
+
+    def _step_inner(self) -> None:
+        tr = self.trace
         ladder0 = self.dispatches["descriptor"] + self.dispatches["lookup"]
+        if tr.enabled:
+            tr.begin("schedule", cat="engine",
+                     args={"pending": len(self.pending)})
         self._schedule()
+        if tr.enabled:
+            tr.end()
         self.last_step_ladder = (self.dispatches["descriptor"]
                                  + self.dispatches["lookup"] - ladder0)
         self.max_step_ladder = max(self.max_step_ladder,
                                    self.last_step_ladder)
+        if tr.enabled:
+            tr.begin("admit", cat="engine", args={"queued": len(self.queue)})
         self._admit()
+        if tr.enabled:
+            tr.end()
         if not self.active:
             return
+        if tr.enabled:
+            tr.begin("decode", cat="engine",
+                     args={"active": int(self.row_active.sum())})
+        t0 = time.perf_counter()
         if self._paged:
             # mid-prefill and free rows ride the batched decode with an
             # all-INVALID table row: their junk write drops instead of
@@ -861,6 +1026,9 @@ class ServingEngine:
                 self.params, self.cache, self.tokens, self.lengths)
         self.dispatches["decode"] += 1
         nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        self._decode_ms.observe((time.perf_counter() - t0) * 1e3)
+        if tr.enabled:
+            tr.end()
         for slot in list(self.active):
             a = self.active[slot]
             a.generated.append(int(nxt[slot]))
@@ -881,12 +1049,14 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:
+        # every number here is a view over self.metrics — snapshot() on the
+        # registry reproduces this dict's counters bit-for-bit
         out = {
-            "completed": len(self.results),
-            "edge_hits": sum(r.source == "edge" for r in self.results),
-            "peer_hits": sum(r.source == "peer" for r in self.results),
-            "remote_hits": sum(r.source == "remote" for r in self.results),
-            "cloud": sum(r.source == "cloud" for r in self.results),
+            "completed": self._completed.value,
+            "edge_hits": self._hits.get("edge"),
+            "peer_hits": self._hits.get("peer"),
+            "remote_hits": self._hits.get("remote"),
+            "cloud": self._hits.get("cloud"),
             "dispatches": dict(self.dispatches),
             "max_step_ladder": self.max_step_ladder,
             "deadline": self.deadline.as_dict(),
@@ -895,18 +1065,12 @@ class ServingEngine:
         }
         if self._paged:
             out["kv"] = self.kv.stats_dict()
-        if self.sem_fed is not None:
-            out["semantic"] = self.sem_fed.stats()
-        elif self.sem_cluster is not None and self.coic_cfg.num_nodes > 1:
-            out["semantic"] = self.sem_cluster.stats()
-        elif self.sem_cluster is not None:
-            # solo cache: the flat per-shard stats shape, as ever
-            out["semantic"] = self.semantic.stats(self.sem_cluster.states[0])
         if self.sem_org is not None:
-            # the uniform per-tier dispatch/digest block (same shape for
-            # solo / cluster / federation configs — satellite)
-            out["ladder"] = self.sem_org.ladder.stats()
-            out["digest"] = (self.sem_fed.digest_stats()
-                             if self.sem_fed is not None
-                             else EMPTY_DIGEST_STATS)
+            # the shared stats formatter (obs/views.py): the cache-org
+            # block + the uniform per-tier dispatch/digest block, same
+            # shapes for solo / cluster / federation configs
+            out["semantic"] = org_stats(self.sem_fed, self.sem_cluster,
+                                        self.semantic)
+            out["ladder"] = ladder_block(self.sem_org)
+            out["digest"] = digest_block(self.sem_fed)
         return out

@@ -42,7 +42,6 @@ Safety invariants of the paged layout:
 """
 from __future__ import annotations
 
-import dataclasses
 from collections import deque
 from typing import Dict, List, Optional, Tuple
 
@@ -51,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hash_cache import content_hash
+from repro.obs.metrics import MetricsRegistry
 
 
 def init_batch_cache(model, batch: int, max_len: int, **kw) -> Dict[str, jax.Array]:
@@ -128,17 +128,41 @@ def init_paged_pool(model, num_pages: int, page_size: int
             for k, v in model.paged_cache_specs(num_pages, page_size).items()}
 
 
-@dataclasses.dataclass
 class PagedStats:
-    shared_maps: int = 0             # admissions that mapped >= 1 page
-    pages_shared: int = 0            # total pages mapped instead of computed
-    tokens_shared: int = 0           # page-aligned prompt tokens not computed
-    pages_registered: int = 0        # full pages published to the index
-    cow_copies: int = 0              # copy-on-write page duplications
-    sem_maps: int = 0                # pages mapped via the sketch path
+    """Paged-KV sharing counters, registry-backed (a private registry when
+    the cache is constructed without one).  The attribute API is unchanged —
+    ``stats.pages_shared += n`` routes into the ``kv/pages_shared``
+    counter, so the engine's mutation sites and every external reader keep
+    working verbatim."""
+
+    FIELDS = ("shared_maps",        # admissions that mapped >= 1 page
+              "pages_shared",       # total pages mapped instead of computed
+              "tokens_shared",      # page-aligned prompt tokens not computed
+              "pages_registered",   # full pages published to the index
+              "cow_copies",         # copy-on-write page duplications
+              "sem_maps")           # pages mapped via the sketch path
+
+    def __init__(self, metrics: Optional[MetricsRegistry] = None,
+                 prefix: str = "kv"):
+        m = metrics if metrics is not None else MetricsRegistry()
+        object.__setattr__(self, "_counters",
+                           {f: m.counter(f"{prefix}/{f}")
+                            for f in self.FIELDS})
+
+    def __getattr__(self, name):
+        try:
+            return self._counters[name].value
+        except KeyError:
+            raise AttributeError(name) from None
+
+    def __setattr__(self, name, value):
+        c = self._counters.get(name)
+        if c is None:
+            raise AttributeError(f"PagedStats has no counter {name!r}")
+        c.set(int(value))
 
     def as_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        return {f: c.value for f, c in self._counters.items()}
 
 
 class PagedKVCache:
@@ -165,7 +189,8 @@ class PagedKVCache:
     def __init__(self, model, max_batch: int, max_len: int, page_size: int,
                  *, num_pages: int = 0, prefix_share: bool = True,
                  prefix_mode: str = "exact", threshold: float = 0.98,
-                 descriptor_dim: int = 64, sem_capacity_per_offset: int = 128):
+                 descriptor_dim: int = 64, sem_capacity_per_offset: int = 128,
+                 metrics: Optional[MetricsRegistry] = None):
         assert max_len % page_size == 0, (max_len, page_size)
         assert prefix_mode in ("exact", "semantic"), prefix_mode
         self.page = page_size
@@ -198,7 +223,7 @@ class PagedKVCache:
             self._sem_capacity = sem_capacity_per_offset
             self._descriptor_dim = descriptor_dim
             self._threshold = threshold
-        self.stats = PagedStats()
+        self.stats = PagedStats(metrics)
 
     # ------------------------------------------------------------------
     # free-list plumbing
