@@ -19,10 +19,10 @@ import traceback
 
 
 def main(argv=None) -> None:
-    from benchmarks import (block_reuse, cache_lookup, cooperative_hit_rate,
-                            federated_hit_rate, frame_deadline, hit_rate,
-                            kv_reuse, load_latency, obs_overhead,
-                            recognition_latency, roofline)
+    from benchmarks import (block_reuse, cache_lookup, churn,
+                            cooperative_hit_rate, federated_hit_rate,
+                            frame_deadline, hit_rate, kv_reuse, load_latency,
+                            obs_overhead, recognition_latency, roofline)
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--trace-out", default="",
@@ -41,6 +41,8 @@ def main(argv=None) -> None:
         ("cooperative_hit_rate", cooperative_hit_rate.run),
         ("cooperative_batched", cooperative_hit_rate.run_batched),
         ("federated_hit_rate", federated_hit_rate.run_smoke),
+        # also writes BENCH_churn.json; nightly asserts the acceptance row
+        ("churn", churn.run_smoke),
         ("frame_deadline", frame_deadline.run_smoke),
         # also writes the BENCH_kv_reuse.json perf record to the repo root
         ("kv_reuse", kv_reuse.run_smoke),

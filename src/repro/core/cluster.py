@@ -165,6 +165,7 @@ class CooperativeEdgeCluster:
             self.cache.init() for _ in range(cfg.num_nodes)]
         self.peer_hits = np.zeros((cfg.num_nodes,), np.int64)   # served-for-others
         self.peer_fills = np.zeros((cfg.num_nodes,), np.int64)  # admitted-from-peer
+        self.node_alive = np.ones((cfg.num_nodes,), bool)       # membership view
         self._keys_stack = None      # cached (N, C, D) stack; None = dirty
         # second-hit admission: per-node count of peer hits per cached entry
         # incarnation (owner, slot, inserted_at)
@@ -185,11 +186,47 @@ class CooperativeEdgeCluster:
         """(keys (N, C, D), valid (N, C)) device stacks.  Keys are cached
         across probes and invalidated on insert (keys only change there);
         the valid stack is cheap and rebuilt each time so TTL expiry stays
-        correct.  Also returns the per-node alive masks for bookkeeping."""
+        correct.  Also returns the per-node alive masks for bookkeeping.
+
+        Dead nodes (``node_alive`` False — membership control plane) are
+        masked out wholesale: their entries never match a probe, so a
+        crashed shard's data is lost, never phantom-served."""
         if self._keys_stack is None:
             self._keys_stack = jnp.stack([s.keys for s in self.states])
-        alive = [self.cache.policy.expire(s, s.clock) for s in self.states]
+        alive = [self.cache.policy.expire(s, s.clock)
+                 if self.node_alive[g] else
+                 jnp.zeros((self.cfg.node_capacity,), bool)
+                 for g, s in enumerate(self.states)]
         return self._keys_stack, jnp.stack(alive), alive
+
+    # ------------------------------------------------------------------
+    def kill_node(self, node: int) -> None:
+        """Membership: node ``node`` crashed.  Its shard's contents are
+        gone (lost-not-phantom) — the state is reset cold so a revive
+        starts empty, and admission bookkeeping pointing at the dead
+        incarnation is dropped."""
+        if not self.node_alive[node]:
+            return
+        self.node_alive[node] = False
+        self.states[node] = self.cache.init()
+        self._keys_stack = None
+        self._peer_seen[node] = {}
+        for seen in self._peer_seen:     # counters keyed by the dead owner
+            for k in [k for k in seen if k[0] == node]:
+                del seen[k]
+
+    def revive_node(self, node: int) -> None:
+        """Membership: node ``node`` rejoined — cold (its cache died with
+        it)."""
+        self.node_alive[node] = True
+
+    def wipe(self) -> None:
+        """Membership: the whole cluster crashed.  Every shard restarts
+        cold; cumulative counters survive (they are observability, not
+        state)."""
+        self.states = [self.cache.init() for _ in range(self.cfg.num_nodes)]
+        self._keys_stack = None
+        self._peer_seen = [{} for _ in range(self.cfg.num_nodes)]
 
     # ------------------------------------------------------------------
     def _admission_filter(self, node: int, owner: int, slots: np.ndarray,
@@ -331,7 +368,11 @@ class CooperativeEdgeCluster:
 
     # ------------------------------------------------------------------
     def insert(self, node: int, keys: jax.Array, values: jax.Array) -> None:
-        """Insert cloud results into the serving node's shard."""
+        """Insert cloud results into the serving node's shard.  Inserts to
+        a dead node are dropped (the RPC would fail in deployment; callers
+        route around dead nodes via the membership plane first)."""
+        if not self.node_alive[node]:
+            return
         self.states[node] = self.cache.insert(
             self.states[node], jnp.asarray(keys), jnp.asarray(values))
         self._keys_stack = None

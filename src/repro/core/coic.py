@@ -151,7 +151,8 @@ class CoICEngine:
                  network: Optional[NetworkModel] = None,
                  sizes: Optional[PayloadSizes] = None,
                  miss_bucket: Optional[int] = None,
-                 tracer=None, metrics: Optional[MetricsRegistry] = None):
+                 tracer=None, metrics: Optional[MetricsRegistry] = None,
+                 membership=None):
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -207,12 +208,35 @@ class CoICEngine:
         self.ladder = TierLadder([self.edge, CloudRung(self)],
                                  metrics=self.metrics,
                                  prefix="engine_ladder", tracer=self.trace)
+        # membership control plane (core/membership.py): requests targeting
+        # a dead cluster/node reroute deterministically; the federation
+        # tombstones/re-elects on detected deaths.  None == static grid.
+        self.membership = membership
+        if membership is not None:
+            if self.federation is not None:
+                self.federation.attach_membership(membership)
+            elif self.cluster is not None:
+                membership.add_listener(self._on_cluster_membership_event)
         self.asset_cache = HashCache()
         # per-tier frame-budget accounting, on the same registry
         self.deadline = DeadlineStats(self.metrics)
         self._timings = {"descriptor_ms": [], "lookup_ms": [], "cloud_ms": []}
         self._timing_hist = {k: self.metrics.histogram(f"timings/{k}")
                              for k in self._timings}
+
+    # ------------------------------------------------------------------
+    def _on_cluster_membership_event(self, ev) -> None:
+        """Single-cluster engines wire node-level churn straight to the
+        cluster's shard masks (the federation path has its own listener)."""
+        if ev.kind == "node_dead":
+            self.cluster.kill_node(ev.node)
+        elif ev.kind == "node_alive":
+            self.cluster.revive_node(ev.node)
+        elif ev.kind == "cluster_dead":
+            self.cluster.wipe()
+        elif ev.kind == "cluster_alive":
+            self.cluster.wipe()
+            self.cluster.node_alive[:] = True
 
     # ------------------------------------------------------------------
     def _descriptors(self, tokens: np.ndarray) -> jax.Array:
@@ -253,6 +277,11 @@ class CoICEngine:
         else:
             deadlines = [None if d is None or np.isnan(d) else float(d)
                          for d in np.asarray(deadline_ms, object)]
+        if self.membership is not None:
+            # degraded routing: a dead target remaps to the nearest alive
+            # (cluster, node) by deterministic upward scan BEFORE packing —
+            # the ladder below only ever sees live targets
+            cluster_id, node_id = self.membership.route(cluster_id, node_id)
         desc = self._descriptors(tokens)
         per_req_desc_ms = self._timings["descriptor_ms"][-1] / B
         desc_np = np.asarray(desc)
@@ -356,6 +385,8 @@ class CoICEngine:
         s["digest"] = digest_block(self.federation)
         s["asset_cache"] = self.asset_cache.stats()
         s["deadline"] = self.deadline.as_dict()
+        if self.membership is not None:
+            s["membership"] = self.membership.stats()
         return s
 
 

@@ -109,6 +109,17 @@ class DigestPublisher:
         self._keys = np.zeros((M, D), np.float32)    # fp32 mode
         self._valid = np.zeros((M,), bool)
 
+    def reset(self) -> None:
+        """Forget the last-shipped representation (cluster crash/revive:
+        the region tombstoned our replica, so our delta memory lies — an
+        unchanged row would otherwise never re-ship and the replica would
+        stay empty forever).  The next ``publish`` ships a full frame,
+        reconstructing the board bit-identically to a fresh publisher."""
+        self._codes[:] = 0
+        self._scales[:] = 0.0
+        self._keys[:] = 0.0
+        self._valid[:] = False
+
     def publish(self, keys: np.ndarray, valid: np.ndarray) -> DigestUpdate:
         """keys (M, D) f32 / valid (M,): the cluster's freshly-selected
         digest rows.  Returns the update to ship region-side."""
@@ -181,6 +192,7 @@ class RegionDigestBoard:
         self._bytes_shipped = m.counter(f"{prefix}/bytes_shipped")
         self._rows_shipped = m.counter(f"{prefix}/rows_shipped")
         self._updates_applied = m.counter(f"{prefix}/updates_applied")
+        self._tombstones = m.counter(f"{prefix}/tombstones")
 
     @property
     def bytes_shipped(self) -> int:
@@ -208,6 +220,23 @@ class RegionDigestBoard:
         self._updates_applied.inc()
 
     # ------------------------------------------------------------------
+    def tombstone(self, cluster: int) -> None:
+        """Invalidate one cluster's whole replica (membership declared it
+        dead).  Tombstoned rows stop attracting digest probes immediately;
+        the row payloads are zeroed too so a revived cluster's first full
+        publish reconstructs the replica bit-identically to a cold board
+        (no stale codes left behind under rows the new digest skips)."""
+        self.codes[cluster] = 0
+        self.scales[cluster] = 0.0
+        self.keys[cluster] = 0.0
+        self.valid[cluster] = False
+        self._tombstones.inc()
+
+    @property
+    def tombstones(self) -> int:
+        return self._tombstones.value
+
+    # ------------------------------------------------------------------
     def probe_keys(self) -> np.ndarray:
         """(K, M, D) f32 digest matrix as the probe sees it (dequantized in
         int8 mode — the device path dequantizes inside the jitted dispatch;
@@ -225,6 +254,7 @@ class RegionDigestBoard:
             "bytes_shipped": int(self.bytes_shipped),
             "rows_shipped": int(self.rows_shipped),
             "updates_applied": int(self.updates_applied),
+            "tombstones": int(self.tombstones),
         }
 
 

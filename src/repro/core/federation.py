@@ -182,7 +182,15 @@ class RemoteDigestRung:
         for k, rows in enumerate(rows_of):
             for i, (n, b) in enumerate(rows):
                 if d_score[k, i] >= ccfg.threshold:
-                    cand_rows[int(cand[k, i])].append((k, n, b))
+                    c = int(cand[k, i])
+                    if not fed.cluster_is_alive(c):
+                        # the advertised cluster died mid-window (board
+                        # not yet tombstoned): the probe connection is
+                        # refused — count it and fall through to cloud,
+                        # never serve the dead copy
+                        fed.remote_dead += 1
+                        continue
+                    cand_rows[c].append((k, n, b))
         if not sum(len(r) for r in cand_rows):
             return TierProbeResult(hit, tier, cluster, owner, score, value,
                                    dispatches)
@@ -278,6 +286,8 @@ class FederatedEdgeTier:
         self.step_count = 0
         self._digest_refreshes = self.metrics.counter("digest/refreshes")
         self._digest_false_hits = self.metrics.counter("digest/false_hits")
+        self._remote_dead = self.metrics.counter("membership/remote_dead")
+        self.membership = None           # attach_membership() plumbs one
         self.remote_hits = np.zeros((K,), np.int64)    # served BY cluster k
         self.remote_fills = np.zeros((K,), np.int64)   # admitted INTO cluster k
         # second-hit remote admission: per home cluster, count of remote
@@ -309,6 +319,77 @@ class FederatedEdgeTier:
     def digest_false_hits(self, v: int) -> None:
         self._digest_false_hits.set(v)
 
+    @property
+    def remote_dead(self) -> int:
+        """Digest candidates refused because the advertised cluster was
+        dead (ground truth) at serve time — each fell through to cloud."""
+        return self._remote_dead.value
+
+    @remote_dead.setter
+    def remote_dead(self, v: int) -> None:
+        self._remote_dead.set(v)
+
+    # ------------------------------------------------------------------
+    # membership control plane
+    def attach_membership(self, membership) -> None:
+        """Wire a ``core/membership.py::ClusterMembership`` control plane
+        into the federation: detected deaths tombstone the digest board,
+        wipe the dead cluster's shards (lost-not-phantom), reset its
+        publisher's delta memory, and re-elect region pins over the
+        survivors; the remote rung starts refusing serves from
+        ground-truth-dead clusters (counted ``remote_dead``)."""
+        assert membership.num_clusters == self.cfg.num_clusters, (
+            membership.num_clusters, self.cfg.num_clusters)
+        assert membership.nodes_per_cluster == self.cfg.cluster.num_nodes, (
+            membership.nodes_per_cluster, self.cfg.cluster.num_nodes)
+        self.membership = membership
+        membership.add_listener(self._on_membership_event)
+
+    def cluster_is_alive(self, cluster: int) -> bool:
+        """GROUND-TRUTH liveness (not detection): a probe to a dead
+        cluster gets no response even before the heartbeat expires.
+        Always True without an attached membership plane."""
+        return (self.membership is None
+                or bool(self.membership.alive_clusters()[cluster]))
+
+    def _on_membership_event(self, ev) -> None:
+        cl = self.clusters[ev.cluster]
+        if ev.kind == "cluster_dead":
+            # tombstone: the replica stops attracting probes; the crash
+            # lost the cache, so the shards wipe and the publisher's delta
+            # memory resets (next publish ships a full frame)
+            self.board.tombstone(ev.cluster)
+            self.publishers[ev.cluster].reset()
+            cl.wipe()
+            cl.node_alive[:] = False     # drops any straggler insert too
+            self._prune_dead_owner(ev.cluster)
+        elif ev.kind == "cluster_alive":
+            # revive is COLD.  A crash that was revived before any sweep
+            # detected it never tombstoned — its pre-crash advert is still
+            # on the board pointing into a cache that died; clear it now.
+            if self.board.valid[ev.cluster].any():
+                self.board.tombstone(ev.cluster)
+                self._prune_dead_owner(ev.cluster)
+            self.publishers[ev.cluster].reset()
+            cl.wipe()
+            cl.node_alive[:] = True
+        elif ev.kind == "node_dead":
+            cl.kill_node(ev.node)
+        elif ev.kind == "node_alive":
+            cl.revive_node(ev.node)
+        if self._federating and self.cfg.cluster.policy.region_aware:
+            # re-elect: pins at the dead cluster are gone (wiped); the
+            # next-hottest holder (lowest-id alive) pins on this pass
+            self._refresh_region_pins()
+
+    def _prune_dead_owner(self, cluster: int) -> None:
+        """Drop second-hit admission counters pointing at a dead owner
+        cluster — its entry incarnations no longer exist."""
+        for k in range(self.cfg.num_clusters):
+            self._remote_seen[k] = {
+                key: v for key, v in self._remote_seen[k].items()
+                if key[1] != cluster}
+
     # ------------------------------------------------------------------
     # ladder-counter views (the bound the tests/benchmarks pin)
     @property
@@ -325,7 +406,14 @@ class FederatedEdgeTier:
 
     @property
     def tier_counts(self) -> dict:
-        return self.ladder.tier_counts
+        # the ladder's counters are keyed by the fixed tier names; the
+        # membership-refused digest candidates ride along as remote_dead
+        # (they are not a tier — each one fell through and was counted at
+        # whatever tier finally served it)
+        tc = dict(self.ladder.tier_counts)
+        if self.membership is not None or self.remote_dead:
+            tc["remote_dead"] = self.remote_dead
+        return tc
 
     @property
     def digest_bytes_shipped(self) -> int:
@@ -342,6 +430,10 @@ class FederatedEdgeTier:
         M = self.cfg.digest_size
         D = self.cfg.cluster.key_dim
         for k, cl in enumerate(self.clusters):
+            if not self.cluster_is_alive(k):
+                continue             # a dead metro publishes nothing; its
+                                     # replica keeps its last advert until
+                                     # detection tombstones it
             keys = np.concatenate([np.asarray(s.keys) for s in cl.states])
             valid = np.concatenate(
                 [np.asarray(cl.cache.policy.expire(s, s.clock))
@@ -377,7 +469,16 @@ class FederatedEdgeTier:
         pins, leaving the entry protected nowhere."""
         ccfg = self.cfg.cluster
         pinned_keys: List[np.ndarray] = []   # keys pinned at lower clusters
-        for cl in self.clusters:
+        for c, cl in enumerate(self.clusters):
+            if not self.cluster_is_alive(c):
+                # a dead cluster holds no pins (its copies are gone) and
+                # contributes nothing to protect against — survivors that
+                # previously deferred to it re-elect on this pass
+                for p, st in enumerate(cl.states):
+                    if np.asarray(st.region_pin).any():
+                        cl.states[p] = dataclasses.replace(
+                            st, region_pin=jnp.zeros_like(st.region_pin))
+                continue
             adv = (np.concatenate(pinned_keys) if pinned_keys
                    else np.zeros((0, ccfg.key_dim), np.float32))
             for p, st in enumerate(cl.states):
@@ -407,6 +508,9 @@ class FederatedEdgeTier:
                 self.step_count % self.cfg.digest_interval == 0:
             self.refresh_digests()
         self.step_count += 1
+        if self.membership is not None:
+            # stamp membership events with the serving step they land on
+            self.membership.step = self.step_count
         pctx = build_probe_context(self.clusters)
         res = self.ladder.probe(queries, mask, pctx,
                                 self.cfg.cluster.payload_dim,
@@ -532,6 +636,9 @@ class FederatedEdgeTier:
             "digest_refreshes": self.digest_refreshes,
             "probe_dispatches": self.probe_dispatches,
             "max_ladder_dispatches": self.max_ladder_dispatches,
+            "remote_dead": self.remote_dead,
             "ladder": self.ladder.stats(),
             "digest": self.digest_stats(),
+            **({"membership": self.membership.stats()}
+               if self.membership is not None else {}),
         }

@@ -415,3 +415,121 @@ class FramePacedWorkload:
                              size=(self.pool_size, frame_len))
         bulk = rng.integers(0, vocab_size, size=(self.pool_size, bulk_len))
         return frame.astype(np.int32), bulk.astype(np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosEvent:
+    """One scheduled membership mutation."""
+
+    kind: str                        # kill_cluster | revive_cluster |
+                                     # kill_node | revive_node
+    cluster: int
+    node: int = -1                   # -1 for cluster-level events
+    step: int = 0
+
+
+@dataclasses.dataclass
+class ChaosSchedule:
+    """Seeded chaos schedule: kill or revive a random cluster or node every
+    ``every`` steps — the churn driver behind ``tests/test_chaos.py`` and
+    ``benchmarks/churn.py``.
+
+    The whole event list is PRE-DRAWN at construction against the
+    schedule's own simulated liveness masks, so a schedule is a pure
+    function of its parameters: two runs with the same seed inject
+    byte-identical churn whatever the system under test does.  Invariants
+    the draw enforces: the last alive cluster is never killed (the
+    federation must always have somewhere to route), and a node kill never
+    takes a cluster's last alive node (cluster-level death is exercised by
+    the explicit cluster kills, not by attrition surprise).
+
+    ``apply(membership, step)`` replays the step's events onto a
+    ``core/membership.py::ClusterMembership`` (``announce=False`` models
+    silent crashes detected by heartbeat sweep instead of graceful
+    leaves).
+    """
+
+    num_clusters: int
+    nodes_per_cluster: int = 1
+    every: int = 4                   # steps between chaos actions
+    steps: int = 64                  # horizon to pre-draw events for
+    node_prob: float = 0.0           # P(action targets a node, not a cluster)
+    revive_prob: float = 0.5         # P(prefer reviving when something is dead)
+    announce: bool = True            # graceful leave vs silent crash
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.num_clusters >= 1 and self.nodes_per_cluster >= 1
+        assert self.every >= 1, self.every
+        assert 0.0 <= self.node_prob <= 1.0, self.node_prob
+        rng = np.random.default_rng(self.seed)
+        K, N = self.num_clusters, self.nodes_per_cluster
+        alive_c = np.ones((K,), bool)
+        alive_n = np.ones((K, N), bool)
+        self.events: List[ChaosEvent] = []
+        for step in range(self.every, self.steps + 1, self.every):
+            ev = self._draw(rng, alive_c, alive_n, step)
+            if ev is None:
+                continue
+            self.events.append(ev)
+            if ev.kind == "kill_cluster":
+                alive_c[ev.cluster] = False
+            elif ev.kind == "revive_cluster":
+                alive_c[ev.cluster] = True
+                alive_n[ev.cluster] = True
+            elif ev.kind == "kill_node":
+                alive_n[ev.cluster, ev.node] = False
+            else:
+                alive_n[ev.cluster, ev.node] = True
+        self.by_step = {}
+        for ev in self.events:
+            self.by_step.setdefault(ev.step, []).append(ev)
+
+    # ------------------------------------------------------------------
+    def _draw(self, rng, alive_c, alive_n, step):
+        K, N = self.num_clusters, self.nodes_per_cluster
+        if rng.random() < self.node_prob and N > 1:
+            dead = [(k, g) for k in range(K) if alive_c[k]
+                    for g in np.nonzero(~alive_n[k])[0]]
+            if dead and rng.random() < self.revive_prob:
+                k, g = dead[int(rng.integers(len(dead)))]
+                return ChaosEvent("revive_node", k, int(g), step)
+            # only nodes whose cluster keeps >= 1 alive node afterwards
+            cand = [(k, g) for k in range(K)
+                    if alive_c[k] and alive_n[k].sum() > 1
+                    for g in np.nonzero(alive_n[k])[0]]
+            if cand:
+                k, g = cand[int(rng.integers(len(cand)))]
+                return ChaosEvent("kill_node", k, int(g), step)
+            return None
+        dead = np.nonzero(~alive_c)[0]
+        if dead.size and rng.random() < self.revive_prob:
+            return ChaosEvent("revive_cluster", int(rng.choice(dead)),
+                              step=step)
+        cand = np.nonzero(alive_c)[0]
+        if cand.size > 1:                # never kill the last alive cluster
+            return ChaosEvent("kill_cluster", int(rng.choice(cand)),
+                              step=step)
+        return None
+
+    # ------------------------------------------------------------------
+    @property
+    def touched_clusters(self) -> set:
+        """Clusters any event ever touched — requests homed elsewhere are
+        the "unaffected" set the bit-identity chaos assertion compares."""
+        return {ev.cluster for ev in self.events}
+
+    def apply(self, membership, step: int) -> List[ChaosEvent]:
+        """Replay this step's events onto ``membership``; returns them."""
+        evs = self.by_step.get(step, [])
+        for ev in evs:
+            if ev.kind == "kill_cluster":
+                membership.kill_cluster(ev.cluster, announce=self.announce)
+            elif ev.kind == "revive_cluster":
+                membership.revive_cluster(ev.cluster)
+            elif ev.kind == "kill_node":
+                membership.kill_node(ev.cluster, ev.node,
+                                     announce=self.announce)
+            else:
+                membership.revive_node(ev.cluster, ev.node)
+        return list(evs)

@@ -361,3 +361,51 @@ def sharded_topk_lookup(queries: jax.Array, keys: jax.Array,
         out_specs=(P(), P()),
         check_rep=False,
     )(queries, keys, valid)
+
+
+def regroup_surviving_shards(keys: jax.Array, valid: jax.Array,
+                             alive: np.ndarray):
+    """Compact the shard axis onto the surviving shard set (membership
+    change: nodes left/crashed).  keys (N, C, D) / valid (N, C) / alive
+    (N,) bool -> (keys (A, C, D), valid (A, C), shard_ids (A,) int32) where
+    ``shard_ids[a]`` is the original shard id of compacted row ``a``.
+    Entries on dead shards simply do not appear — lost, never phantom."""
+    alive = np.asarray(alive, bool)
+    assert alive.shape == (keys.shape[0],), (alive.shape, keys.shape)
+    ids = np.nonzero(alive)[0].astype(np.int32)
+    sel = jnp.asarray(ids)
+    return keys[sel], valid[sel], ids
+
+
+def surviving_topk_lookup(queries: jax.Array, keys: jax.Array,
+                          valid: jax.Array, alive: np.ndarray, k: int,
+                          mesh: Optional[Mesh] = None,
+                          axis_name: str = "cache", *, impl: str = "auto"):
+    """``sharded_topk_lookup`` regrouped over the surviving shard set.
+
+    The cache axis reshards live on membership change: the lookup runs
+    over only the ``alive`` shards (compacted, so dead shards cost no
+    FLOPs and can never serve), and returned global indices are mapped
+    back to the ORIGINAL [0, N*C) index space so callers' owner = idx //
+    C arithmetic is membership-agnostic.  When ``mesh`` is given and its
+    ``axis_name`` size equals the survivor count the probe runs as the
+    shard_map collective; otherwise it falls back to the single-dispatch
+    pooled probe (identical results).  With no survivors, returns idx -1
+    / score -inf (every query misses).
+    """
+    n, c, _ = keys.shape
+    q = queries.shape[0]
+    keys_a, valid_a, ids = regroup_surviving_shards(keys, valid, alive)
+    a = len(ids)
+    if a == 0:
+        return (jnp.full((q, k), -1, jnp.int32),
+                jnp.full((q, k), -jnp.inf, jnp.float32))
+    if mesh is not None and dict(mesh.shape).get(axis_name) == a:
+        idx, score = sharded_topk_lookup(queries, keys_a, valid_a, k, mesh,
+                                         axis_name, impl=impl)
+    else:
+        idx, score = cluster_topk_lookup(queries, keys_a, valid_a, k,
+                                         impl=impl)
+    # compacted shard a -> original shard ids[a], preserving the slot
+    idx = jnp.asarray(ids)[idx // c] * c + idx % c
+    return idx.astype(jnp.int32), score

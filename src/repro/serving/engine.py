@@ -232,7 +232,8 @@ class ServedResult:
 class ServingEngine:
     def __init__(self, model, params, cfg: ServingConfig,
                  network: Optional[NetworkModel] = None,
-                 tracer=None, metrics: Optional[MetricsRegistry] = None):
+                 tracer=None, metrics: Optional[MetricsRegistry] = None,
+                 membership=None):
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -406,6 +407,30 @@ class ServingEngine:
                 input_bytes=cfg.max_len * 4,
                 descriptor_bytes=key_dim * 4,
                 result_bytes=cfg.max_new_tokens * 4))
+
+        # membership control plane (core/membership.py): requests whose
+        # target cluster/node died reroute deterministically at schedule
+        # time; the federation tombstones digests and re-elects pins on
+        # detected deaths.  None == static grid.
+        self.membership = membership
+        if membership is not None:
+            if self.sem_fed is not None:
+                self.sem_fed.attach_membership(membership)
+            elif self.sem_cluster is not None:
+                membership.add_listener(self._on_cluster_membership_event)
+
+    # ------------------------------------------------------------------
+    def _on_cluster_membership_event(self, ev) -> None:
+        """Single-cluster engines wire node churn straight to the shard
+        masks (the federation path has its own listener)."""
+        if ev.kind == "node_dead":
+            self.sem_cluster.kill_node(ev.node)
+        elif ev.kind == "node_alive":
+            self.sem_cluster.revive_node(ev.node)
+        elif ev.kind in ("cluster_dead", "cluster_alive"):
+            self.sem_cluster.wipe()
+            if ev.kind == "cluster_alive":
+                self.sem_cluster.node_alive[:] = True
 
     # ------------------------------------------------------------------
     # registry-backed attribute API (the legacy names, mutated with +=/
@@ -622,6 +647,16 @@ class ServingEngine:
             return
         n_drain = 1 if self.cfg.scheduling == "sequential" else len(self.pending)
         batch = [self.pending.popleft() for _ in range(n_drain)]
+        if self.membership is not None:
+            # degraded routing: resolve each request's target against
+            # CURRENT liveness (not submit-time liveness) — a dead target
+            # remaps to the nearest alive (cluster, node) by deterministic
+            # upward scan, so the ladder below only sees live targets
+            rerouted = []
+            for rid, prompt, node, clu in batch:
+                clu, node = self.membership.route(clu, node)
+                rerouted.append((rid, prompt, node, clu))
+            batch = rerouted
         prompts = [b[1] for b in batch]
         nodes = [b[2] for b in batch]
         clusters = [b[3] for b in batch]
@@ -963,6 +998,11 @@ class ServingEngine:
             self.kv.free_slot(slot)
         node = self._req_node.pop(a.req_id, 0)
         clu = self._req_cluster.pop(a.req_id, 0)
+        if self.membership is not None:
+            # the home shard may have died while this request computed:
+            # insert into the live reroute target instead (and
+            # cluster.insert drops writes to dead nodes regardless)
+            clu, node = self.membership.route(clu, node)
         prompt = self._prompts.pop(a.req_id, None)
         if self.semantic is not None and prompt is not None:
             # reuse the schedule-time descriptor (every miss cached one in
@@ -1073,4 +1113,6 @@ class ServingEngine:
                                         self.semantic)
             out["ladder"] = ladder_block(self.sem_org)
             out["digest"] = digest_block(self.sem_fed)
+        if self.membership is not None:
+            out["membership"] = self.membership.stats()
         return out

@@ -18,41 +18,23 @@ Growth (nodes coming back) is the same path with a larger mesh.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
 
 from repro.checkpoint.checkpointer import Checkpointer
+# HeartbeatMonitor/SimulatedFailure moved to core/membership.py so the
+# serving control plane can import them without trainer deps; re-exported
+# here so `from repro.train.elastic import HeartbeatMonitor` keeps working
+from repro.core.membership import HeartbeatMonitor, SimulatedFailure
 from repro.data.pipeline import SyntheticLMData, shard_batch
 from repro.launch.mesh import make_mesh
 from repro.parallel.sharding import RULES_TRAIN, set_activation_sharder
 from repro.train.trainer import (TrainerConfig, TrainState,
                                  make_train_step)
 
-
-class SimulatedFailure(Exception):
-    def __init__(self, surviving_data_shards: int):
-        self.surviving_data_shards = surviving_data_shards
-        super().__init__(f"node failure: {surviving_data_shards} data shards survive")
-
-
-class HeartbeatMonitor:
-    def __init__(self, hosts: List[str], timeout_s: float = 60.0):
-        self.timeout_s = timeout_s
-        now = time.monotonic()
-        self.last: Dict[str, float] = {h: now for h in hosts}
-
-    def beat(self, host: str, at: Optional[float] = None) -> None:
-        self.last[host] = time.monotonic() if at is None else at
-
-    def dead(self, now: Optional[float] = None) -> List[str]:
-        now = time.monotonic() if now is None else now
-        return [h for h, t in self.last.items() if now - t > self.timeout_s]
-
-    def alive(self, now: Optional[float] = None) -> List[str]:
-        dead = set(self.dead(now))
-        return [h for h in self.last if h not in dead]
+__all__ = ["SimulatedFailure", "HeartbeatMonitor", "ElasticConfig",
+           "ElasticTrainer"]
 
 
 @dataclasses.dataclass

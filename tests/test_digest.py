@@ -344,3 +344,92 @@ def test_digest_stats_exposed_uniformly():
                         "updates_applied", "refreshes", "false_hits",
                         "interval"}
     assert s["ladder"]["max_ladder_dispatches"] <= 4
+
+
+# ---------------------------------------------------------------------------
+# tombstones: crash/revive interleavings over the delta wire format
+# ---------------------------------------------------------------------------
+
+
+def test_tombstone_clears_rows_and_counts():
+    rng = np.random.default_rng(7)
+    M, D = 4, 8
+    cfg = DigestConfig(M, "int8", "delta")
+    pub = DigestPublisher(cfg, D)
+    board = RegionDigestBoard(cfg, 2, D)
+    board.apply(0, pub.publish(_unit(rng, M, D), np.ones((M,), bool)))
+    assert board.valid[0].all()
+    board.tombstone(0)
+    assert not board.valid[0].any()
+    assert not board.codes[0].any()
+    assert not board.scales[0].any()
+    assert board.tombstones == 1
+    assert board.stats()["tombstones"] == 1
+    board.tombstone(1)                                # idempotent per row set
+    assert board.tombstones == 2
+
+
+def test_publisher_reset_forces_full_frame():
+    """Push-on-delta's memory survives crashes only through ``reset()``: a
+    reset publisher re-ships the complete frame (cold-start semantics), so
+    a tombstoned board row set reconstructs without a frame of silence."""
+    rng = np.random.default_rng(8)
+    M, D = 4, 8
+    pub = DigestPublisher(DigestConfig(M, "int8", "delta"), D)
+    keys, valid = _unit(rng, M, D), np.ones((M,), bool)
+    first = pub.publish(keys, valid)
+    assert first.bytes > 0
+    assert pub.publish(keys, valid).bytes == 0        # steady state
+    pub.reset()
+    again = pub.publish(keys, valid)
+    assert again.bytes == first.bytes                 # full frame re-ships
+    assert len(again.rows) == M
+
+
+@pytest.mark.parametrize("quant", ["fp32", "int8"])
+@pytest.mark.parametrize("refresh", ["full", "delta"])
+@pytest.mark.parametrize("seed", range(3))
+def test_tombstone_then_revive_reconstructs_bit_identically(quant, refresh,
+                                                            seed):
+    """Crash/revive mid-interleaving: after ``tombstone`` + publisher
+    ``reset``, the recovering cluster's publishes rebuild its board rows
+    BIT-IDENTICALLY to a never-crashed fresh publisher/board pair fed the
+    same post-revive sequence — delta memory never leaks a pre-crash row
+    across the wipe."""
+    rng = np.random.default_rng(seed)
+    M, D = 8, 16
+    cfg = DigestConfig(M, quant, refresh)
+    pub = DigestPublisher(cfg, D)
+    board = RegionDigestBoard(cfg, 1, D)
+
+    keys = _unit(rng, M, D)
+    valid = np.ones((M,), bool)
+
+    def mutate():
+        rows = rng.random(M) < rng.random()
+        if rows.any():
+            keys[rows] = _unit(rng, int(rows.sum()), D)
+        valid[:] = valid ^ (rng.random(M) < 0.2)
+
+    for _ in range(6):                                # pre-crash history
+        mutate()
+        board.apply(0, pub.publish(keys.copy(), valid.copy()))
+
+    board.tombstone(0)                                # crash detected
+    pub.reset()
+    assert not board.valid[0].any()
+
+    fresh_pub = DigestPublisher(cfg, D)               # never-crashed twin
+    fresh_board = RegionDigestBoard(cfg, 1, D)
+    for _ in range(5):                                # post-revive history
+        mutate()
+        board.apply(0, pub.publish(keys.copy(), valid.copy()))
+        fresh_board.apply(0, fresh_pub.publish(keys.copy(), valid.copy()))
+        np.testing.assert_array_equal(board.valid, fresh_board.valid)
+        if quant == "int8":
+            np.testing.assert_array_equal(board.codes, fresh_board.codes)
+            np.testing.assert_array_equal(board.scales, fresh_board.scales)
+        else:
+            np.testing.assert_array_equal(board.keys, fresh_board.keys)
+        np.testing.assert_array_equal(board.probe_keys(),
+                                      fresh_board.probe_keys())

@@ -236,3 +236,107 @@ def test_delta_refresh_reconstructs_full_state(data):
         np.testing.assert_array_equal(board_d.probe_keys(),
                                       board_f.probe_keys())
     assert board_d.bytes_shipped <= board_f.bytes_shipped
+
+
+# ---------------------------------------------------------------------------
+# region_pin release: eviction and membership churn (the membership PR)
+# ---------------------------------------------------------------------------
+
+
+def _pin_rows(cl, key):
+    """Valid rows of a 1-node cluster matching ``key``, and which of them
+    the region_pin mask currently protects."""
+    s = cl.states[0]
+    valid = np.asarray(s.valid)
+    match = valid & ((np.asarray(s.keys) @ key) >= TAU)
+    pin = np.asarray(s.region_pin) & match
+    return match, pin
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.data())
+def test_region_pin_released_on_eviction_and_death(data):
+    """Region-pin election invariants under an arbitrary interleaving of
+    holder deaths, revives, and evictions of the shared entry:
+
+      (a) pins only ever cover VALID rows,
+      (b) a ground-truth-dead cluster holds no pins at all,
+      (c) whenever any alive cluster still holds the shared entry hot,
+          EXACTLY the lowest-id such holder pins it (deterministic
+          re-election; an evicted or dead copy is never elected)."""
+    import dataclasses as dc
+
+    from repro.core.membership import ClusterMembership
+    from repro.core.policies import EvictionPolicy
+
+    K = data.draw(st.integers(2, 3), label="clusters")
+    cap, d = 4, 24
+    fed = FederatedEdgeTier(FederationConfig(
+        num_clusters=K, digest_size=cap, digest_interval=1,
+        cluster=ClusterConfig(
+            num_nodes=1, node_capacity=cap, key_dim=d, payload_dim=3,
+            threshold=TAU, policy=EvictionPolicy("lru", region_aware=True),
+            admission="never")))
+    mb = ClusterMembership(K, 1)
+    fed.attach_membership(mb)
+    pool = _pool(data.draw(st.integers(0, 9), label="pool_seed"), 12, d)
+    shared = pool[0]
+
+    def make_hot(k):
+        fed.insert(k, 0, jnp.asarray(shared[None, :]),
+                   jnp.ones((1, 3), jnp.float32))
+        s = fed.clusters[k].states[0]
+        fed.clusters[k].states[0] = dc.replace(
+            s, peer_served=jnp.asarray(np.asarray(s.peer_served) + 2))
+
+    for k in range(K):                               # every cluster holds it
+        make_hot(k)
+    fed.refresh_digests()
+
+    def check():
+        holders = []
+        pinners = []
+        for k, cl in enumerate(fed.clusters):
+            match, pin = _pin_rows(cl, shared)
+            s = cl.states[0]
+            # (a) pins never cover invalid rows
+            assert not (np.asarray(s.region_pin)
+                        & ~np.asarray(s.valid)).any(), k
+            if not mb.is_alive(k):
+                # (b) dead clusters hold no pins
+                assert not np.asarray(s.region_pin).any(), k
+                continue
+            hot = match & (np.asarray(s.peer_served) >= 1)
+            if hot.any():
+                holders.append(k)
+            if pin.any():
+                pinners.append(k)
+        # (c) deterministic election: the lowest-id alive hot holder
+        if holders:
+            assert pinners == [holders[0]], (holders, pinners)
+        else:
+            assert pinners == []
+
+    check()
+    for step in range(data.draw(st.integers(1, 6), label="steps")):
+        op = data.draw(st.sampled_from(["kill", "revive", "evict", "noop"]),
+                       label=f"op{step}")
+        if op == "kill":
+            alive = [k for k in range(K) if mb.is_alive(k)]
+            if len(alive) > 1:
+                mb.kill_cluster(alive[0])            # takes the pin holder
+        elif op == "revive":
+            dead = [k for k in range(K) if not mb.cluster_alive[k]]
+            if dead:
+                mb.revive_cluster(dead[0])           # rejoins COLD
+        elif op == "evict":
+            # push the shared entry out of a random alive holder through
+            # capacity pressure (unpinned copies go first; a pinned copy
+            # is protected, so eviction only ever drops deferred replicas)
+            alive = [k for k in range(K) if mb.is_alive(k)]
+            k = alive[data.draw(st.integers(0, len(alive) - 1),
+                                label=f"victim{step}")]
+            fed.insert(k, 0, jnp.asarray(pool[1:1 + cap]),
+                       jnp.ones((cap, 3), jnp.float32))
+        fed.refresh_digests()
+        check()

@@ -1,0 +1,345 @@
+"""Unit suite for the membership control plane (core/membership.py):
+heartbeat expiry, detection vs ground truth, idempotent double-kill,
+deterministic re-election/routing, and the federation listener's
+tombstone + re-elect wiring."""
+import numpy as np
+import pytest
+
+from repro.core.cluster import ClusterConfig
+from repro.core.federation import FederatedEdgeTier, FederationConfig
+from repro.core.membership import (ClusterMembership, HeartbeatMonitor,
+                                   MembershipEvent, SimulatedFailure)
+from repro.core.policies import EvictionPolicy
+
+K, N, D, CAP = 3, 2, 32, 8
+
+
+def _mk_membership(**kw):
+    kw.setdefault("timeout_s", 2.0)
+    return ClusterMembership(K, N, **kw)
+
+
+def _mk_fed(region_aware=False, threshold=0.8):
+    policy = EvictionPolicy("lru", region_aware=region_aware)
+    return FederatedEdgeTier(FederationConfig(
+        num_clusters=K, digest_size=4, digest_interval=1,
+        cluster=ClusterConfig(num_nodes=N, node_capacity=CAP, key_dim=D,
+                              payload_dim=4, threshold=threshold,
+                              policy=policy)))
+
+
+def _unit(rng, n):
+    x = rng.standard_normal((n, D)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+class TestHeartbeat:
+    def test_expiry_on_logical_clock(self):
+        mon = HeartbeatMonitor(["a", "b"], timeout_s=5.0)
+        mon.beat("a", at=0.0)
+        mon.beat("b", at=0.0)
+        assert mon.dead(now=4.0) == []
+        mon.beat("b", at=4.0)
+        assert mon.dead(now=6.0) == ["a"]
+        assert mon.alive(now=6.0) == ["b"]
+
+    def test_silent_crash_detected_at_sweep_not_before(self):
+        mb = _mk_membership()
+        mb.kill_cluster(1, announce=False, now=100.0)
+        # ground truth flips immediately; detection has not fired
+        assert not mb.is_alive(1)
+        assert mb.detected_alive[1]
+        assert mb.events == []
+        # before the timeout the sweep sees nothing... (the kill pinned the
+        # last beat 2*timeout back, so any sweep detects it; beat at 100
+        # for the survivors to keep them alive)
+        mb.beat(0, at=100.0)
+        mb.beat(2, at=100.0)
+        assert mb.sweep(now=101.0) == [1]
+        assert not mb.detected_alive[1]
+        assert [e.kind for e in mb.events] == ["cluster_dead"]
+        assert mb.stats()["heartbeat_expiries"] == 1
+
+    def test_beating_cluster_never_expires(self):
+        mb = _mk_membership()
+        for t in range(10):
+            for k in range(K):
+                mb.beat(k, at=float(t))
+            assert mb.sweep(now=float(t) + 0.5) == []
+        assert all(mb.alive_clusters())
+
+    def test_announced_kill_detects_immediately(self):
+        mb = _mk_membership()
+        mb.kill_cluster(2, announce=True)
+        assert [e.kind for e in mb.events] == ["cluster_dead"]
+        assert not mb.is_alive(2)
+        # the later sweep does not re-detect (survivors keep beating)
+        mb.beat(0, at=1e9)
+        mb.beat(1, at=1e9)
+        assert mb.sweep(now=1e9) == []
+
+
+class TestIdempotence:
+    def test_double_kill_is_noop(self):
+        mb = _mk_membership()
+        assert mb.kill_cluster(0) is True
+        assert mb.kill_cluster(0) is False
+        assert len([e for e in mb.events if e.kind == "cluster_dead"]) == 1
+        assert mb.stats()["cluster_kills"] == 1
+
+    def test_double_revive_is_noop(self):
+        mb = _mk_membership()
+        mb.kill_cluster(0)
+        assert mb.revive_cluster(0) is True
+        assert mb.revive_cluster(0) is False
+        assert mb.stats()["cluster_revives"] == 1
+
+    def test_node_double_kill_and_attrition_death(self):
+        mb = _mk_membership()
+        assert mb.kill_node(1, 0) is True
+        assert mb.kill_node(1, 0) is False
+        assert mb.is_alive(1)                      # one node still up
+        mb.kill_node(1, 1)
+        # last node down takes the cluster with it
+        assert not mb.is_alive(1)
+        kinds = [e.kind for e in mb.events]
+        assert kinds.count("cluster_dead") == 1
+        # first node back re-animates the cluster
+        mb.revive_node(1, 0)
+        assert mb.is_alive(1)
+        assert mb.events[-1].kind == "cluster_alive"
+
+
+class TestRouting:
+    def test_route_is_deterministic_upward_scan(self):
+        mb = _mk_membership()
+        mb.kill_cluster(1)
+        # every request targeting cluster 1 remaps to cluster 2 (upward)
+        for _ in range(3):
+            assert mb.route(1, 0) == (2, 0)
+        mb.kill_cluster(2)
+        assert mb.route(1, 0) == (0, 0)
+        assert mb.route(2, 1) == (0, 1)
+
+    def test_route_dead_node_within_cluster(self):
+        mb = _mk_membership()
+        mb.kill_node(0, 0)
+        assert mb.route(0, 0) == (0, 1)
+        assert mb.route(0, 1) == (0, 1)            # alive target untouched
+
+    def test_route_all_dead_returns_unchanged(self):
+        mb = _mk_membership()
+        for k in range(K):
+            mb.kill_cluster(k)
+        assert mb.route(1, 1) == (1, 1)
+
+    def test_reelection_determinism_under_fixed_seed(self):
+        # two independent runs with the same kill sequence route the same
+        # request stream identically
+        def run():
+            mb = _mk_membership()
+            rng = np.random.default_rng(7)
+            out = []
+            for step in range(20):
+                if step % 5 == 4:
+                    k = int(rng.integers(K))
+                    if mb.is_alive(k) and mb.alive_clusters().sum() > 1:
+                        mb.kill_cluster(k)
+                    elif not mb.cluster_alive[k]:
+                        mb.revive_cluster(k)
+                out.append(mb.route(int(rng.integers(K)),
+                                    int(rng.integers(N))))
+            return out
+
+        assert run() == run()
+
+
+class TestFederationWiring:
+    def test_detected_death_tombstones_and_wipes(self):
+        fed = _mk_fed()
+        mb = _mk_membership()
+        fed.attach_membership(mb)
+        rng = np.random.default_rng(0)
+        keys = _unit(rng, 4)
+        for k in range(K):
+            fed.insert(k, 0, keys, np.zeros((4, 4), np.float32))
+        fed.refresh_digests()
+        assert fed.board.valid[1].any()
+        mb.kill_cluster(1)
+        # digest rows tombstoned, shards wiped, publisher reset
+        assert not fed.board.valid[1].any()
+        assert fed.board.tombstones == 1
+        assert not any(np.asarray(s.valid).any()
+                       for s in fed.clusters[1].states)
+        assert not fed.publishers[1]._valid.any()
+        # survivors untouched
+        assert fed.board.valid[0].any() and fed.board.valid[2].any()
+
+    def test_remote_dead_counted_never_served(self):
+        fed = _mk_fed()
+        mb = _mk_membership()
+        fed.attach_membership(mb)
+        rng = np.random.default_rng(1)
+        keys = _unit(rng, 2)
+        fed.insert(1, 0, keys, np.ones((2, 4), np.float32))
+        fed.refresh_digests()
+        # cluster 1 dies SILENTLY: the board still advertises it
+        mb.kill_cluster(1, announce=False, now=0.0)
+        assert fed.board.valid[1].any()
+        res = fed.lookup(0, 0, keys)               # would remote-hit on 1
+        assert not res.hit.any()                   # refused, fell through
+        assert fed.remote_dead == 2
+        assert fed.tier_counts["remote_dead"] == 2
+        assert fed.stats()["membership"]["alive_clusters"] == K - 1
+
+    def test_revive_is_cold_and_board_cleared(self):
+        fed = _mk_fed()
+        mb = _mk_membership()
+        fed.attach_membership(mb)
+        rng = np.random.default_rng(2)
+        keys = _unit(rng, 2)
+        fed.insert(0, 0, keys, np.ones((2, 4), np.float32))
+        fed.refresh_digests()
+        # undetected crash + revive: the stale pre-crash advert must clear
+        mb.kill_cluster(0, announce=False, now=0.0)
+        mb.revive_cluster(0, now=0.0)
+        assert not fed.board.valid[0].any()
+        assert not any(np.asarray(s.valid).any()
+                       for s in fed.clusters[0].states)
+        res = fed.lookup(1, 0, keys)
+        assert not res.hit.any()                   # nothing phantom-served
+
+    def test_node_kill_loses_entries_not_phantom(self):
+        fed = _mk_fed()
+        mb = _mk_membership()
+        fed.attach_membership(mb)
+        rng = np.random.default_rng(3)
+        keys = _unit(rng, 2)
+        fed.insert(0, 1, keys, np.ones((2, 4), np.float32))
+        assert fed.lookup(0, 1, keys).hit.all()
+        mb.kill_node(0, 1)
+        res = fed.lookup(0, 0, keys)               # peer probe to dead shard
+        assert not res.hit.any()
+
+    def test_region_pin_reelected_on_cluster_death(self):
+        fed = _mk_fed(region_aware=True)
+        mb = _mk_membership()
+        fed.attach_membership(mb)
+        rng = np.random.default_rng(4)
+        key = _unit(rng, 1)
+        # the same entry lives at clusters 0 and 1; both are region-hot
+        for k in (0, 1):
+            fed.insert(k, 0, key, np.ones((1, 4), np.float32))
+            st = fed.clusters[k].states[0]
+            import dataclasses as dc
+            import jax.numpy as jnp
+            fed.clusters[k].states[0] = dc.replace(
+                st, peer_served=jnp.asarray(
+                    np.asarray(st.peer_served) + 2))
+        fed.refresh_digests()
+        # lowest-id hot holder (cluster 0) pins; cluster 1 defers
+        assert np.asarray(fed.clusters[0].states[0].region_pin).any()
+        assert not np.asarray(fed.clusters[1].states[0].region_pin).any()
+        mb.kill_cluster(0)
+        # re-election: the next-hottest advertiser (cluster 1) now pins
+        assert np.asarray(fed.clusters[1].states[0].region_pin).any()
+
+    def test_simulated_failure_reexport(self):
+        # train/elastic.py keeps its legacy import surface
+        from repro.train.elastic import (HeartbeatMonitor as HM,
+                                         SimulatedFailure as SF)
+        assert HM is HeartbeatMonitor and SF is SimulatedFailure
+        err = SimulatedFailure(3)
+        assert err.surviving_data_shards == 3
+
+    def test_events_carry_step_and_metrics(self):
+        mb = _mk_membership()
+        mb.step = 7
+        mb.kill_node(0, 1)
+        ev = mb.events[0]
+        assert isinstance(ev, MembershipEvent)
+        assert (ev.kind, ev.cluster, ev.node, ev.step) == ("node_dead", 0,
+                                                           1, 7)
+        s = mb.stats()
+        assert s["node_kills"] == 1 and s["alive_nodes"] == K * N - 1
+        assert mb.metrics.counter("membership/node_kills").value == 1
+
+
+class TestRegionPinSequence:
+    """Seeded deterministic twin of test_federation_properties.py::
+    test_region_pin_released_on_eviction_and_death (the container may not
+    ship hypothesis) — pin-election invariants under a seeded interleaving
+    of holder deaths, cold revives, and capacity evictions."""
+
+    TAU, CAP, D = 0.8, 4, 24
+
+    def _mk(self):
+        policy = EvictionPolicy("lru", region_aware=True)
+        fed = FederatedEdgeTier(FederationConfig(
+            num_clusters=K, digest_size=self.CAP, digest_interval=1,
+            cluster=ClusterConfig(
+                num_nodes=1, node_capacity=self.CAP, key_dim=self.D,
+                payload_dim=3, threshold=self.TAU, policy=policy,
+                admission="never")))
+        mb = ClusterMembership(K, 1, timeout_s=2.0)
+        fed.attach_membership(mb)
+        return fed, mb
+
+    def _check(self, fed, mb, shared):
+        import dataclasses  # noqa: F401  (kept for symmetry with _hot)
+        holders, pinners = [], []
+        for k, cl in enumerate(fed.clusters):
+            s = cl.states[0]
+            valid = np.asarray(s.valid)
+            pin = np.asarray(s.region_pin)
+            assert not (pin & ~valid).any(), k        # pins on valid rows only
+            if not mb.is_alive(k):
+                assert not pin.any(), k               # dead holds no pins
+                continue
+            match = valid & ((np.asarray(s.keys) @ shared) >= self.TAU)
+            if (match & (np.asarray(s.peer_served) >= 1)).any():
+                holders.append(k)
+            if (pin & match).any():
+                pinners.append(k)
+        # deterministic election: exactly the lowest-id alive hot holder
+        assert pinners == (holders[:1] if holders else []), \
+            (holders, pinners)
+
+    def _hot(self, fed, k, shared):
+        import dataclasses as dc
+        import jax.numpy as jnp
+        fed.insert(k, 0, jnp.asarray(shared[None, :]),
+                   jnp.ones((1, 3), jnp.float32))
+        s = fed.clusters[k].states[0]
+        fed.clusters[k].states[0] = dc.replace(
+            s, peer_served=jnp.asarray(np.asarray(s.peer_served) + 2))
+
+    @pytest.mark.parametrize("seed", range(3))
+    def test_pin_released_on_eviction_and_death(self, seed):
+        import jax.numpy as jnp
+        rng = np.random.default_rng(seed)
+        fed, mb = self._mk()
+        pool = rng.standard_normal((12, self.D)).astype(np.float32)
+        pool /= np.linalg.norm(pool, axis=1, keepdims=True)
+        shared = pool[0]
+        for k in range(K):
+            self._hot(fed, k, shared)
+        fed.refresh_digests()
+        self._check(fed, mb, shared)
+        for _ in range(8):
+            op = rng.choice(["kill", "revive", "evict", "noop"])
+            if op == "kill":
+                alive = [k for k in range(K) if mb.is_alive(k)]
+                if len(alive) > 1:
+                    mb.kill_cluster(alive[0])         # takes the pin holder
+            elif op == "revive":
+                dead = [k for k in range(K) if not mb.cluster_alive[k]]
+                if dead:
+                    mb.revive_cluster(dead[0])        # rejoins COLD
+            elif op == "evict":
+                alive = [k for k in range(K) if mb.is_alive(k)]
+                k = alive[int(rng.integers(len(alive)))]
+                fed.insert(k, 0, jnp.asarray(pool[1:1 + self.CAP]),
+                           jnp.ones((self.CAP, 3), jnp.float32))
+            fed.refresh_digests()
+            self._check(fed, mb, shared)
