@@ -19,7 +19,7 @@ import traceback
 
 
 def main(argv=None) -> None:
-    from benchmarks import (block_reuse, cache_lookup, churn,
+    from benchmarks import (ann_probe, block_reuse, cache_lookup, churn,
                             cooperative_hit_rate, federated_hit_rate,
                             frame_deadline, hit_rate, kv_reuse, load_latency,
                             obs_overhead, recognition_latency, roofline)
@@ -43,6 +43,8 @@ def main(argv=None) -> None:
         ("federated_hit_rate", federated_hit_rate.run_smoke),
         # also writes BENCH_churn.json; nightly asserts the acceptance row
         ("churn", churn.run_smoke),
+        # also writes BENCH_ann_probe.json; nightly asserts ann_accept
+        ("ann_probe", ann_probe.run_smoke),
         ("frame_deadline", frame_deadline.run_smoke),
         # also writes the BENCH_kv_reuse.json perf record to the repo root
         ("kv_reuse", kv_reuse.run_smoke),

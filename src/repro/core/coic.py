@@ -76,6 +76,17 @@ class CoICConfig:
     digest_interval: int = 4         # steps between digest refreshes
     digest_quant: str = "fp32"       # fp32 | int8 digest wire format
     digest_refresh: str = "full"     # full | delta (push-on-delta)
+    # ANN digest probing (kernels/ivf_pq): "auto" swaps the brute board
+    # scan for the two-stage IVF-PQ probe once the board passes
+    # digest_ann_min_rows live rows; "ivfpq" forces it, "off" disables.
+    # Remaining knobs (lists/subspaces/probe width) keep the
+    # FederationConfig defaults, sized for region-scale boards.
+    digest_ann: str = "auto"
+    digest_ann_min_rows: int = 4096
+    digest_ann_lists: int = 64       # coarse inverted lists (codebook
+                                     # trains once a board ships this many)
+    digest_ann_sub: int = 8          # PQ subspaces (key_dim % sub == 0)
+    digest_ann_probe: int = 8        # lists scanned per query
 
 
 @dataclasses.dataclass
@@ -193,7 +204,12 @@ class CoICEngine:
                 digest_size=cfg.digest_size,
                 digest_interval=cfg.digest_interval,
                 digest_quant=cfg.digest_quant,
-                digest_refresh=cfg.digest_refresh, share=cfg.federate),
+                digest_refresh=cfg.digest_refresh, share=cfg.federate,
+                ann_mode=cfg.digest_ann,
+                ann_min_rows=cfg.digest_ann_min_rows,
+                ann_lists=cfg.digest_ann_lists,
+                ann_sub=cfg.digest_ann_sub,
+                ann_probe=cfg.digest_ann_probe),
                 metrics=self.metrics, tracer=self.trace)
             self.edge = self.federation
             self.cache = self.federation.clusters[0].cache

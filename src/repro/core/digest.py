@@ -95,6 +95,10 @@ class DigestUpdate(NamedTuple):
     keys: np.ndarray             # (R, D) f32 (fp32 mode) — else empty
     valid: np.ndarray            # (R,) bool
     bytes: int
+    # IVF list assignment (ANN mode): the publisher's nearest-centroid
+    # choice per shipped row, -1 when no codebook is attached.  Rides the
+    # delta (+2 bytes/row, an int16 list id on the wire).
+    list_ids: np.ndarray = np.zeros((0,), np.int32)
 
 
 class DigestPublisher:
@@ -108,6 +112,25 @@ class DigestPublisher:
         self._scales = np.zeros((M,), np.float32)
         self._keys = np.zeros((M, D), np.float32)    # fp32 mode
         self._valid = np.zeros((M,), bool)
+        self._codebook: Optional["PQCodebook"] = None
+
+    def attach_codebook(self, codebook: "PQCodebook") -> None:
+        """Adopt the region's shared ANN codebook: every later publish also
+        ships each changed row's nearest-centroid IVF list id (+2 bytes/row
+        on the wire), so the board can maintain its packed index without
+        re-running coarse assignment for unchanged rows."""
+        self._codebook = codebook
+
+    def train_codebook(self, keys: np.ndarray, valid: np.ndarray,
+                       ann: "AnnConfig") -> "PQCodebook":
+        """Publisher-side codebook training on this cluster's own digest
+        rows (deterministic under ``ann.seed``); the federation registers
+        the result region-wide so every publisher encodes against the same
+        centroids."""
+        keys = np.asarray(keys, np.float32)[np.asarray(valid, bool)]
+        return train_pq_codebook(keys, n_lists=ann.n_lists,
+                                 n_sub=ann.n_sub, seed=ann.seed,
+                                 iters=ann.train_iters)
 
     def reset(self) -> None:
         """Forget the last-shipped representation (cluster crash/revive:
@@ -158,14 +181,22 @@ class DigestPublisher:
                 rows = np.arange(M, dtype=np.int32)
                 n_bytes = full_bytes
 
+        if self._codebook is not None:
+            ids = assign_lists(self._codebook, keys).astype(np.int32)
+            ids[~valid] = -1
+            list_ids = ids[rows]
+            n_bytes += 2 * int(valid[rows].sum())    # int16 list id / live row
+        else:
+            list_ids = np.full(len(rows), -1, np.int32)
+
         if cfg.quant == "int8":
             self._codes, self._scales = codes, scales
             update = DigestUpdate(rows, codes[rows], scales[rows],
                                   np.zeros((0, D), np.float32), valid[rows],
-                                  n_bytes)
+                                  n_bytes, list_ids)
         else:
             update = DigestUpdate(rows, codes, scales, keys[rows],
-                                  valid[rows], n_bytes)
+                                  valid[rows], n_bytes, list_ids)
         self._keys = keys
         self._valid = valid.copy()
         return update
@@ -185,6 +216,12 @@ class RegionDigestBoard:
         self.scales = np.zeros((K, M), np.float32)
         self.keys = np.zeros((K, M, D), np.float32)
         self.valid = np.zeros((K, M), bool)
+        # ANN sidecar: shipped IVF list assignment per row (-1 = unassigned)
+        # and the lazily-(re)built packed index over the board's live rows
+        self.list_id = np.full((K, M), -1, np.int32)
+        self._ann_codebook: Optional["PQCodebook"] = None
+        self._ann_index: Optional["IVFPQIndex"] = None
+        self._ann_dirty = True
         # the shipped-bytes ledger lives in the metrics registry (a private
         # one when the caller plumbs none); the legacy attribute names are
         # read-only views
@@ -215,9 +252,13 @@ class RegionDigestBoard:
         else:
             self.keys[cluster, rows] = update.keys
         self.valid[cluster, rows] = update.valid
+        if len(update.list_ids):
+            self.list_id[cluster, rows] = update.list_ids
         self._bytes_shipped.inc(update.bytes)
         self._rows_shipped.inc(len(rows))
         self._updates_applied.inc()
+        if len(rows):
+            self._ann_dirty = True
 
     # ------------------------------------------------------------------
     def tombstone(self, cluster: int) -> None:
@@ -230,6 +271,8 @@ class RegionDigestBoard:
         self.scales[cluster] = 0.0
         self.keys[cluster] = 0.0
         self.valid[cluster] = False
+        self.list_id[cluster] = -1
+        self._ann_dirty = True
         self._tombstones.inc()
 
     @property
@@ -247,6 +290,37 @@ class RegionDigestBoard:
                     * self.scales[..., None]).reshape(K, M, D)
         return self.keys
 
+    # ------------------------------------------------------------------
+    @property
+    def ann_codebook(self) -> Optional["PQCodebook"]:
+        return self._ann_codebook
+
+    def adopt_codebook(self, codebook: "PQCodebook") -> None:
+        """Register the region-wide shared ANN codebook (trained by one
+        publisher) and charge its one-time ship onto the byte ledger."""
+        self._ann_codebook = codebook
+        self._bytes_shipped.inc(codebook_bytes(codebook))
+        self._ann_dirty = True
+
+    def ann_index(self, ann: "AnnConfig") -> Optional["IVFPQIndex"]:
+        """The packed IVF-PQ index over the board's live rows, rebuilt
+        lazily after any apply/tombstone.  Rebuilds honor the shipped list
+        assignments (rows without one — shipped before the codebook
+        existed — are assigned board-side) and drop tombstoned rows, so a
+        dead cluster's keys stop attracting ANN candidates the moment its
+        replica is tombstoned."""
+        if self._ann_codebook is None:
+            return None
+        if self._ann_dirty or self._ann_index is None:
+            K, M, D = self.keys.shape
+            owner = np.repeat(np.arange(K, dtype=np.int32), M)
+            self._ann_index = build_ivfpq_index(
+                self._ann_codebook, self.probe_keys().reshape(K * M, D),
+                self.valid.reshape(-1), owner,
+                list_ids=self.list_id.reshape(-1), cap_slack=ann.cap_slack)
+            self._ann_dirty = False
+        return self._ann_index
+
     def stats(self) -> dict:
         return {
             "mode": self.cfg.mode,
@@ -255,7 +329,256 @@ class RegionDigestBoard:
             "rows_shipped": int(self.rows_shipped),
             "updates_applied": int(self.updates_applied),
             "tombstones": int(self.tombstones),
+            "ann_rows": (0 if self._ann_index is None
+                         else int(self._ann_index.slot_valid.sum())),
         }
+
+
+# ---------------------------------------------------------------------------
+# Two-stage IVF-PQ ANN index — the board-scale probe structure
+#
+# Brute probes read ``row_bytes(D)`` per advertised row (D + 4 for int8),
+# which stops paying once a region board advertises millions of keys.  The
+# ANN sidecar quantizes each row to ``n_sub`` one-byte codes against a
+# SHARED residual codebook (beating per-row int8 scales at large D, as the
+# module docstring promised) behind a coarse centroid stage, and
+# ``kernels/ivf_pq`` scans both stages in ONE Pallas dispatch.  Recall loss
+# can only UNDER-report — every candidate still passes the authoritative
+# confirm — the same safety contract as int8 quantization above.
+# ---------------------------------------------------------------------------
+
+ANN_MODES = ("off", "auto", "ivfpq")
+
+
+@dataclasses.dataclass(frozen=True)
+class AnnConfig:
+    """Knobs for the board's IVF-PQ sidecar.
+
+    ``mode="auto"`` keeps the brute int8/fp32 probe while the board is
+    small (scanning a few thousand rows is one cheap matmul) and switches
+    the remote rung to the ANN kernel once the board advertises
+    ``min_rows``+ live rows; ``"ivfpq"`` forces the ANN path; ``"off"``
+    never builds the index."""
+
+    mode: str = "auto"               # off | auto | ivfpq
+    min_rows: int = 4096             # auto: brute below, IVF-PQ at/above
+    n_lists: int = 64                # coarse centroids / inverted lists
+    n_sub: int = 8                   # PQ subspaces (bytes per row)
+    n_probe: int = 8                 # lists scanned per query
+    seed: int = 0                    # k-means seed (training determinism)
+    train_iters: int = 8
+    cap_slack: float = 1.5           # list capacity vs mean occupancy
+
+    def __post_init__(self):
+        assert self.mode in ANN_MODES, self.mode
+        assert 1 <= self.n_probe <= self.n_lists, (self.n_probe,
+                                                   self.n_lists)
+        assert self.n_sub >= 1 and self.cap_slack >= 1.0
+
+
+class PQCodebook(NamedTuple):
+    """The shared two-stage quantizer: coarse centroids (one per inverted
+    list) + a 256-entry residual codebook per subspace."""
+
+    centroids: np.ndarray            # (L, D) f32
+    codebook: np.ndarray             # (S, 256, D // S) f32
+    seed: int
+
+
+def codebook_bytes(cb: PQCodebook) -> int:
+    """One-time wire cost of shipping the shared quantizer region-wide."""
+    return int(cb.centroids.size * 4 + cb.codebook.size * 4)
+
+
+def _nearest_chunked(x: np.ndarray, cent: np.ndarray, tries: int = 1,
+                     chunk: int = 8192) -> np.ndarray:
+    """Per row of ``x``: the ``tries`` nearest rows of ``cent`` by L2,
+    ascending.  Chunked so 1M-row boards never materialize (R, L) at f64."""
+    x = np.asarray(x, np.float32)
+    cent = np.asarray(cent, np.float32)
+    tries = min(tries, cent.shape[0])
+    c2 = (cent * cent).sum(axis=1)
+    out = np.empty((x.shape[0], tries), np.int64)
+    for i in range(0, x.shape[0], chunk):
+        d = c2[None, :] - 2.0 * (x[i:i + chunk] @ cent.T)
+        if tries >= d.shape[1]:
+            part = np.argsort(d, axis=1)[:, :tries]
+        else:
+            part = np.argpartition(d, tries - 1, axis=1)[:, :tries]
+            rows = np.arange(d.shape[0])[:, None]
+            part = part[rows, np.argsort(d[rows, part], axis=1)]
+        out[i:i + chunk] = part
+    return out
+
+
+def _kmeans(x: np.ndarray, k: int, rng: np.random.Generator,
+            iters: int) -> np.ndarray:
+    """Deterministic seeded k-means (empty clusters keep their previous
+    center, so the result is a pure function of (x, seed, iters))."""
+    x = np.asarray(x, np.float32)
+    n = max(1, x.shape[0])
+    if x.shape[0] == 0:
+        return np.zeros((k, x.shape[1]), np.float32)
+    init = rng.choice(n, size=k, replace=n < k)
+    cent = x[init].copy()
+    for _ in range(iters):
+        a = _nearest_chunked(x, cent)[:, 0]
+        sums = np.zeros_like(cent, dtype=np.float64)
+        np.add.at(sums, a, x.astype(np.float64))
+        counts = np.bincount(a, minlength=k)
+        nz = counts > 0
+        cent[nz] = (sums[nz] / counts[nz, None]).astype(np.float32)
+    return cent
+
+
+def train_pq_codebook(keys: np.ndarray, *, n_lists: int, n_sub: int,
+                      seed: int = 0, iters: int = 8,
+                      max_train: int = 65536) -> PQCodebook:
+    """Train the shared quantizer on a cluster's digest rows: coarse
+    k-means over the keys, then 256-entry k-means per subspace of the
+    residuals.  Deterministic under a fixed seed (property-tested); large
+    training sets are subsampled deterministically."""
+    keys = np.asarray(keys, np.float32)
+    n, D = keys.shape
+    assert D % n_sub == 0, (D, n_sub)
+    rng = np.random.default_rng(seed)
+    if n > max_train:
+        keys = keys[rng.choice(n, size=max_train, replace=False)]
+    centroids = _kmeans(keys, n_lists, rng, iters)
+    if len(keys):
+        resid = keys - centroids[_nearest_chunked(keys, centroids)[:, 0]]
+    else:
+        resid = keys
+    dsub = D // n_sub
+    cb = np.zeros((n_sub, 256, dsub), np.float32)
+    for s in range(n_sub):
+        cb[s] = _kmeans(resid[:, s * dsub:(s + 1) * dsub], 256, rng, iters)
+    return PQCodebook(centroids, cb, seed)
+
+
+def assign_lists(cb: PQCodebook, keys: np.ndarray) -> np.ndarray:
+    """(n,) int32 nearest-centroid list id per key — the assignment a
+    publisher ships with its delta refreshes."""
+    return _nearest_chunked(keys, cb.centroids)[:, 0].astype(np.int32)
+
+
+def encode_pq(cb: PQCodebook, residuals: np.ndarray) -> np.ndarray:
+    """(n, S) uint8 per-subspace codes of residual vectors."""
+    n, D = residuals.shape
+    S = cb.codebook.shape[0]
+    dsub = D // S
+    codes = np.empty((n, S), np.uint8)
+    for s in range(S):
+        codes[:, s] = _nearest_chunked(
+            residuals[:, s * dsub:(s + 1) * dsub], cb.codebook[s])[:, 0]
+    return codes
+
+
+class IVFPQIndex(NamedTuple):
+    """The packed probe structure ``kernels/ivf_pq`` scans: board rows
+    bucketed into inverted lists of ``list_cap`` slots.  ``slot_rid`` maps
+    a flat kernel candidate (``list * cap + slot``) back to its global
+    digest row id (cluster * M + row); ``dropped`` counts live rows that
+    found no slot within their ``spill_tries`` nearest lists — dropping is
+    safe (under-report-only), but it is tracked so benchmarks can see it."""
+
+    centroids: np.ndarray            # (L, D) f32
+    cent_valid: np.ndarray           # (L,) bool
+    codes: np.ndarray                # (L, cap, S) uint8
+    slot_valid: np.ndarray           # (L, cap) bool
+    slot_owner: np.ndarray           # (L, cap) int32, -1 = empty
+    slot_rid: np.ndarray             # (L, cap) int32, -1 = empty
+    codebook: np.ndarray             # (S, 256, D // S) f32
+    dropped: int
+
+    @property
+    def list_cap(self) -> int:
+        return self.codes.shape[1]
+
+
+def build_ivfpq_index(cb: PQCodebook, keys: np.ndarray, valid: np.ndarray,
+                      owner: np.ndarray, *, rid: Optional[np.ndarray] = None,
+                      list_ids: Optional[np.ndarray] = None,
+                      cap: Optional[int] = None, cap_slack: float = 1.5,
+                      spill_tries: int = 3) -> IVFPQIndex:
+    """Pack live board rows into the IVF-PQ probe structure.
+
+    Rows go to their shipped list assignment when one exists (else nearest
+    centroid); a full list spills its overflow to the row's next-nearest
+    lists (still findable whenever those lists are probed, so spilling
+    only moves recall, never correctness), and rows that exhaust
+    ``spill_tries`` are dropped — under-report-only, counted in
+    ``dropped``.  Tombstoned rows (``valid`` False) are simply never
+    packed.  PQ codes are encoded against the centroid of the list a row
+    actually landed in."""
+    keys = np.asarray(keys, np.float32)
+    valid = np.asarray(valid, bool)
+    owner = np.asarray(owner, np.int32)
+    R, D = keys.shape
+    rid = (np.arange(R, dtype=np.int32) if rid is None
+           else np.asarray(rid, np.int32))
+    L = cb.centroids.shape[0]
+    S = cb.codebook.shape[0]
+    live = np.nonzero(valid)[0]
+    nlive = len(live)
+    if cap is None:
+        cap = int(np.ceil(cap_slack * max(1.0, nlive / L)))
+        cap = max(8, -(-cap // 8) * 8)
+
+    order = _nearest_chunked(keys[live], cb.centroids,
+                             tries=min(spill_tries, L))
+    first = order[:, 0].copy()
+    if list_ids is not None:
+        shipped = np.asarray(list_ids)[live]
+        use = (shipped >= 0) & (shipped < L)
+        first[use] = shipped[use]
+    choices = np.concatenate([first[:, None], order], axis=1)
+    # attempt 0 is the (possibly shipped) first choice; mask the duplicate
+    # in the nearest-order columns so no attempt retries a rejected list
+    choices[:, 1:][choices[:, 1:] == first[:, None]] = -1
+
+    fill = np.zeros(L, np.int64)
+    placed_list = np.full(nlive, -1, np.int64)
+    placed_slot = np.full(nlive, -1, np.int64)
+    remaining = np.arange(nlive)
+    for t in range(choices.shape[1]):
+        if not len(remaining):
+            break
+        cand = choices[remaining, t]
+        ok_cand = cand >= 0
+        perm = np.argsort(np.where(ok_cand, cand, L), kind="stable")
+        cl = cand[perm]
+        in_play = cl >= 0
+        cl_ip = cl[in_play]
+        starts = np.searchsorted(cl_ip, np.arange(L))
+        pos = np.arange(len(cl_ip)) - starts[cl_ip]
+        slot = fill[cl_ip] + pos
+        fits = slot < cap
+        sel = perm[in_play][fits]
+        placed_list[remaining[sel]] = cl_ip[fits]
+        placed_slot[remaining[sel]] = slot[fits]
+        fill += np.bincount(cl_ip[fits], minlength=L)
+        rejected = np.concatenate([perm[in_play][~fits], perm[~in_play]])
+        remaining = remaining[np.sort(rejected)]
+
+    dropped = int(len(remaining))
+    codes = np.zeros((L, cap, S), np.uint8)
+    slot_valid = np.zeros((L, cap), bool)
+    slot_owner = np.full((L, cap), -1, np.int32)
+    slot_rid = np.full((L, cap), -1, np.int32)
+    got = placed_list >= 0
+    li = placed_list[got]
+    sl = placed_slot[got]
+    rows = live[got]
+    if len(rows):
+        resid = keys[rows] - cb.centroids[li]
+        codes[li, sl] = encode_pq(cb, resid)
+        slot_valid[li, sl] = True
+        slot_owner[li, sl] = owner[rows]
+        slot_rid[li, sl] = rid[rows]
+    return IVFPQIndex(cb.centroids.astype(np.float32), fill > 0, codes,
+                      slot_valid, slot_owner, slot_rid,
+                      cb.codebook.astype(np.float32), dropped)
 
 
 def region_pin_mask(shard_keys: np.ndarray, shard_valid: np.ndarray,

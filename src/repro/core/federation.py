@@ -26,6 +26,15 @@ quantized batched lookup), refreshes optionally ship only the rows that
 changed since the last publish (push-on-delta; exact reconstruction), and
 ``digest_bytes_shipped`` prices the metro -> region link.
 
+At board scale the remote rung swaps the brute digest scan for the packed
+two-stage IVF-PQ sidecar (``kernels/ivf_pq``, selected per probe by live
+advertised rows vs ``ann_min_rows`` or forced with ``ann_mode="ivfpq"``):
+still ONE probe dispatch, but ``ann_sub + 2`` bytes scanned per advertised
+slot instead of a full key row.  PQ-approximated candidates are admitted
+at the looser ``ann_admission`` floor (approximate scores sit below the
+exact cosine) and every candidate still passes the same full-precision
+confirm, so the ANN path inherits the under-report-only contract verbatim.
+
 Staleness/quantization semantics, stated once: digests may UNDER-report
 (an entry admitted since the last refresh — or whose quantized score dips
 below threshold — is a recoverable miss) and may point at dead entries
@@ -61,7 +70,7 @@ import numpy as np
 
 from repro.core.cluster import (ClusterConfig, CooperativeEdgeCluster,
                                 admission_filter, pow2 as _pow2)
-from repro.core.digest import (DigestConfig, DigestPublisher,
+from repro.core.digest import (AnnConfig, DigestConfig, DigestPublisher,
                                RegionDigestBoard, region_pin_mask)
 from repro.core.tiers import (TIER_LOCAL, TIER_MISS, TIER_PEER, TIER_NAMES,
                               TIER_REMOTE, LocalRung, PeerRung, TierLadder,
@@ -70,6 +79,7 @@ from repro.core.tiers import (TIER_LOCAL, TIER_MISS, TIER_PEER, TIER_NAMES,
 from repro.kernels.similarity import similarity_topk_batched
 from repro.obs.metrics import MetricsRegistry
 from repro.parallel.sharding import (federated_digest_lookup,
+                                     federated_digest_lookup_ivfpq,
                                      federated_digest_lookup_quantized)
 
 __all__ = ["TIER_LOCAL", "TIER_PEER", "TIER_REMOTE", "TIER_MISS",
@@ -91,6 +101,26 @@ class FederationConfig:
     # freq_weighted)
     remote_admission: str = "inherit"
     region_hot_min: int = 1          # peer_served floor for region pinning
+    # IVF-PQ ANN sidecar for the digest probe (core/digest.py::AnnConfig):
+    # "auto" keeps the brute int8/fp32 scan while the board is small and
+    # switches to the two-stage kernel at ann_min_rows live rows; "ivfpq"
+    # forces ANN; "off" never builds the index
+    ann_mode: str = "auto"
+    ann_min_rows: int = 4096
+    ann_lists: int = 64              # coarse centroids / inverted lists
+    ann_sub: int = 8                 # PQ subspaces (code bytes per row)
+    ann_probe: int = 8               # lists scanned per query
+    ann_seed: int = 0                # codebook-training determinism
+    ann_train_iters: int = 8
+    ann_cap_slack: float = 1.5
+    # candidate-admission score floor for the ANN probe.  PQ-approximated
+    # scores sit well below the exact cosine (the residual quantizer eats
+    # a chunk of the dot product), so gating ANN candidates at the serve
+    # threshold would starve the confirm; a looser floor is SAFE — every
+    # candidate still passes the authoritative full-precision confirm at
+    # ``cluster.threshold``, so the floor only trades wasted confirms
+    # against recall, never correctness
+    ann_admission: float = 0.5
 
     def __post_init__(self):
         assert self.num_clusters >= 1, self.num_clusters
@@ -98,12 +128,22 @@ class FederationConfig:
         assert self.digest_interval >= 1, self.digest_interval
         assert self.remote_admission in ("inherit", "always", "never",
                                          "second_hit", "freq_weighted")
+        assert -1.0 <= self.ann_admission <= 1.0, self.ann_admission
         self.digest                  # validates quant/refresh
+        self.ann                     # validates the ANN knobs
 
     @property
     def digest(self) -> DigestConfig:
         return DigestConfig(size=self.digest_size, quant=self.digest_quant,
                             refresh=self.digest_refresh)
+
+    @property
+    def ann(self) -> AnnConfig:
+        return AnnConfig(mode=self.ann_mode, min_rows=self.ann_min_rows,
+                         n_lists=self.ann_lists, n_sub=self.ann_sub,
+                         n_probe=self.ann_probe, seed=self.ann_seed,
+                         train_iters=self.ann_train_iters,
+                         cap_slack=self.ann_cap_slack)
 
     @property
     def admission(self) -> str:
@@ -134,19 +174,47 @@ class RemoteDigestRung:
         self.fed = fed
 
     # ------------------------------------------------------------------
+    def _use_ann(self) -> bool:
+        """Probe-format selection by board size: brute stays while the
+        board is small (one cheap matmul), IVF-PQ takes over once the
+        advertised row count crosses ``ann_min_rows`` (or is forced)."""
+        fed = self.fed
+        ann = fed.cfg.ann
+        if ann.mode == "off" or fed.board.ann_codebook is None:
+            return False
+        if ann.mode == "ivfpq":
+            return True
+        return int(fed.board.valid.sum()) >= ann.min_rows
+
     def _digest_probe(self, dq: np.ndarray):
-        """One dispatch over the region digest board, in its wire format."""
+        """One dispatch over the region digest board, in its wire format.
+
+        Returns (idx, score, admit): ``admit`` is the candidate-admission
+        score floor matched to the probe's score scale — the serve
+        threshold for the exact brute probes, the looser
+        ``cfg.ann_admission`` for PQ-approximated ANN scores (safe: the
+        confirm is authoritative either way)."""
         fed = self.fed
         board = fed.board
         impl = fed.cfg.cluster.lookup_impl
+        if self._use_ann():
+            index = board.ann_index(fed.cfg.ann)
+            if index is not None:
+                d_idx, d_score = federated_digest_lookup_ivfpq(
+                    jnp.asarray(dq), index, 1,
+                    n_probe=fed.cfg.ann.n_probe, impl=impl)
+                return d_idx, d_score, fed.cfg.ann_admission
+        threshold = fed.cfg.cluster.threshold
         if board.cfg.quant == "int8":
-            return federated_digest_lookup_quantized(
+            d_idx, d_score = federated_digest_lookup_quantized(
                 jnp.asarray(dq), jnp.asarray(board.codes),
                 jnp.asarray(board.scales), jnp.asarray(board.valid), 1,
                 impl=impl)
-        return federated_digest_lookup(
+            return d_idx, d_score, threshold
+        d_idx, d_score = federated_digest_lookup(
             jnp.asarray(dq), jnp.asarray(board.keys),
             jnp.asarray(board.valid), 1, impl=impl)
+        return d_idx, d_score, threshold
 
     # ------------------------------------------------------------------
     def probe(self, queries: np.ndarray, mask: np.ndarray,
@@ -168,7 +236,7 @@ class RemoteDigestRung:
             for i, (n, b) in enumerate(rows):
                 dq[k, i] = queries[k, n, b]
 
-        d_idx, d_score = self._digest_probe(dq)
+        d_idx, d_score, admit = self._digest_probe(dq)
         dispatches = 1
         d_idx = np.asarray(d_idx)[..., 0]
         d_score = np.asarray(d_score)[..., 0]
@@ -181,7 +249,7 @@ class RemoteDigestRung:
         cand_rows: List[List[Tuple[int, int, int]]] = [[] for _ in range(K)]
         for k, rows in enumerate(rows_of):
             for i, (n, b) in enumerate(rows):
-                if d_score[k, i] >= ccfg.threshold:
+                if d_score[k, i] >= admit:
                     c = int(cand[k, i])
                     if not fed.cluster_is_alive(c):
                         # the advertised cluster died mid-window (board
@@ -449,6 +517,19 @@ class FederatedEdgeTier:
             dig_valid = np.zeros((M,), bool)
             dig_keys[:len(order)] = keys[order]
             dig_valid[:len(order)] = True
+            # first publisher with enough live rows trains the region's
+            # shared ANN codebook (deterministic under ann_seed); the board
+            # adopts it (one-time codebook ship on the byte ledger) and
+            # every publisher — including this one, BEFORE its publish —
+            # starts shipping IVF list assignments with its refreshes
+            if (self.cfg.ann_mode != "off"
+                    and self.board.ann_codebook is None
+                    and int(dig_valid.sum()) >= self.cfg.ann.n_lists):
+                cb = self.publishers[k].train_codebook(
+                    dig_keys, dig_valid, self.cfg.ann)
+                self.board.adopt_codebook(cb)
+                for pub in self.publishers:
+                    pub.attach_codebook(cb)
             self.board.apply(k, self.publishers[k].publish(dig_keys,
                                                            dig_valid))
         self.digest_refreshes += 1

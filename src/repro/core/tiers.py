@@ -16,7 +16,12 @@ module extracts the shared shape:
 
     - rung-level: ``LocalRung`` / ``PeerRung`` (this module) and the
       federation's ``RemoteDigestRung`` — the device-dispatch-bounded rungs
-      composed *inside* ``CooperativeEdgeCluster`` / ``FederatedEdgeTier``;
+      composed *inside* ``CooperativeEdgeCluster`` / ``FederatedEdgeTier``.
+      A rung may swap its probe *format* without changing the walk or the
+      dispatch ledger: ``RemoteDigestRung`` selects brute-fp32, brute-int8
+      or the two-stage IVF-PQ ANN probe by board size (``ann_mode``) —
+      each is still exactly one digest dispatch plus one confirm, so the
+      ladder bounds below are format-independent;
     - org-level: ``CooperativeEdgeCluster``, ``FederatedEdgeTier`` and the
       ``CoICEngine`` cloud fallback are themselves ``CacheTier``s, so an
       engine's whole serving path is one ``TierLadder([edge_org, cloud])``.

@@ -1,0 +1,160 @@
+"""Pallas TPU kernel for the two-stage IVF-PQ digest probe.
+
+ONE dispatch runs both stages.  The grid walks the inverted lists; at the
+first step the full centroid table (pinned in VMEM) is scored against the
+resident query tile and the per-query top-``n_probe`` list ids land in a
+pinned ``sel`` output block.  Every subsequent step streams one list's PQ
+codes through VMEM, and — only when some query actually probed that list
+(``@pl.when`` skips the decode + matmul for cold lists) — reconstructs the
+list's keys as ``centroid + onehot(codes) @ codebook`` on the MXU and merges
+the masked scores into the carried top-k, exactly the
+``similarity/kernel.py::_topk_tile`` scheme.
+
+HBM cost intuition vs the brute int8 board scan: the codes array is
+``n_sub + 2`` bytes/row instead of ``D + 4``, and the compute for unprobed
+lists (all but ``~n_probe`` of them per query tile) is skipped entirely.
+
+Bit-exactness vs ``ref.py``: the coarse matmul is the identical dot_general;
+the PQ decode is a one-hot matmul (copies codebook entries exactly); the
+per-list score matmuls contract over the same D axis; and the iterated-
+argmax selection/merge resolves ties to the first occurrence, i.e.
+``lax.top_k`` order over the flat ``list * cap + slot`` axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _merge_topk(scores, local_idx, carry_s, carry_i, *, k: int):
+    """Merge a pre-masked (Q, cap) score tile into the carried top-k.
+
+    Same iterated masked-argmax as ``similarity/kernel.py::_topk_tile`` but
+    the mask is applied by the caller (IVF validity is per query *and* slot:
+    list selection x slot liveness x owner exclusion), so this just takes
+    the finished scores.  Candidate order [carried | new tile] + argmax's
+    first-occurrence tie break keep ``lax.top_k`` semantics on the flat row.
+    """
+    cand_s = jnp.concatenate([carry_s, scores], axis=1)
+    cand_i = jnp.concatenate([carry_i, local_idx], axis=1)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, cand_s.shape, 1)
+    out_s, out_i = [], []
+    for _ in range(k):
+        arg = jnp.argmax(cand_s, axis=1).astype(jnp.int32)
+        onehot = lanes == arg[:, None]
+        out_s.append(jnp.max(cand_s, axis=1))
+        out_i.append(jnp.sum(jnp.where(onehot, cand_i, 0), axis=1))
+        cand_s = jnp.where(onehot, -jnp.inf, cand_s)
+    return jnp.stack(out_s, axis=1), jnp.stack(out_i, axis=1)
+
+
+def _ivfpq_kernel(q_ref, home_ref, cent_ref, centj_ref, cvalid_ref,
+                  codes_ref, svalid_ref, sowner_ref, cb_ref,
+                  sel_ref, idx_ref, score_ref, *, cap: int, k: int,
+                  n_probe: int):
+    """One grid step = one inverted list (plus the coarse stage at j == 0)."""
+    j = pl.program_id(0)
+    q = q_ref[...].astype(jnp.float32)                   # (Q, D)
+
+    @pl.when(j == 0)
+    def _coarse():
+        coarse = jax.lax.dot_general(
+            q, cent_ref[...].astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (Q, L)
+        coarse = jnp.where(cvalid_ref[...][None, :] != 0, coarse, NEG_INF)
+        lanes = jax.lax.broadcasted_iota(jnp.int32, coarse.shape, 1)
+        picks = []
+        for _ in range(n_probe):
+            arg = jnp.argmax(coarse, axis=1).astype(jnp.int32)
+            picks.append(arg)
+            coarse = jnp.where(lanes == arg[:, None], -jnp.inf, coarse)
+        sel_ref[...] = jnp.stack(picks, axis=1)
+        score_ref[...] = jnp.full_like(score_ref, NEG_INF)
+        # iota init: a candidate-free query yields indices 0..k-1, matching
+        # the oracle's tie-break over an all-NEG_INF row
+        idx_ref[...] = jax.lax.broadcasted_iota(jnp.int32, idx_ref.shape, 1)
+
+    sel = sel_ref[...]                                   # (Q, n_probe)
+
+    @pl.when(jnp.any(sel == j))
+    def _fine():
+        codes = codes_ref[0]                             # (cap, S) int32
+        parts = []
+        for s in range(cb_ref.shape[0]):
+            onehot = (codes[:, s][:, None] == jax.lax.broadcasted_iota(
+                jnp.int32, (cap, 256), 1)).astype(jnp.float32)
+            parts.append(jax.lax.dot_general(
+                onehot, cb_ref[s].astype(jnp.float32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32))     # (cap, D//S)
+        decoded = jnp.concatenate(parts, axis=-1)        # (cap, D)
+        keys_j = centj_ref[0].astype(jnp.float32)[None, :] + decoded
+        scores = jax.lax.dot_general(
+            q, keys_j, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (Q, cap)
+        ok = ((svalid_ref[0][None, :] != 0)
+              & (sowner_ref[0][None, :] != home_ref[...][:, None])
+              & jnp.any(sel == j, axis=1)[:, None])
+        scores = jnp.where(ok, scores, NEG_INF)
+        local_idx = (jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+                     + j * cap)
+        s_out, i_out = _merge_topk(scores, local_idx, score_ref[...],
+                                   idx_ref[...], k=k)
+        score_ref[...] = s_out
+        idx_ref[...] = i_out
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_probe", "interpret"))
+def ivf_pq_probe_kernel(queries: jax.Array, home: jax.Array,
+                        centroids: jax.Array, cent_valid: jax.Array,
+                        codes: jax.Array, slot_valid: jax.Array,
+                        slot_owner: jax.Array, codebook: jax.Array, *,
+                        k: int, n_probe: int, interpret: bool = False):
+    """queries (Q, D) with Q a multiple of 8 (ops.py pads); index arrays as
+    documented in ref.py.  Returns (idx (Q, k) int32 flat slot ids,
+    score (Q, k) f32, sel (Q, n_probe) int32).
+    """
+    Q, D = queries.shape
+    L, cap, S = codes.shape
+    assert Q % 8 == 0, Q
+    assert D % S == 0 and codebook.shape == (S, 256, D // S), (
+        codebook.shape, (S, 256, D // S))
+    assert n_probe <= L, (n_probe, L)
+
+    kernel = functools.partial(_ivfpq_kernel, cap=cap, k=k, n_probe=n_probe)
+    sel, idx, score = pl.pallas_call(
+        kernel,
+        grid=(L,),
+        in_specs=[
+            pl.BlockSpec((Q, D), lambda j: (0, 0)),          # queries
+            pl.BlockSpec((Q,), lambda j: (0,)),              # home
+            pl.BlockSpec((L, D), lambda j: (0, 0)),          # centroids
+            pl.BlockSpec((1, D), lambda j: (j, 0)),          # centroid j
+            pl.BlockSpec((L,), lambda j: (0,)),              # cent_valid
+            pl.BlockSpec((1, cap, S), lambda j: (j, 0, 0)),  # codes
+            pl.BlockSpec((1, cap), lambda j: (j, 0)),        # slot_valid
+            pl.BlockSpec((1, cap), lambda j: (j, 0)),        # slot_owner
+            pl.BlockSpec((S, 256, D // S), lambda j: (0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((Q, n_probe), lambda j: (0, 0)),
+            pl.BlockSpec((Q, k), lambda j: (0, 0)),
+            pl.BlockSpec((Q, k), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, n_probe), jnp.int32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+            jax.ShapeDtypeStruct((Q, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(queries.astype(jnp.float32), home.astype(jnp.int32),
+      centroids.astype(jnp.float32), centroids.astype(jnp.float32),
+      cent_valid.astype(jnp.int8), codes.astype(jnp.int32),
+      slot_valid.astype(jnp.int8), slot_owner.astype(jnp.int32),
+      codebook.astype(jnp.float32))
+    return idx, score, sel

@@ -37,6 +37,17 @@ def _resolve(impl: str) -> str:
         else impl
 
 
+def resolve_impl(impl: str) -> str:
+    """Resolve ``impl="auto"`` to the backend's concrete implementation.
+
+    Every profiled entry point (here, kernels/ivf_pq, parallel/sharding)
+    must call this exactly once in its host-side wrapper and pass the
+    resolved name down, so ``kernel/<op>/<impl>/...`` metrics never read
+    ``auto`` and the jitted inner never re-resolves at trace time.
+    """
+    return _resolve(impl)
+
+
 def similarity_lookup(queries: jax.Array, keys: jax.Array, valid: jax.Array,
                       *, impl: str = "auto", block_q: int = 128,
                       block_c: int = 512):

@@ -210,6 +210,110 @@ class MetricsRegistry:
             json.dump(self.snapshot(), f, indent=2, sort_keys=True)
 
 
+# ---------------------------------------------------------------------------
+# Prometheus text exposition (zero-dep, deterministic)
+# ---------------------------------------------------------------------------
+
+
+def _prom_name(name: str) -> str:
+    """Sanitize a ``/``-path metric name into the Prometheus grammar
+    ``[a-zA-Z_:][a-zA-Z0-9_:]*`` (every illegal byte becomes ``_``)."""
+    out = []
+    for i, ch in enumerate(name):
+        ok = (ch.isascii()
+              and (ch.isalpha() or ch in "_:" or (ch.isdigit() and i > 0)))
+        out.append(ch if ok else "_")
+    return "".join(out)
+
+
+def _prom_num(v) -> str:
+    """Deterministic number rendering: ints verbatim, floats via repr
+    (shortest round-trip — two registries holding the same values always
+    render the same text)."""
+    if isinstance(v, bool):
+        return str(int(v))
+    if isinstance(v, int):
+        return str(v)
+    return repr(float(v))
+
+
+def export_prometheus(metrics: MetricsRegistry,
+                      path: Optional[str] = None) -> str:
+    """Render the registry in the Prometheus text exposition format.
+
+    Counters/gauges map 1:1.  Histograms render as native Prometheus
+    histograms with CUMULATIVE ``le`` buckets reconstructed from the
+    log-spaced store: each occupied bucket ``b`` contributes its upper
+    edge ``growth**(b+1)``, the underflow bucket (zeros/negatives) lands
+    under ``le="0"``, and ``+Inf`` carries the total count — plus the
+    standard ``_sum``/``_count`` series.  Output is sorted by metric name
+    and numerically deterministic, which is what makes a golden-file test
+    possible (tests/test_obs.py).  ``path`` additionally writes the text.
+    """
+    lines: list = []
+    for name in sorted(metrics.names()):
+        m = metrics.get(name)
+        pname = _prom_name(name)
+        if isinstance(m, Histogram):
+            lines.append(f"# TYPE {pname} histogram")
+            cum = 0
+            if m._under:
+                cum += m._under
+                lines.append(f'{pname}_bucket{{le="0"}} {cum}')
+            for b in sorted(m._buckets):
+                cum += m._buckets[b]
+                edge = m._growth ** (b + 1)
+                lines.append(f'{pname}_bucket{{le="{_prom_num(edge)}"}} '
+                             f'{cum}')
+            lines.append(f'{pname}_bucket{{le="+Inf"}} {m.count}')
+            lines.append(f"{pname}_sum {_prom_num(m.sum)}")
+            lines.append(f"{pname}_count {m.count}")
+        elif isinstance(m, Gauge):
+            lines.append(f"# TYPE {pname} gauge")
+            lines.append(f"{pname} {_prom_num(m.value)}")
+        else:
+            lines.append(f"# TYPE {pname} counter")
+            lines.append(f"{pname} {_prom_num(m.value)}")
+    text = "\n".join(lines) + "\n"
+    if path is not None:
+        with open(path, "w") as f:
+            f.write(text)
+    return text
+
+
+def snapshot_to_prometheus(snapshot: Mapping,
+                           path: Optional[str] = None) -> str:
+    """Render a ``MetricsRegistry.snapshot()`` dict (e.g. a benchmark
+    run's ``--metrics-out`` JSON, loaded back) as Prometheus text.
+
+    A snapshot has already collapsed histogram buckets into percentiles,
+    so histogram entries render as Prometheus SUMMARIES (``quantile``
+    labels + ``_sum``/``_count``) rather than ``le`` buckets; scalars
+    render as gauges (a snapshot does not record counter-vs-gauge kind).
+    ``scripts/export_metrics.py`` is the CLI over this.
+    """
+    lines: list = []
+    for name in sorted(snapshot):
+        v = snapshot[name]
+        pname = _prom_name(name)
+        if isinstance(v, Mapping):                 # histogram snapshot
+            lines.append(f"# TYPE {pname} summary")
+            for q, key in (("0.5", "p50"), ("0.95", "p95"),
+                           ("0.99", "p99")):
+                lines.append(f'{pname}{{quantile="{q}"}} '
+                             f'{_prom_num(v[key])}')
+            lines.append(f"{pname}_sum {_prom_num(v['sum'])}")
+            lines.append(f"{pname}_count {_prom_num(v['count'])}")
+        else:
+            lines.append(f"# TYPE {pname} gauge")
+            lines.append(f"{pname} {_prom_num(v)}")
+    text = "\n".join(lines) + "\n"
+    if path is not None:
+        with open(path, "w") as f:
+            f.write(text)
+    return text
+
+
 class CounterDict(Mapping):
     """A dict-shaped view over registry counters, so call sites written as
     ``self.dispatches["decode"] += 1`` keep working verbatim while the

@@ -125,6 +125,21 @@ def digest_probe_bytes(n_queries: int, num_clusters: int, digest_size: int,
                             key_bytes_per_row=row_bytes)
 
 
+def ivf_pq_probe_bytes(n_queries: int, n_lists: int, list_cap: int,
+                       n_sub: int, dim: int) -> float:
+    """Modeled HBM traffic of one two-stage IVF-PQ board probe: the query
+    tile, the pinned coarse table (centroids + validity byte per list), the
+    shared residual codebook, and one streaming read of the packed code
+    lists in their storage format — ``n_sub`` uint8 codes plus a validity
+    and an owner byte per slot (vs ``D + 4`` for a brute int8 row; the
+    4x-fewer-scanned-bytes acceptance in BENCH_ann_probe.json compares
+    exactly these two models)."""
+    return (n_queries * dim * 4.0                      # query tile
+            + n_lists * (dim * 4.0 + 1.0)              # centroids + valid
+            + n_sub * 256 * (dim // n_sub) * 4.0       # shared codebook
+            + n_lists * list_cap * (n_sub + 2.0))      # codes+valid+owner
+
+
 def attention_bytes(kv_len, *, page_size: int, max_len: int, kv_heads: int,
                     head_dim: int, dtype_bytes: int, impl: str) -> float:
     """Convenience re-export of the paged-attention byte model so profile

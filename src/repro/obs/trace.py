@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import json
 import time
+from collections import deque
 from typing import Dict, List, Optional, Tuple
 
 PID_ENGINE = 1
@@ -118,21 +119,47 @@ class _Span:
 class Tracer(NullTracer):
     """The recording tracer.  Events accumulate host-side in a list of
     dicts (the Chrome trace-event wire shape, ready to dump); the only
-    per-span cost is two appends and a ``perf_counter`` read."""
+    per-span cost is two appends and a ``perf_counter`` read.
+
+    ``max_steps=N`` bounds host memory on long runs by keeping a RING of
+    the last N engine-step segments: a segment opens at each top-level
+    ``step`` begin on the engine track and carries EVERYTHING emitted
+    until the next one (nested engine spans, request markers, and the
+    modeled request timelines retired during that step), so evicting the
+    oldest segment drops whole steps — matched B/E pairs and complete
+    request/term groups together — and a ring-truncated export still
+    passes every ``scripts/check_trace.py`` structural invariant.  Track
+    metadata (``M`` events) is kept outside the ring.  The default
+    ``max_steps=None`` keeps every event (the original behavior)."""
 
     enabled = True
 
-    def __init__(self):
+    def __init__(self, max_steps: Optional[int] = None):
+        assert max_steps is None or max_steps >= 1, max_steps
         self._epoch = time.perf_counter()
-        self.events: List[dict] = []
+        self._meta: List[dict] = []
+        # ring of per-step event segments; segment [-1] is always current.
+        # max_steps=None -> one unbounded segment, never rotated.
+        self._segments: deque = deque([[]], maxlen=max_steps)
+        self._max_steps = max_steps
         # open-span name stacks per (pid, tid) — lets export() close any
         # spans left open (a crash mid-step must still produce a valid
         # trace) and check_trace verify matched begin/end
         self._open: Dict[Tuple[int, int], List[str]] = {}
         for pid, name in _TRACK_NAMES.items():
-            self.events.append({"ph": "M", "name": "process_name",
-                                "pid": pid, "tid": 0,
-                                "args": {"name": name}})
+            self._meta.append({"ph": "M", "name": "process_name",
+                               "pid": pid, "tid": 0,
+                               "args": {"name": name}})
+
+    @property
+    def events(self) -> List[dict]:
+        out = list(self._meta)
+        for seg in self._segments:
+            out.extend(seg)
+        return out
+
+    def _emit(self, ev: dict) -> None:
+        self._segments[-1].append(ev)
 
     # ------------------------------------------------------------------
     def now_us(self) -> float:
@@ -140,11 +167,17 @@ class Tracer(NullTracer):
 
     def begin(self, name, *, cat="engine", pid=PID_ENGINE, tid=0, ts=None,
               args=None):
+        if (self._max_steps is not None and name == "step"
+                and pid == PID_ENGINE
+                and not self._open.get((pid, tid))):
+            # new top-level engine step: rotate the ring (deque eviction
+            # drops the oldest whole segment when full)
+            self._segments.append([])
         ev = {"ph": "B", "name": name, "cat": cat, "pid": pid, "tid": tid,
               "ts": self.now_us() if ts is None else ts}
         if args:
             ev["args"] = args
-        self.events.append(ev)
+        self._emit(ev)
         self._open.setdefault((pid, tid), []).append(name)
 
     def end(self, *, pid=PID_ENGINE, tid=0, ts=None):
@@ -153,8 +186,8 @@ class Tracer(NullTracer):
             raise RuntimeError(f"Tracer.end with no open span on "
                                f"(pid={pid}, tid={tid})")
         stack.pop()
-        self.events.append({"ph": "E", "pid": pid, "tid": tid,
-                            "ts": self.now_us() if ts is None else ts})
+        self._emit({"ph": "E", "pid": pid, "tid": tid,
+                    "ts": self.now_us() if ts is None else ts})
 
     def span(self, name, *, cat="engine", pid=PID_ENGINE, tid=0, args=None):
         return _Span(self, name, cat, pid, tid, args)
@@ -165,7 +198,7 @@ class Tracer(NullTracer):
               "ts": float(ts_us), "dur": float(dur_us)}
         if args:
             ev["args"] = args
-        self.events.append(ev)
+        self._emit(ev)
 
     def instant(self, name, *, cat="engine", pid=PID_ENGINE, tid=0,
                 ts=None, args=None):
@@ -173,7 +206,7 @@ class Tracer(NullTracer):
               "ts": self.now_us() if ts is None else ts, "s": "t"}
         if args:
             ev["args"] = args
-        self.events.append(ev)
+        self._emit(ev)
 
     # ------------------------------------------------------------------
     def request_timeline(self, rid: int, ts_ms: float, tier: str,

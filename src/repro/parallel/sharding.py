@@ -48,6 +48,12 @@ tier gets, which is what keeps the engine's per-step ladder bound constant:
   refresh is merely invisible until the next one.  Quantization obeys the
   same contract: the confirm runs at full precision, so int8 rounding can
   only demote a near-threshold candidate to a recoverable miss.
+* ``federated_digest_lookup_ivfpq`` — the same probe over the board's
+  packed two-stage IVF-PQ index (``kernels/ivf_pq``): still ONE dispatch,
+  but the scan reads ``n_sub + 2`` bytes per advertised slot instead of a
+  full key row, which is what lets a region board advertise 10M+ keys.
+  PQ approximation error inherits the int8 contract above: candidates are
+  hints, the confirm is authoritative, recall loss only under-reports.
 * ``sharded_topk_lookup`` — the same peer-rung collective as a
   ``shard_map`` over a real ``cache`` mesh axis: each device computes its
   local top-k and one all-gather of (k idx, k score) per shard replaces
@@ -63,6 +69,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.obs.profile import (active, digest_probe_bytes, ivf_pq_probe_bytes,
+                               record_op)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -272,7 +281,6 @@ def cluster_topk_lookup(queries: jax.Array, keys: jax.Array,
     return _merge_shard_topk(local_idx + offsets, local_score, min(k, n * c))
 
 
-@partial(jax.jit, static_argnames=("k", "impl"))
 def federated_digest_lookup(queries: jax.Array, digests: jax.Array,
                             valid: jax.Array, k: int = 1, *,
                             impl: str = "auto"):
@@ -299,7 +307,26 @@ def federated_digest_lookup(queries: jax.Array, digests: jax.Array,
     rungs (Pallas on TPU), so digests add no new kernel surface.  The K^2*M
     broadcast is digest-sized, not cache-sized: that is the point of
     probing digests instead of shards.
+
+    Host wrapper: ``impl="auto"`` resolves exactly ONCE here (never inside
+    the trace) and, when a profiler is installed, the dispatch records
+    under ``kernel/federated_digest_lookup/<resolved-impl>/...`` with the
+    ``digest_probe_bytes`` wire model.
     """
+    from repro.kernels.similarity.ops import resolve_impl
+
+    impl = resolve_impl(impl)
+    fn = partial(_federated_digest_lookup, k=k, impl=impl)
+    if active() is None:
+        return fn(queries, digests, valid)
+    K, M, D = (int(s) for s in digests.shape)
+    return record_op(
+        "federated_digest_lookup", impl, fn, (queries, digests, valid),
+        digest_probe_bytes(int(queries.shape[1]), K, M, D, "fp32"))
+
+
+@partial(jax.jit, static_argnames=("k", "impl"))
+def _federated_digest_lookup(queries, digests, valid, *, k, impl):
     from repro.kernels.similarity import similarity_topk_batched
 
     K, M, D = digests.shape
@@ -310,7 +337,6 @@ def federated_digest_lookup(queries: jax.Array, digests: jax.Array,
     return similarity_topk_batched(queries, pooled, valid_h, k, impl=impl)
 
 
-@partial(jax.jit, static_argnames=("k", "impl"))
 def federated_digest_lookup_quantized(queries: jax.Array, codes: jax.Array,
                                       scales: jax.Array, valid: jax.Array,
                                       k: int = 1, *, impl: str = "auto"):
@@ -320,10 +346,81 @@ def federated_digest_lookup_quantized(queries: jax.Array, codes: jax.Array,
     per-row scales — exactly the wire format the region received
     (``core/digest.py::DigestPublisher``), kept int8-resident and
     dequantized inside this one jitted dispatch.  queries/valid/k as in
-    ``federated_digest_lookup``; same home-cluster masking, same kernel.
+    ``federated_digest_lookup``; same home-cluster masking, same kernel,
+    same resolve-once + ``record_op`` host wrapper (modeled with the int8
+    ``D + 4`` row).
     """
+    from repro.kernels.similarity.ops import resolve_impl
+
+    impl = resolve_impl(impl)
+    fn = partial(_federated_digest_lookup_quantized, k=k, impl=impl)
+    if active() is None:
+        return fn(queries, codes, scales, valid)
+    K, M, D = (int(s) for s in codes.shape)
+    return record_op(
+        "federated_digest_lookup_quantized", impl, fn,
+        (queries, codes, scales, valid),
+        digest_probe_bytes(int(queries.shape[1]), K, M, D, "int8"))
+
+
+@partial(jax.jit, static_argnames=("k", "impl"))
+def _federated_digest_lookup_quantized(queries, codes, scales, valid, *, k,
+                                       impl):
     digests = codes.astype(jnp.float32) * scales[..., None]
-    return federated_digest_lookup(queries, digests, valid, k, impl=impl)
+    return _federated_digest_lookup(queries, digests, valid, k=k, impl=impl)
+
+
+def federated_digest_lookup_ivfpq(queries: jax.Array, index, k: int = 1, *,
+                                  n_probe: int, impl: str = "auto"):
+    """``federated_digest_lookup`` over the board's packed IVF-PQ sidecar —
+    the remote rung's probe once a region board outgrows brute scanning.
+
+    queries: (K, B, D) as in ``federated_digest_lookup``; ``index`` is a
+    ``core/digest.py::IVFPQIndex`` (host arrays).  ONE ``ivf_pq_probe``
+    kernel dispatch covers all K home batches: the home-cluster exclusion
+    runs inside the kernel (``slot_owner != home``), replacing the pooled
+    broadcast masking of the brute probes, and the two-stage scan reads
+    ``n_sub + 2`` bytes/slot instead of a full digest row.
+
+    Returns (idx (K, B, k) int32 GLOBAL digest row ids in [0, K*M) — the
+    kernel's flat slot winners mapped through ``slot_rid`` — and score
+    (K, B, k) f32 of the PQ-APPROXIMATED similarity).  Candidates from
+    empty slots carry id -1 and NEG_INF scores, so any caller-side score
+    threshold removes them.  Approximation is under-report-safe: every
+    candidate still passes the caller's authoritative confirm, so a PQ
+    error can only demote a hit to a recoverable miss, never fabricate.
+    """
+    from repro.kernels.similarity.ops import resolve_impl
+
+    impl = resolve_impl(impl)
+    fn = partial(_federated_digest_lookup_ivfpq, k=k, n_probe=n_probe,
+                 impl=impl)
+    args = (queries, jnp.asarray(index.centroids),
+            jnp.asarray(index.cent_valid), jnp.asarray(index.codes),
+            jnp.asarray(index.slot_valid), jnp.asarray(index.slot_owner),
+            jnp.asarray(index.codebook), jnp.asarray(index.slot_rid))
+    if active() is None:
+        return fn(*args)
+    K, B, D = (int(s) for s in queries.shape)
+    L, cap, S = (int(s) for s in index.codes.shape)
+    return record_op(
+        "federated_digest_lookup_ivfpq", impl, fn, args,
+        ivf_pq_probe_bytes(K * B, L, cap, S, D))
+
+
+@partial(jax.jit, static_argnames=("k", "n_probe", "impl"))
+def _federated_digest_lookup_ivfpq(queries, centroids, cent_valid, codes,
+                                   slot_valid, slot_owner, codebook,
+                                   slot_rid, *, k, n_probe, impl):
+    from repro.kernels.ivf_pq.ops import _ivf_pq_probe
+
+    K, B, D = queries.shape
+    home = jnp.repeat(jnp.arange(K, dtype=jnp.int32), B)
+    idx, score = _ivf_pq_probe(queries.reshape(K * B, D), home, centroids,
+                               cent_valid, codes, slot_valid, slot_owner,
+                               codebook, k=k, n_probe=n_probe, impl=impl)
+    rid = jnp.take(slot_rid.reshape(-1), idx)            # flat slot -> rid
+    return rid.reshape(K, B, k), score.reshape(K, B, k)
 
 
 def sharded_topk_lookup(queries: jax.Array, keys: jax.Array,

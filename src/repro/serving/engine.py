@@ -388,7 +388,12 @@ class ServingEngine:
                     digest_size=c.digest_size,
                     digest_interval=c.digest_interval,
                     digest_quant=c.digest_quant,
-                    digest_refresh=c.digest_refresh, share=c.federate),
+                    digest_refresh=c.digest_refresh, share=c.federate,
+                    ann_mode=c.digest_ann,
+                    ann_min_rows=c.digest_ann_min_rows,
+                    ann_lists=c.digest_ann_lists,
+                    ann_sub=c.digest_ann_sub,
+                    ann_probe=c.digest_ann_probe),
                     metrics=self.metrics, tracer=self.trace)
                 self.sem_org = self.sem_fed
                 self.semantic = self.sem_fed.clusters[0].cache

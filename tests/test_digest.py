@@ -28,14 +28,22 @@ def _unit(rng, n, d):
 
 def _fed(clusters=2, nodes=1, cap=8, d=32, p=4, tau=0.9, digest_size=None,
          digest_interval=1, quant="fp32", refresh="full",
-         admission="never", policy=EvictionPolicy("lru")):
+         admission="never", policy=EvictionPolicy("lru"), **extra):
+    """``extra`` passes straight through to FederationConfig (ann_* knobs)."""
     return FederatedEdgeTier(FederationConfig(
         num_clusters=clusters, digest_size=digest_size or nodes * cap,
         digest_interval=digest_interval, digest_quant=quant,
         digest_refresh=refresh,
         cluster=ClusterConfig(num_nodes=nodes, node_capacity=cap, key_dim=d,
                               payload_dim=p, threshold=tau, policy=policy,
-                              admission=admission)))
+                              admission=admission), **extra))
+
+
+# ANN knobs small enough that a few dozen board rows train a codebook on the
+# first refresh (trains once dig_valid >= ann_lists); admission 0.0 admits
+# every real candidate — safe because the fp32 confirm stays authoritative.
+_ANN = dict(ann_mode="ivfpq", ann_min_rows=1, ann_lists=4, ann_sub=4,
+            ann_probe=4, ann_admission=0.0)
 
 
 # ---------------------------------------------------------------------------
@@ -433,3 +441,123 @@ def test_tombstone_then_revive_reconstructs_bit_identically(quant, refresh,
             np.testing.assert_array_equal(board.keys, fresh_board.keys)
         np.testing.assert_array_equal(board.probe_keys(),
                                       fresh_board.probe_keys())
+
+
+# ---------------------------------------------------------------------------
+# IVF-PQ ANN rung: deterministic training, under-report-only serving,
+# tombstone-aware index rebuilds
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_codebook_training_bit_deterministic(seed):
+    """Same rows + same seed must reproduce the coarse quantizer, the
+    residual codebook, the list assignment AND the PQ codes bit-for-bit —
+    every publisher that retrains from the same advertised state ships an
+    identical sidecar."""
+    from repro.core.digest import (assign_lists, encode_pq,
+                                  train_pq_codebook)
+
+    rng = np.random.default_rng(seed)
+    keys = _unit(rng, 96, 32)
+    a = train_pq_codebook(keys, n_lists=8, n_sub=4, seed=seed, iters=8)
+    b = train_pq_codebook(keys, n_lists=8, n_sub=4, seed=seed, iters=8)
+    np.testing.assert_array_equal(a.centroids, b.centroids)
+    np.testing.assert_array_equal(a.codebook, b.codebook)
+    la, lb = assign_lists(a, keys), assign_lists(b, keys)
+    np.testing.assert_array_equal(la, lb)
+    resid = keys - a.centroids[la]
+    np.testing.assert_array_equal(encode_pq(a, resid), encode_pq(b, resid))
+    c = train_pq_codebook(keys, n_lists=8, n_sub=4, seed=seed + 101, iters=8)
+    assert not np.array_equal(a.centroids, c.centroids)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_ivfpq_remote_hits_subset_of_brute_fp32(seed):
+    """Same shard contents: every request the IVF-PQ-probing tier serves
+    remotely is also served remotely by the brute fp32-digest tier with the
+    same payload; ANN demotions land on the cloud path (TIER_MISS) — the
+    PQ approximation can only under-report, never fabricate (the
+    full-precision confirm gates both)."""
+    rng = np.random.default_rng(seed)
+    K, N, cap, d, p, tau = 3, 2, 8, 32, 4, 0.85
+    pool = _unit(rng, 24, d)
+    pay = rng.standard_normal((24, p)).astype(np.float32)
+    feds = {"fp32": _fed(clusters=K, nodes=N, cap=cap, d=d, p=p, tau=tau),
+            "ann": _fed(clusters=K, nodes=N, cap=cap, d=d, p=p, tau=tau,
+                        ann_seed=seed, **_ANN)}
+    for k in range(K):
+        for n in range(N):
+            ids = rng.integers(0, 24, size=cap // 2)
+            for fed in feds.values():
+                fed.insert(k, n, jnp.asarray(pool[ids]),
+                           jnp.asarray(pay[ids]))
+
+    for _ in range(6):
+        B = int(rng.integers(1, 5))
+        qids = rng.integers(0, 24, size=(K, N, B))
+        queries = pool[qids]
+        res = {q: fed.lookup_grouped(queries) for q, fed in feds.items()}
+        ra, r32 = res["ann"], res["fp32"]
+        remote_a = ra.tier == TIER_REMOTE
+        remote32 = r32.tier == TIER_REMOTE
+        assert (remote32 | ~remote_a).all(), (ra.tier, r32.tier)
+        if remote_a.any():
+            np.testing.assert_allclose(ra.value[remote_a],
+                                       pay[qids[remote_a]], rtol=1e-5)
+        demoted = remote32 & ~remote_a
+        if demoted.any():
+            assert (ra.tier[demoted] == TIER_MISS).all()
+            assert (ra.value[demoted] == 0).all()
+
+    ann = feds["ann"]
+    # the rung really ran through the index, not a silent brute fallback
+    assert ann.board.ann_codebook is not None
+    assert ann.board.stats()["ann_rows"] > 0
+    # one coarse+fine dispatch rides inside the usual ladder budget
+    assert ann.max_ladder_dispatches <= 4
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_ivfpq_tombstone_interleaving_stays_subset(seed):
+    """Tombstoning a cluster mid-epoch (stale digests, interval > rounds)
+    must drop its rows from the rebuilt ANN index and keep the subset
+    property: neither tier may serve the dead cluster's content, and the
+    ANN tier stays a subset of brute fp32 on the survivors."""
+    rng = np.random.default_rng(seed)
+    K, N, cap, d, p, tau = 3, 2, 8, 32, 4, 0.85
+    pool = _unit(rng, 24, d)
+    pay = rng.standard_normal((24, p)).astype(np.float32)
+    mk = lambda **kw: _fed(clusters=K, nodes=N, cap=cap, d=d, p=p, tau=tau,
+                           digest_interval=50, **kw)
+    feds = {"fp32": mk(), "ann": mk(ann_seed=seed, **_ANN)}
+    # cluster k holds pool rows [8k, 8k+8) — disjoint, so dead content is
+    # only reachable through the dead cluster
+    for k in range(K):
+        ids = np.arange(8 * k, 8 * k + 8)
+        for n in range(N):
+            for fed in feds.values():
+                fed.insert(k, n, jnp.asarray(pool[ids[n::N]]),
+                           jnp.asarray(pay[ids[n::N]]))
+    for fed in feds.values():
+        fed.lookup_grouped(pool[rng.integers(0, 24, size=(K, N, 1))])
+
+    dead = int(rng.integers(0, K))
+    for fed in feds.values():
+        fed.board.tombstone(dead)
+    idx = feds["ann"].board.ann_index(feds["ann"].cfg.ann)
+    live_owners = np.asarray(idx.slot_owner)[np.asarray(idx.slot_valid)]
+    assert (live_owners != dead).all()          # rebuild dropped dead rows
+    assert feds["ann"].board.stats()["ann_rows"] == int(
+        np.asarray(idx.slot_valid).sum())
+
+    home = (dead + 1) % K
+    qids = np.tile(np.arange(8 * dead, 8 * dead + 2), (K, N, 1)) % 24
+    res = {q: fed.lookup_grouped(pool[qids]) for q, fed in feds.items()}
+    # dead content: no tier may serve it remotely any more
+    for r in res.values():
+        assert not (r.tier[home] == TIER_REMOTE).any()
+    # survivors: subset property intact after the interleaving
+    remote_a = res["ann"].tier == TIER_REMOTE
+    remote32 = res["fp32"].tier == TIER_REMOTE
+    assert (remote32 | ~remote_a).all()

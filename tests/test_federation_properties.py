@@ -340,3 +340,99 @@ def test_region_pin_released_on_eviction_and_death(data):
                        jnp.ones((cap, 3), jnp.float32))
         fed.refresh_digests()
         check()
+
+
+# ---------------------------------------------------------------------------
+# Contract (5): IVF-PQ ANN probing only under-reports — for ANY codebook
+# seed, fill pattern and tombstone interleaving, the confirmed ANN hits are
+# a hit-for-hit subset of brute fp32 digest probing (the full-precision
+# confirm gates both; the PQ approximation can only demote a candidate to a
+# recoverable miss, never fabricate a payload).  Seeded deterministic
+# versions run in test_digest.py; these widen the input space.
+# ---------------------------------------------------------------------------
+
+
+def _mk_ann(K, N, cap, d, p, *, interval, n_lists, n_sub, n_probe, seed):
+    return FederatedEdgeTier(FederationConfig(
+        num_clusters=K, digest_size=N * cap, digest_interval=interval,
+        ann_mode="ivfpq", ann_min_rows=1, ann_lists=n_lists, ann_sub=n_sub,
+        ann_probe=n_probe, ann_seed=seed, ann_admission=0.0,
+        cluster=ClusterConfig(num_nodes=N, node_capacity=cap, key_dim=d,
+                              payload_dim=p, threshold=TAU,
+                              admission="never")))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.data())
+def test_ivfpq_probing_subset_of_fp32(data):
+    """Contract (5) across drawn codebook seeds, fills, query rounds and
+    tombstone interleavings."""
+    K = data.draw(st.integers(2, 3), label="clusters")
+    N = data.draw(st.integers(1, 2), label="nodes")
+    cap = data.draw(st.integers(2, 6), label="capacity")
+    d = 24
+    interval = data.draw(st.sampled_from([1, 7]), label="digest_interval")
+    n_lists = data.draw(st.sampled_from([2, 4]), label="ann_lists")
+    n_sub = data.draw(st.sampled_from([2, 3, 4]), label="ann_sub")
+    n_probe = min(n_lists, data.draw(st.integers(1, 4), label="ann_probe"))
+    cb_seed = data.draw(st.integers(0, 2**31 - 1), label="codebook_seed")
+    pool = _pool(data.draw(st.integers(0, 9), label="pool_seed"), 12, d)
+    pay = np.arange(12, dtype=np.float32)[:, None].repeat(3, axis=1)
+    feds = {"fp32": _mk(K, N, cap, d, 3, N * cap, interval, "never"),
+            "ann": _mk_ann(K, N, cap, d, 3, interval=interval,
+                           n_lists=n_lists, n_sub=n_sub, n_probe=n_probe,
+                           seed=cb_seed)}
+    for k in range(K):
+        for n in range(N):
+            ids = np.array(data.draw(st.lists(
+                st.integers(0, 11), min_size=1, max_size=cap),
+                label=f"fill_{k}_{n}"))
+            for fed in feds.values():
+                fed.insert(k, n, jnp.asarray(pool[ids]),
+                           jnp.asarray(pay[ids]))
+    for r in range(data.draw(st.integers(1, 3), label="rounds")):
+        # tombstone interleaving: kill the same cluster's board rows on
+        # BOTH tiers (with interval>1 the hole persists across rounds; with
+        # interval=1 the next refresh revives it — both must stay subset)
+        if data.draw(st.booleans(), label=f"tombstone_{r}"):
+            dead = data.draw(st.integers(0, K - 1), label=f"dead_{r}")
+            for fed in feds.values():
+                fed.board.tombstone(dead)
+        qids = np.array(data.draw(st.lists(
+            st.integers(0, 11), min_size=K * N, max_size=K * N),
+            label=f"qids_{r}")).reshape(K, N, 1)
+        queries = pool[qids]
+        res = {q: fed.lookup_grouped(queries) for q, fed in feds.items()}
+        remote_a = res["ann"].tier == TIER_REMOTE
+        remote32 = res["fp32"].tier == TIER_REMOTE
+        assert (remote32 | ~remote_a).all()
+        if remote_a.any():
+            np.testing.assert_allclose(res["ann"].value[remote_a],
+                                       pay[qids[remote_a]], rtol=1e-5)
+        demoted = remote32 & ~remote_a
+        if demoted.any():
+            assert (res["ann"].tier[demoted] == TIER_MISS).all()
+            assert (res["ann"].value[demoted] == 0).all()
+    assert feds["ann"].max_ladder_dispatches <= 4
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_lists=st.sampled_from([2, 4, 8]),
+       n_sub=st.sampled_from([2, 3, 4]), rows=st.integers(16, 64))
+def test_codebook_training_deterministic(seed, n_lists, n_sub, rows):
+    """Training is a pure function of (rows, knobs, seed): two runs agree
+    bit-for-bit on centroids, codebook and the derived assignments."""
+    from repro.core.digest import (assign_lists, encode_pq,
+                                  train_pq_codebook)
+
+    keys = _pool(seed % 1000, rows, 24)
+    a = train_pq_codebook(keys, n_lists=n_lists, n_sub=n_sub, seed=seed,
+                          iters=6)
+    b = train_pq_codebook(keys, n_lists=n_lists, n_sub=n_sub, seed=seed,
+                          iters=6)
+    np.testing.assert_array_equal(a.centroids, b.centroids)
+    np.testing.assert_array_equal(a.codebook, b.codebook)
+    la = assign_lists(a, keys)
+    np.testing.assert_array_equal(la, assign_lists(b, keys))
+    resid = keys - a.centroids[la]
+    np.testing.assert_array_equal(encode_pq(a, resid), encode_pq(b, resid))
